@@ -1,0 +1,37 @@
+#![allow(dead_code)]
+//! Shared mini bench harness (the offline registry has no criterion):
+//! wall-clock the figure regenerators, print their tables, and emit a
+//! `name ... elapsed` summary line per bench for bench_output.txt.
+
+use std::time::Instant;
+
+pub fn bench<F: FnOnce() -> String>(name: &str, f: F) {
+    let t0 = Instant::now();
+    let output = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\n===== bench: {name} =====\n");
+    println!("{output}");
+    println!("\n[bench {name}: {dt:.2}s]");
+}
+
+/// Micro-benchmark: run `f` `iters` times, report ns/iter stats.
+pub fn micro<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let per = total / iters as f64;
+    let (value, unit) = if per >= 1.0 {
+        (per, "s")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else if per >= 1e-6 {
+        (per * 1e6, "us")
+    } else {
+        (per * 1e9, "ns")
+    };
+    println!("micro {name:<40} {value:>10.2} {unit}/iter  ({iters} iters)");
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig. 10: component ablation — full OctopInf vs w/o CORAL
+//! vs static batches vs server-only, with Distream/Jellyfish for context.
+//!
+//! `cargo bench --bench fig10_ablation`
+
+mod common;
+
+use octopinf::experiments;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    common::bench("fig10_ablation", || {
+        experiments::fig10_ablation(quick).to_markdown()
+    });
+}

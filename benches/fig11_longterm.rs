@@ -1,0 +1,17 @@
+//! Regenerates Fig. 11: long-term (13-hour) diurnal run — effective
+//! throughput tracks the circadian workload curve.
+//!
+//! `cargo bench --bench fig11_longterm` (QUICK=1 runs 2 h / 3 sources).
+
+mod common;
+
+use octopinf::experiments;
+
+fn main() {
+    // Default to the quick variant unless FULL=1: the full 13-hour
+    // 9-source simulation is a multi-minute run.
+    let quick = !std::env::var("FULL").is_ok();
+    common::bench("fig11_longterm_diurnal", || {
+        experiments::fig11_longterm(quick).to_markdown()
+    });
+}

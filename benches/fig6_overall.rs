@@ -1,0 +1,19 @@
+//! Regenerates Fig. 6 (a-d): overall comparison of OctopInf vs Distream,
+//! Jellyfish, Rim on the standard 9-camera / 5G / 30-min scenario, plus
+//! OctopInf's workload-tracking timeline.
+//!
+//! `cargo bench --bench fig6_overall` (QUICK=1 for a 5-min version).
+
+mod common;
+
+use octopinf::experiments;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    common::bench("fig6a-c_overall_comparison", || {
+        experiments::fig6_overall(quick).to_markdown()
+    });
+    common::bench("fig6d_workload_tracking", || {
+        experiments::fig6_timeline(quick).to_markdown()
+    });
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig. 7: per-source workload / bandwidth / throughput
+//! adaptivity under LTE traces (with outages).
+//!
+//! `cargo bench --bench fig7_adaptivity` (QUICK=1 for fewer sources).
+
+mod common;
+
+use octopinf::experiments;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    for (name, table) in experiments::fig7_adaptivity(quick) {
+        common::bench(&format!("fig7_{name}"), || table.to_markdown());
+    }
+}

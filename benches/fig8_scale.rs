@@ -1,0 +1,15 @@
+//! Regenerates Fig. 8: doubled per-device workload (two cameras per edge
+//! device) — effective-throughput ratios and hardware usage.
+//!
+//! `cargo bench --bench fig8_scale`
+
+mod common;
+
+use octopinf::experiments;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    common::bench("fig8_double_workload", || {
+        experiments::fig8_scale(quick).to_markdown()
+    });
+}

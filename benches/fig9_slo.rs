@@ -1,0 +1,13 @@
+//! Regenerates Fig. 9: effective throughput under stricter SLOs
+//! (-0 / -50 / -100 ms from the 200/300 ms defaults).
+//!
+//! `cargo bench --bench fig9_slo`
+
+mod common;
+
+use octopinf::experiments;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    common::bench("fig9_strict_slo", || experiments::fig9_slo(quick).to_markdown());
+}

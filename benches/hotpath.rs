@@ -1,0 +1,78 @@
+//! Hot-path micro-benchmarks for the §Perf pass: the operations that
+//! dominate the simulator and the serving loop.
+
+mod common;
+
+use octopinf::config::ExperimentConfig;
+use octopinf::coordinator::SchedulerKind;
+use octopinf::serving::DynamicBatcher;
+use octopinf::sim::{run, Scenario};
+use octopinf::util::stats::{burstiness, Percentiles};
+use octopinf::util::Rng;
+use octopinf::workload::{ArrivalWindow, ContentDynamics, ContentProfile};
+
+fn main() {
+    // End-to-end simulator throughput: events/s over a 2-minute scenario.
+    let mut cfg = ExperimentConfig::default();
+    cfg.duration_ms = 2.0 * 60_000.0;
+    let sc = Scenario::build(cfg);
+    common::micro("sim 2min standard octopinf", 3, || {
+        std::hint::black_box(run(&sc, SchedulerKind::OctopInf));
+    });
+
+    // Batcher push/poll cycle.
+    let mut b: DynamicBatcher<u64> = DynamicBatcher::new(8, 20.0);
+    let mut i = 0u64;
+    common::micro("batcher push+drain", 1_000_000, || {
+        i += 1;
+        if let Some(v) = b.push(i, i as f64) {
+            std::hint::black_box(v);
+        }
+    });
+
+    // Arrival-window burstiness estimation.
+    let mut w = ArrivalWindow::new(60_000.0);
+    let mut t = 0.0;
+    let mut rng = Rng::new(1);
+    for _ in 0..2000 {
+        t += rng.exp(0.05);
+        w.record(t);
+    }
+    common::micro("arrival window rate+cv", 20_000, || {
+        std::hint::black_box((w.rate_qps(), w.burstiness()));
+    });
+
+    // Content generator.
+    let mut cd = ContentDynamics::new(ContentProfile::traffic(), Rng::new(2));
+    let mut ft = 0.0;
+    common::micro("content objects_in_frame", 1_000_000, || {
+        ft += 66.7;
+        std::hint::black_box(cd.objects_in_frame(ft));
+    });
+
+    // Percentile extraction on a large latency set.
+    let mut rng2 = Rng::new(3);
+    let samples: Vec<f64> = (0..500_000).map(|_| rng2.range(0.0, 400.0)).collect();
+    common::micro("percentiles 500k samples", 5, || {
+        let mut p = Percentiles::new();
+        for &s in &samples {
+            p.push(s);
+        }
+        std::hint::black_box((p.p50(), p.p95(), p.p99()));
+    });
+
+    // Burstiness over a large arrival vector.
+    let arrivals: Vec<f64> = {
+        let mut t = 0.0;
+        let mut r = Rng::new(4);
+        (0..100_000)
+            .map(|_| {
+                t += r.exp(0.1);
+                t
+            })
+            .collect()
+    };
+    common::micro("burstiness 100k arrivals", 50, || {
+        std::hint::black_box(burstiness(&arrivals));
+    });
+}

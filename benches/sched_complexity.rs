@@ -1,0 +1,41 @@
+//! Scheduler-cost scaling bench (paper §V-1): CWD is O(D·M·BZ) and CORAL
+//! O(M·PT); wall-clock both as pipeline count grows to confirm near-linear
+//! scaling — the property that makes real-time rescheduling viable.
+
+mod common;
+
+use octopinf::cluster::Cluster;
+use octopinf::coordinator::coral::coral;
+use octopinf::coordinator::cwd::{cwd, CwdParams};
+use octopinf::coordinator::{SchedEnv, StageCfg};
+use octopinf::pipeline::standard_pipelines;
+use octopinf::profiles::ProfileStore;
+
+fn main() {
+    let cluster = Cluster::paper_testbed();
+    let profiles = ProfileStore::analytic();
+    for &n in &[1usize, 3, 9, 18, 36] {
+        let pipelines: Vec<_> = standard_pipelines(n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut p)| {
+                p.source_device = 1 + (i % 9);
+                p
+            })
+            .collect();
+        let env = SchedEnv::bootstrap(
+            &cluster,
+            &profiles,
+            &pipelines,
+            vec![25.0; cluster.devices.len()],
+        );
+        common::micro(&format!("cwd n_pipelines={n}"), 20, || {
+            std::hint::black_box(cwd(&env, &CwdParams::default()));
+        });
+        let cfgs: Vec<Vec<StageCfg>> =
+            cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+        common::micro(&format!("coral n_pipelines={n}"), 20, || {
+            std::hint::black_box(coral(&env, &cfgs));
+        });
+    }
+}

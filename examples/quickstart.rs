@@ -1,0 +1,60 @@
+//! Quickstart: build the paper's testbed, run CWD + CORAL once, and print
+//! the resulting deployment plan — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use octopinf::cluster::Cluster;
+use octopinf::coordinator::controller::make_scheduler;
+use octopinf::coordinator::{SchedEnv, SchedulerKind};
+use octopinf::pipeline::{surveillance_pipeline, traffic_pipeline};
+use octopinf::profiles::ProfileStore;
+use octopinf::util::table::Table;
+
+fn main() {
+    // 1. The cluster: 1 server (4 GPUs) + 9 Jetson-class edge devices.
+    let cluster = Cluster::paper_testbed();
+
+    // 2. Two EVA pipelines (Fig. 2), sourced on edge devices 1 and 2.
+    let pipelines = vec![traffic_pipeline(1, 15.0), surveillance_pipeline(2, 15.0)];
+
+    // 3. Profiles + a bandwidth snapshot form the scheduling environment.
+    let profiles = ProfileStore::analytic();
+    let env = SchedEnv::bootstrap(
+        &cluster,
+        &profiles,
+        &pipelines,
+        vec![25.0; cluster.devices.len()], // 25 Mbit/s uplinks
+    );
+
+    // 4. Run the OctopInf controller (CWD + CORAL).
+    let mut scheduler = make_scheduler(SchedulerKind::OctopInf, 42);
+    let plan = scheduler.plan(&env);
+
+    // 5. Inspect the plan.
+    let mut t = Table::new(vec![
+        "pipeline", "model", "device", "batch", "instances", "reserved_portions",
+    ]);
+    for a in &plan.assignments {
+        let dag = &pipelines[a.pipeline];
+        t.row(vec![
+            dag.name.clone(),
+            dag.models[a.model].spec.name.clone(),
+            cluster.device(a.cfg.device).name.clone(),
+            a.cfg.batch.to_string(),
+            a.cfg.instances.to_string(),
+            a.bindings
+                .iter()
+                .filter(|b| b.temporal.is_some())
+                .count()
+                .to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "\nsplits: traffic={} surveillance={}  unplaced={}  memory={:.0} MB",
+        plan.split_points(0, &pipelines[0]),
+        plan.split_points(1, &pipelines[1]),
+        plan.unplaced,
+        plan.total_memory_mb(&pipelines),
+    );
+}

@@ -1,0 +1,41 @@
+//! Domain example: SLO-sensitivity sweep (the Fig. 9 experiment as a
+//! library client) — tighten pipeline SLOs in 25 ms steps and watch each
+//! system's effective throughput degrade.
+//!
+//! Run: `cargo run --release --example slo_sweep [minutes]`
+
+use octopinf::config::ExperimentConfig;
+use octopinf::coordinator::SchedulerKind;
+use octopinf::sim::{run, Scenario};
+use octopinf::util::table::{fnum, Table};
+
+fn main() {
+    let minutes: f64 = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6.0);
+    let mut t = Table::new(vec![
+        "slo_reduction(ms)",
+        "octopinf",
+        "distream",
+        "jellyfish",
+        "rim",
+    ]);
+    for red in [0.0, 25.0, 50.0, 75.0, 100.0] {
+        let cfg = ExperimentConfig {
+            slo_reduction_ms: red,
+            duration_ms: minutes * 60_000.0,
+            ..Default::default()
+        };
+        let sc = Scenario::build(cfg);
+        let row: Vec<String> = SchedulerKind::all_main()
+            .iter()
+            .map(|&k| fnum(run(&sc, k).effective_throughput(), 1))
+            .collect();
+        let mut cells = vec![format!("-{red}")];
+        cells.extend(row);
+        t.row(cells);
+        eprintln!("  swept -{red} ms");
+    }
+    println!("{}", t.to_markdown());
+}

@@ -1,0 +1,105 @@
+"""AOT compile path: lower every (model, batch) pair to HLO *text*.
+
+HLO text — not ``lowered.compile()`` output and not ``.serialize()`` — is
+the interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the rust `xla` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (per artifact):
+    artifacts/<model>_b<batch>.hlo.txt
+plus a manifest in two flavors:
+    artifacts/manifest.json  — human/tooling
+    artifacts/manifest.tsv   — consumed by rust/src/runtime (no JSON parser
+                               in the offline rust dependency set)
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ALL_MODELS, build_model
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, batch: int) -> tuple:
+    """Lower one (model, batch); returns (spec, hlo_text)."""
+    spec, fwd = build_model(name)
+    arg = jax.ShapeDtypeStruct((batch, *spec.input_shape), jax.numpy.float32)
+    lowered = jax.jit(lambda x: (fwd(x),)).lower(arg)
+    return spec, to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(ALL_MODELS))
+    ap.add_argument("--batches", nargs="*", type=int,
+                    default=list(BATCH_SIZES))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    t0 = time.time()
+    for name in args.models:
+        for batch in args.batches:
+            spec, text = lower_model(name, batch)
+            fname = f"{name}_b{batch}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest.append(
+                dict(
+                    model=name,
+                    batch=batch,
+                    file=fname,
+                    input_shape=list(spec.input_shape),
+                    output_shape=list(spec.output_shape),
+                    flops_per_sample=spec.flops_per_sample,
+                    param_count=spec.param_count,
+                    sha256_16=digest,
+                )
+            )
+            print(f"  {fname}: {len(text) / 1024:.0f} KiB sha={digest}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV flavor for the rust loader: one row per artifact,
+    # shapes are 'x'-joined.
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("model\tbatch\tfile\tinput_shape\toutput_shape"
+                "\tflops_per_sample\tparam_count\n")
+        for m in manifest:
+            f.write(
+                "{model}\t{batch}\t{file}\t{ins}\t{outs}"
+                "\t{flops_per_sample}\t{param_count}\n".format(
+                    ins="x".join(map(str, m["input_shape"])),
+                    outs="x".join(map(str, m["output_shape"])),
+                    **m,
+                )
+            )
+    print(f"wrote {len(manifest)} artifacts in {time.time() - t0:.1f}s "
+          f"-> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels for OctopInf (interpret=True; see DESIGN.md)."""
+from .matmul import fused_matmul
+from .postprocess import decode_detections, head_meta
+__all__ = ["fused_matmul", "decode_detections", "head_meta"]

@@ -1,0 +1,147 @@
+"""Tiled GEMM Pallas kernel with fused bias + activation.
+
+This is the compute hot-spot of every model in the repo: convolutions are
+lowered to im2col + this GEMM, and the FC/embedding heads call it directly.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's models run under
+TensorRT on GPUs; instead of porting CUDA threadblock tiling we tile for a
+VMEM-resident accumulator. The grid is (M/bm, N/bn, K/bk) with the K axis
+innermost ("arbitrary" semantics): each (i, j) output tile stays resident in
+VMEM across the K loop while (bm, bk) LHS and (bk, bn) RHS panels stream in
+from HBM — exactly the schedule BlockSpec expresses below. Block defaults
+of 128 match the MXU's 128x128 systolic tile; f32 accumulation.
+
+Bias-add and activation are fused into the last K step so the output tile is
+written to HBM exactly once, already activated.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation codes shared with ref.py and model.py.
+ACT_NONE = "none"
+ACT_RELU = "relu"
+ACT_SIGMOID = "sigmoid"
+_ACTS = (ACT_NONE, ACT_RELU, ACT_SIGMOID)
+
+
+def _apply_act(x, act):
+    if act == ACT_RELU:
+        return jnp.maximum(x, 0.0)
+    if act == ACT_SIGMOID:
+        return jax.nn.sigmoid(x)
+    return x
+
+
+def _matmul_kernel(a_ref, b_ref, bias_ref, o_ref, *, act, k_steps):
+    """One (bm, bn) output tile; K axis is the innermost grid dim."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped partial product, f32 accumulation.
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = o_ref[...] + bias_ref[...]
+        o_ref[...] = _apply_act(acc, act)
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "block_m", "block_n", "block_k")
+)
+def fused_matmul(
+    a,
+    b,
+    bias,
+    act: str = ACT_NONE,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+):
+    """act(a @ b + bias) with a (M,K), b (K,N), bias (N,).
+
+    Shapes are padded to block multiples outside the kernel and the result is
+    sliced back, so arbitrary (M, N, K) are accepted.
+    """
+    if act not in _ACTS:
+        raise ValueError(f"unknown activation {act!r}; expected one of {_ACTS}")
+    if a.ndim != 2 or b.ndim != 2 or bias.ndim != 1:
+        raise ValueError("fused_matmul expects a:(M,K) b:(K,N) bias:(N,)")
+    if a.shape[1] != b.shape[0] or b.shape[1] != bias.shape[0]:
+        raise ValueError(
+            f"shape mismatch: a{a.shape} @ b{b.shape} + bias{bias.shape}"
+        )
+
+    m, k = a.shape
+    _, n = b.shape
+    a32 = _pad_to(_pad_to(a.astype(jnp.float32), 0, block_m), 1, block_k)
+    b32 = _pad_to(_pad_to(b.astype(jnp.float32), 0, block_k), 1, block_n)
+    bias32 = _pad_to(bias.astype(jnp.float32), 0, block_n)
+
+    mp, kp = a32.shape
+    _, np_ = b32.shape
+    k_steps = kp // block_k
+    grid = (mp // block_m, np_ // block_n, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            # LHS panel: new (bm, bk) block per (i, k); j is irrelevant.
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            # RHS panel: new (bk, bn) block per (k, j).
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            # Bias row for the j-th output column block.
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT executable; Mosaic only on real TPU
+    )(a32, b32, bias32)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM residency of one grid step (f32)."""
+    lhs = block_m * block_k
+    rhs = block_k * block_n
+    acc = block_m * block_n
+    bias = block_n
+    return 4 * (lhs + rhs + acc + bias)
+
+
+def mxu_utilization(m: int, n: int, k: int, block_m: int, block_n: int,
+                    block_k: int, mxu: int = 128) -> float:
+    """Fraction of MXU issue slots doing useful work for a padded GEMM.
+
+    Padding waste is the only structural inefficiency of this schedule: every
+    128x128x128 MXU pass over padded regions is wasted. Used by DESIGN.md
+    §Perf to pick block shapes (interpret-mode wallclock is NOT a TPU proxy).
+    """
+    def rup(x, b):
+        return ((x + b - 1) // b) * b
+
+    useful = m * n * k
+    issued = rup(m, max(block_m, mxu)) * rup(n, max(block_n, mxu)) * rup(
+        k, max(block_k, mxu)
+    )
+    return useful / issued if issued else 0.0

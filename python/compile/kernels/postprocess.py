@@ -1,0 +1,91 @@
+"""Fused detector-head decode as a Pallas kernel.
+
+The raw detection head emits (N, B, 5 + C) logits per image: B = G*G*A
+candidate boxes, each row [tx, ty, tw, th, obj, cls...]. Decoding applies
+
+    x = (sigmoid(tx) + grid_x) * stride        y likewise
+    w = exp(clip(tw)) * anchor_w               h likewise
+    obj = sigmoid(obj)                         cls = sigmoid(cls)
+
+The paper's pipelines (Fig. 2) run this on every frame between the detector
+and its downstream classifiers, so it sits on the hot path; fusing the whole
+decode into one pass keeps each (rows, 5+C) tile resident in VMEM instead of
+materializing five intermediate HBM tensors.
+
+Grid/anchor metadata is passed as a per-row (B, 4) table
+[grid_x, grid_y, anchor_w, anchor_h] so the kernel itself is shape-generic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# exp() clip bound — keeps wh finite for adversarial logits (same in ref.py).
+WH_CLIP = 8.0
+
+
+def _decode_kernel(head_ref, meta_ref, o_ref, *, stride):
+    rows = head_ref[...]  # (bb, 5 + C)
+    meta = meta_ref[...]  # (bb, 4)
+    xy = jax.nn.sigmoid(rows[:, 0:2])
+    x = (xy[:, 0] + meta[:, 0]) * stride
+    y = (xy[:, 1] + meta[:, 1]) * stride
+    wh = jnp.exp(jnp.clip(rows[:, 2:4], -WH_CLIP, WH_CLIP))
+    w = wh[:, 0] * meta[:, 2]
+    h = wh[:, 1] * meta[:, 3]
+    scores = jax.nn.sigmoid(rows[:, 4:])
+    o_ref[...] = jnp.concatenate(
+        [x[:, None], y[:, None], w[:, None], h[:, None], scores], axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "block_rows"))
+def decode_detections(head, meta, stride: int = 16, block_rows: int = 128):
+    """Decode raw head logits (N, B, 5+C) into boxes+scores (N, B, 5+C).
+
+    `meta` is (B, 4): [grid_x, grid_y, anchor_w, anchor_h] per candidate.
+    """
+    if head.ndim != 3:
+        raise ValueError(f"head must be (N, B, 5+C), got {head.shape}")
+    if meta.shape != (head.shape[1], 4):
+        raise ValueError(f"meta must be ({head.shape[1]}, 4), got {meta.shape}")
+
+    n, b, ch = head.shape
+    flat = head.astype(jnp.float32).reshape(n * b, ch)
+    meta_full = jnp.tile(meta.astype(jnp.float32), (n, 1))
+
+    rows = n * b
+    pad = (-rows) % block_rows
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        meta_full = jnp.pad(meta_full, ((0, pad), (0, 0)))
+    padded_rows = rows + pad
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, stride=float(stride)),
+        grid=(padded_rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, ch), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 4), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, ch), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, ch), jnp.float32),
+        interpret=True,  # CPU-PJRT executable
+    )(flat, meta_full)
+    return out[:rows].reshape(n, b, ch)
+
+
+def head_meta(grid: int, anchors) -> jnp.ndarray:
+    """Build the (G*G*A, 4) [gx, gy, aw, ah] table for a square grid."""
+    a = jnp.asarray(anchors, dtype=jnp.float32)  # (A, 2)
+    gy, gx = jnp.meshgrid(
+        jnp.arange(grid, dtype=jnp.float32),
+        jnp.arange(grid, dtype=jnp.float32),
+        indexing="ij",
+    )
+    gxy = jnp.stack([gx.ravel(), gy.ravel()], axis=1)  # (G*G, 2)
+    gxy = jnp.repeat(gxy, a.shape[0], axis=0)  # (G*G*A, 2)
+    awh = jnp.tile(a, (grid * grid, 1))  # (G*G*A, 2)
+    return jnp.concatenate([gxy, awh], axis=1)

@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis in python/tests/). They intentionally share *no* code with the
+kernels beyond the activation names and the WH clip constant.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .postprocess import WH_CLIP
+
+
+def ref_fused_matmul(a, b, bias, act: str = "none"):
+    """act(a @ b + bias), plain jnp."""
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    out = out + bias.astype(jnp.float32)[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out
+
+
+def ref_decode_detections(head, meta, stride: int = 16):
+    """Detector-head decode, plain jnp; head (N,B,5+C), meta (B,4)."""
+    head = head.astype(jnp.float32)
+    meta = meta.astype(jnp.float32)
+    xy = jax.nn.sigmoid(head[..., 0:2])
+    x = (xy[..., 0] + meta[None, :, 0]) * float(stride)
+    y = (xy[..., 1] + meta[None, :, 1]) * float(stride)
+    wh = jnp.exp(jnp.clip(head[..., 2:4], -WH_CLIP, WH_CLIP))
+    w = wh[..., 0] * meta[None, :, 2]
+    h = wh[..., 1] * meta[None, :, 3]
+    scores = jax.nn.sigmoid(head[..., 4:])
+    return jnp.concatenate(
+        [x[..., None], y[..., None], w[..., None], h[..., None], scores],
+        axis=-1,
+    )

@@ -1,0 +1,249 @@
+"""Layer-2 JAX model definitions for OctopInf's EVA pipelines.
+
+Three model families stand in for the paper's pipeline stages (Fig. 2):
+
+- ``TinyDet`` — a single-scale YOLO-style object detector, in three input
+  resolutions (96/128/160). The three variants play the role of Jellyfish's
+  "multiple DNN versions" as well as the paper's Object Det stage.
+- ``TinyCls`` — a small CNN crop classifier (Car-Type / Gender-Age stage).
+- ``CropEmbed`` — a small CNN embedder (Plate-Recog / Face-Recog / ReID
+  stage); emits an L2-normalized embedding.
+
+Every convolution is lowered to im2col + the L1 Pallas fused GEMM
+(`kernels.fused_matmul`), and the detector head decode runs through the L1
+`kernels.decode_detections` Pallas kernel — so the entire FLOP budget of
+every artifact flows through Layer 1.
+
+Weights are deterministic (seeded He init) and baked into the lowered HLO as
+constants: each artifact is a self-contained ``f(images) -> outputs``
+computation, mirroring a compiled TensorRT engine per (model, batch).
+"""
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_detections, fused_matmul, head_meta
+
+# Anchor boxes (pixels) shared by all detector variants, YOLO-ish.
+ANCHORS = ((12.0, 16.0), (28.0, 36.0), (60.0, 80.0))
+NUM_ANCHORS = len(ANCHORS)
+DET_CLASSES = 4  # person / car / bike / other — the paper's target mix
+CLS_CLASSES = 8  # car types or demographic buckets
+EMBED_DIM = 64
+CROP_SIZE = 32
+
+
+# --------------------------------------------------------------------------
+# conv = im2col + Pallas GEMM
+# --------------------------------------------------------------------------
+
+def conv2d(x, w, b, stride: int = 1, act: str = "relu"):
+    """NHWC conv via im2col + the L1 fused GEMM kernel.
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout); b: (Cout,).
+    SAME padding. Returns (N, OH, OW, Cout).
+    """
+    n, h, wid, cin = x.shape
+    kh, kw, _, cout = w.shape
+    # Patches arrive as (N, OH, OW, Cin*KH*KW) with channel-major layout;
+    # reorder the filter to match.
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, oh, ow, patch_dim = patches.shape
+    a = patches.reshape(n * oh * ow, patch_dim)
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(patch_dim, cout)
+    out = fused_matmul(a, wmat, b, act=act)
+    return out.reshape(n, oh, ow, cout)
+
+
+def linear(x, w, b, act: str = "none"):
+    """FC layer on the Pallas GEMM; x (N, D), w (D, O), b (O,)."""
+    return fused_matmul(x, w, b, act=act)
+
+
+# --------------------------------------------------------------------------
+# deterministic parameter construction
+# --------------------------------------------------------------------------
+
+def _he(key, shape):
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    return jax.random.normal(key, shape, dtype=jnp.float32) * jnp.sqrt(
+        2.0 / fan_in
+    )
+
+
+def _conv_params(key, kh, kw, cin, cout):
+    wkey, _ = jax.random.split(key)
+    return _he(wkey, (kh, kw, cin, cout)), jnp.zeros((cout,), jnp.float32)
+
+
+def _linear_params(key, din, dout):
+    wkey, _ = jax.random.split(key)
+    return _he(wkey, (din, dout)), jnp.zeros((dout,), jnp.float32)
+
+
+def param_bytes(params) -> int:
+    return sum(4 * p.size for p in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------
+# model specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one AOT-compilable model variant."""
+
+    name: str
+    input_shape: tuple  # per-sample, NHWC without N
+    output_shape: tuple  # per-sample
+    flops_per_sample: int
+    param_count: int
+
+
+_DET_CHANNELS: Sequence[int] = (16, 32, 64, 64)
+
+
+def _det_params(key):
+    keys = jax.random.split(key, len(_DET_CHANNELS) + 1)
+    layers = []
+    cin = 3
+    for i, cout in enumerate(_DET_CHANNELS):
+        layers.append(_conv_params(keys[i], 3, 3, cin, cout))
+        cin = cout
+    head = _conv_params(keys[-1], 1, 1, cin, NUM_ANCHORS * (5 + DET_CLASSES))
+    return layers, head
+
+
+def detector_fwd(images, layers, head, resolution: int):
+    """TinyDet forward: conv stack (stride 2 each) + decoded head."""
+    x = images
+    for w, b in layers:
+        x = conv2d(x, w, b, stride=2, act="relu")
+    hw, hb = head
+    raw = conv2d(x, hw, hb, stride=1, act="none")  # (N, G, G, A*(5+C))
+    n, g, _, _ = raw.shape
+    raw = raw.reshape(n, g * g * NUM_ANCHORS, 5 + DET_CLASSES)
+    stride = resolution // g
+    meta = head_meta(g, ANCHORS)
+    return decode_detections(raw, meta, stride=stride)
+
+
+def _cls_params(key):
+    k = jax.random.split(key, 3)
+    c1 = _conv_params(k[0], 3, 3, 3, 16)
+    c2 = _conv_params(k[1], 3, 3, 16, 32)
+    fc = _linear_params(k[2], 32, CLS_CLASSES)
+    return c1, c2, fc
+
+
+def classifier_fwd(crops, params):
+    """TinyCls forward: 2 conv + GAP + FC logits; crops (N,32,32,3)."""
+    (w1, b1), (w2, b2), (fw, fb) = params
+    x = conv2d(crops, w1, b1, stride=2, act="relu")
+    x = conv2d(x, w2, b2, stride=2, act="relu")
+    x = jnp.mean(x, axis=(1, 2))  # GAP -> (N, 32)
+    return linear(x, fw, fb, act="none")
+
+
+def _embed_params(key):
+    k = jax.random.split(key, 3)
+    c1 = _conv_params(k[0], 3, 3, 3, 16)
+    c2 = _conv_params(k[1], 3, 3, 16, 32)
+    fc = _linear_params(k[2], 32, EMBED_DIM)
+    return c1, c2, fc
+
+
+def embedder_fwd(crops, params):
+    """CropEmbed forward: 2 conv + GAP + FC + L2 norm; crops (N,32,32,3)."""
+    (w1, b1), (w2, b2), (fw, fb) = params
+    x = conv2d(crops, w1, b1, stride=2, act="relu")
+    x = conv2d(x, w2, b2, stride=2, act="relu")
+    x = jnp.mean(x, axis=(1, 2))
+    e = linear(x, fw, fb, act="none")
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-6)
+
+
+# --------------------------------------------------------------------------
+# registry: name -> (spec, batch-closed fwd fn)
+# --------------------------------------------------------------------------
+
+def _conv_flops(h, w, kh, kw, cin, cout, stride):
+    oh, ow = (h + stride - 1) // stride, (w + stride - 1) // stride
+    return 2 * oh * ow * kh * kw * cin * cout
+
+
+def _det_flops(res):
+    f, s, cin = 0, res, 3
+    for cout in _DET_CHANNELS:
+        f += _conv_flops(s, s, 3, 3, cin, cout, 2)
+        s, cin = (s + 1) // 2, cout
+    f += _conv_flops(s, s, 1, 1, cin, NUM_ANCHORS * (5 + DET_CLASSES), 1)
+    return f
+
+
+def _crop_flops(dout):
+    f = _conv_flops(CROP_SIZE, CROP_SIZE, 3, 3, 3, 16, 2)
+    f += _conv_flops(16, 16, 3, 3, 16, 32, 2)
+    f += 2 * 32 * dout
+    return f
+
+
+DET_RESOLUTIONS = {"det_s": 96, "det_m": 128, "det_l": 160}
+
+_SEED = 20250710  # deterministic weights across AOT runs
+
+
+def build_model(name: str):
+    """Return (ModelSpec, fwd) where fwd(images) closes over baked weights."""
+    key = jax.random.PRNGKey(_SEED)
+    if name in DET_RESOLUTIONS:
+        res = DET_RESOLUTIONS[name]
+        layers, head = _det_params(jax.random.fold_in(key, res))
+        grid = res // 16
+        nboxes = grid * grid * NUM_ANCHORS
+        spec = ModelSpec(
+            name=name,
+            input_shape=(res, res, 3),
+            output_shape=(nboxes, 5 + DET_CLASSES),
+            flops_per_sample=_det_flops(res),
+            param_count=param_bytes((layers, head)) // 4,
+        )
+        fwd = functools.partial(detector_fwd, layers=layers, head=head,
+                                resolution=res)
+        return spec, fwd
+    if name == "classifier":
+        params = _cls_params(jax.random.fold_in(key, 1001))
+        spec = ModelSpec(
+            name=name,
+            input_shape=(CROP_SIZE, CROP_SIZE, 3),
+            output_shape=(CLS_CLASSES,),
+            flops_per_sample=_crop_flops(CLS_CLASSES),
+            param_count=param_bytes(params) // 4,
+        )
+        return spec, functools.partial(classifier_fwd, params=params)
+    if name == "embedder":
+        params = _embed_params(jax.random.fold_in(key, 1002))
+        spec = ModelSpec(
+            name=name,
+            input_shape=(CROP_SIZE, CROP_SIZE, 3),
+            output_shape=(EMBED_DIM,),
+            flops_per_sample=_crop_flops(EMBED_DIM),
+            param_count=param_bytes(params) // 4,
+        )
+        return spec, functools.partial(embedder_fwd, params=params)
+    raise KeyError(f"unknown model {name!r}")
+
+
+ALL_MODELS = tuple(DET_RESOLUTIONS) + ("classifier", "embedder")

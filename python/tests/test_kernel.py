@@ -1,0 +1,167 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+hypothesis sweeps shapes/activations; fixed cases pin the block-boundary
+edge cases (exact multiples, off-by-one, tiny and wide shapes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    fused_matmul,
+    mxu_utilization,
+    vmem_bytes,
+)
+from compile.kernels.postprocess import decode_detections, head_meta
+from compile.kernels.ref import ref_decode_detections, ref_fused_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 150),
+    n=st.integers(1, 180),
+    act=st.sampled_from(["none", "relu", "sigmoid"]),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, act):
+    a, b = _rand(m * 7 + 1, m, k), _rand(k * 5 + 2, k, n)
+    bias = _rand(n + 3, n)
+    got = fused_matmul(a, b, bias, act=act)
+    want = ref_fused_matmul(a, b, bias, act=act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),   # exact block
+    (256, 128, 128),   # multiple blocks on M
+    (129, 127, 130),   # off-by-one around the block edge
+    (1, 1, 1),         # degenerate
+    (1, 300, 1),       # long K reduction
+    (300, 1, 300),     # rank-1 outer product
+])
+def test_matmul_block_boundaries(m, k, n):
+    a, b, bias = _rand(1, m, k), _rand(2, k, n), _rand(3, n)
+    np.testing.assert_allclose(
+        fused_matmul(a, b, bias),
+        ref_fused_matmul(a, b, bias),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 128, 128), (32, 128, 64)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the chosen tiling."""
+    a, b, bias = _rand(4, 100, 90), _rand(5, 90, 110), _rand(6, 110)
+    base = fused_matmul(a, b, bias, act="relu")
+    tiled = fused_matmul(a, b, bias, act="relu", block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(base, tiled, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_relu_clamps_negatives():
+    a = -jnp.ones((8, 8), jnp.float32)
+    b = jnp.ones((8, 8), jnp.float32)
+    bias = jnp.zeros((8,), jnp.float32)
+    out = fused_matmul(a, b, bias, act="relu")
+    assert float(jnp.min(out)) == 0.0
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fused_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros((5,)))
+    with pytest.raises(ValueError):
+        fused_matmul(jnp.zeros((2, 3)), jnp.zeros((3, 5)), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        fused_matmul(
+            jnp.zeros((2, 3)), jnp.zeros((3, 5)), jnp.zeros((5,)), act="gelu"
+        )
+
+
+def test_vmem_estimate_sane():
+    # 128^3 f32 tiling: 3 tiles of 64 KiB + bias.
+    assert vmem_bytes(128, 128, 128) == 4 * (3 * 128 * 128 + 128)
+
+
+def test_mxu_utilization_prefers_fitting_blocks():
+    # A 128-aligned GEMM wastes nothing; padding to 256 wastes issue slots.
+    full = mxu_utilization(128, 128, 128, 128, 128, 128)
+    padded = mxu_utilization(130, 130, 130, 128, 128, 128)
+    assert full == 1.0
+    assert padded < 0.2  # 130^3 useful of 256^3 issued
+
+
+# ---------------------------------------------------------------------------
+# decode_detections
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    grid=st.sampled_from([4, 6, 8, 10]),
+    classes=st.integers(1, 6),
+)
+def test_decode_matches_ref(n, grid, classes):
+    anchors = [[10, 14], [23, 27], [37, 58]]
+    meta = head_meta(grid, anchors)
+    boxes = grid * grid * len(anchors)
+    head = _rand(n * 31 + grid, n, boxes, 5 + classes) * 3.0
+    np.testing.assert_allclose(
+        decode_detections(head, meta, stride=16),
+        ref_decode_detections(head, meta, stride=16),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_decode_extreme_logits_stay_finite():
+    meta = head_meta(4, [[10, 14]])
+    head = jnp.full((2, 16, 9), 1e4, jnp.float32)
+    out = decode_detections(head, meta)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # Scores saturate to 1, not beyond.
+    assert float(jnp.max(out[..., 4:])) <= 1.0 + 1e-6
+
+
+def test_decode_centers_inside_image():
+    grid, stride = 6, 16
+    meta = head_meta(grid, [[12, 16], [28, 36], [60, 80]])
+    head = _rand(77, 3, grid * grid * 3, 9) * 5.0
+    out = decode_detections(head, meta, stride=stride)
+    assert float(jnp.min(out[..., 0])) >= 0.0
+    assert float(jnp.max(out[..., 0])) <= grid * stride
+    assert float(jnp.min(out[..., 1])) >= 0.0
+    assert float(jnp.max(out[..., 1])) <= grid * stride
+
+
+def test_head_meta_layout():
+    meta = head_meta(2, [[3, 4], [5, 6]])
+    assert meta.shape == (8, 4)
+    # First two rows: cell (0,0) with both anchors.
+    np.testing.assert_allclose(meta[0], [0, 0, 3, 4])
+    np.testing.assert_allclose(meta[1], [0, 0, 5, 6])
+    # Anchor table tiles across cells.
+    np.testing.assert_allclose(meta[2][2:], [3, 4])
+
+
+def test_decode_rejects_bad_meta():
+    meta = head_meta(4, [[10, 14]])
+    with pytest.raises(ValueError):
+        decode_detections(jnp.zeros((1, 99, 9)), meta)
+    with pytest.raises(ValueError):
+        decode_detections(jnp.zeros((99, 9)), meta)

@@ -1,0 +1,94 @@
+"""L2 model shape/behaviour tests: every registry entry builds, runs at all
+batch sizes, and produces deterministic, finite outputs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ALL_MODELS,
+    CLS_CLASSES,
+    DET_CLASSES,
+    DET_RESOLUTIONS,
+    EMBED_DIM,
+    NUM_ANCHORS,
+    build_model,
+    conv2d,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_model_builds_and_runs(name):
+    spec, fwd = build_model(name)
+    x = jnp.zeros((2, *spec.input_shape), jnp.float32)
+    out = jax.jit(fwd)(x)
+    assert out.shape == (2, *spec.output_shape)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("name,res", DET_RESOLUTIONS.items())
+def test_detector_box_count(name, res):
+    spec, _ = build_model(name)
+    grid = res // 16
+    assert spec.output_shape == (grid * grid * NUM_ANCHORS, 5 + DET_CLASSES)
+
+
+def test_classifier_and_embedder_heads():
+    spec_c, _ = build_model("classifier")
+    spec_e, _ = build_model("embedder")
+    assert spec_c.output_shape == (CLS_CLASSES,)
+    assert spec_e.output_shape == (EMBED_DIM,)
+
+
+def test_embedder_is_l2_normalized():
+    _, fwd = build_model("embedder")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 32, 3))
+    norms = jnp.linalg.norm(jax.jit(fwd)(x), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-3)
+
+
+def test_weights_are_deterministic():
+    """Same registry name -> identical baked weights across builds."""
+    _, fwd1 = build_model("det_s")
+    _, fwd2 = build_model("det_s")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 96, 96, 3))
+    np.testing.assert_array_equal(jax.jit(fwd1)(x), jax.jit(fwd2)(x))
+
+
+def test_variants_differ():
+    _, fwd_c = build_model("classifier")
+    _, fwd_e = build_model("embedder")
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 32, 3))
+    assert jax.jit(fwd_c)(x).shape != jax.jit(fwd_e)(x).shape
+
+
+def test_conv2d_same_padding_shape():
+    x = jnp.zeros((1, 17, 23, 3))
+    w = jnp.zeros((3, 3, 3, 8))
+    b = jnp.zeros((8,))
+    assert conv2d(x, w, b, stride=2).shape == (1, 9, 12, 8)
+    assert conv2d(x, w, b, stride=1).shape == (1, 17, 23, 8)
+
+
+def test_conv2d_matches_lax_conv():
+    """im2col + Pallas GEMM must equal XLA's native convolution."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 12, 12, 3))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 3, 5))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (5,))
+    got = conv2d(x, w, b, stride=2, act="none")
+    want = (
+        jax.lax.conv_general_dilated(
+            x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        + b
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        build_model("resnet152")

@@ -1,0 +1,132 @@
+//! Device and GPU models.
+
+/// Hardware class of a host (paper testbed §IV-A1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// Edge server: 4× RTX 3090 class GPUs.
+    Server,
+    /// NVIDIA Jetson AGX Xavier.
+    JetsonAgx,
+    /// NVIDIA Jetson Xavier NX.
+    XavierNx,
+    /// NVIDIA Jetson Orin Nano.
+    OrinNano,
+}
+
+impl DeviceClass {
+    /// Latency multiplier relative to a server GPU (calibrated against
+    /// published MLPerf-style ratios for these parts; the schedulers only
+    /// need the *ordering and rough magnitude* to reproduce the paper).
+    pub fn compute_scale(&self) -> f64 {
+        match self {
+            DeviceClass::Server => 1.0,
+            DeviceClass::JetsonAgx => 2.5,
+            DeviceClass::XavierNx => 4.0,
+            DeviceClass::OrinNano => 5.0,
+        }
+    }
+
+    /// GPU memory per device (MB) available to inference.
+    pub fn gpu_mem_mb(&self) -> f64 {
+        match self {
+            DeviceClass::Server => 24_000.0, // per 3090
+            DeviceClass::JetsonAgx => 16_000.0,
+            DeviceClass::XavierNx => 6_000.0,
+            DeviceClass::OrinNano => 4_000.0,
+        }
+    }
+
+    /// Number of GPUs on the device.
+    pub fn gpu_count(&self) -> usize {
+        match self {
+            DeviceClass::Server => 4,
+            _ => 1,
+        }
+    }
+
+    /// Concurrent inference streams the hardware sustains without
+    /// co-location interference (CORAL's spatial capacity).
+    pub fn streams_per_gpu(&self) -> usize {
+        match self {
+            DeviceClass::Server => 4,
+            DeviceClass::JetsonAgx => 3,
+            DeviceClass::XavierNx => 2,
+            DeviceClass::OrinNano => 2,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeviceClass::Server => "server",
+            DeviceClass::JetsonAgx => "agx",
+            DeviceClass::XavierNx => "xavier_nx",
+            DeviceClass::OrinNano => "orin_nano",
+        }
+    }
+}
+
+/// One physical GPU.
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub mem_mb: f64,
+    /// Max aggregate utilization before co-location interference (Eq. 5).
+    pub util_cap: f64,
+    pub streams: usize,
+}
+
+/// One host in the cluster.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: usize,
+    pub name: String,
+    pub class: DeviceClass,
+    pub gpus: Vec<Gpu>,
+}
+
+impl Device {
+    pub fn new(id: usize, name: &str, class: DeviceClass) -> Device {
+        let gpus = (0..class.gpu_count())
+            .map(|_| Gpu {
+                mem_mb: class.gpu_mem_mb(),
+                util_cap: 1.0,
+                streams: class.streams_per_gpu(),
+            })
+            .collect();
+        Device { id, name: name.to_string(), class, gpus }
+    }
+
+    pub fn is_server(&self) -> bool {
+        self.class == DeviceClass::Server
+    }
+
+    pub fn total_mem_mb(&self) -> f64 {
+        self.gpus.iter().map(|g| g.mem_mb).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_has_four_gpus() {
+        let d = Device::new(0, "server", DeviceClass::Server);
+        assert_eq!(d.gpus.len(), 4);
+        assert!(d.is_server());
+        assert!((d.total_mem_mb() - 96_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn edge_ordering_slower_than_server() {
+        assert!(DeviceClass::Server.compute_scale() < DeviceClass::JetsonAgx.compute_scale());
+        assert!(DeviceClass::JetsonAgx.compute_scale() < DeviceClass::XavierNx.compute_scale());
+        assert!(DeviceClass::XavierNx.compute_scale() < DeviceClass::OrinNano.compute_scale());
+    }
+
+    #[test]
+    fn orin_has_fewest_streams() {
+        let d = Device::new(3, "orin", DeviceClass::OrinNano);
+        assert_eq!(d.gpus.len(), 1);
+        assert!(d.gpus[0].streams <= DeviceClass::Server.streams_per_gpu());
+    }
+}

@@ -1,0 +1,12 @@
+//! Edge-cluster substrate: heterogeneous devices and GPUs (paper §IV-A1).
+//!
+//! The paper's testbed (4×RTX-3090 server + 1 AGX + 5 Xavier NX + 3 Orin
+//! Nano) is modelled as device classes with a compute scale (latency
+//! multiplier vs. the server GPU), GPU memory, and a utilization capacity —
+//! exactly the quantities the schedulers consume (Eq. 4/5).
+
+mod device;
+mod topology;
+
+pub use device::{Device, DeviceClass, Gpu};
+pub use topology::Cluster;

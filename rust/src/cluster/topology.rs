@@ -1,0 +1,112 @@
+//! Cluster topology: the server + edge devices, with lookup helpers.
+
+use super::device::{Device, DeviceClass};
+
+/// The whole deployment. Device 0 is always the server (paper convention:
+/// the Controller runs there).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub devices: Vec<Device>,
+}
+
+impl Cluster {
+    /// The paper's testbed: 1 server (4×3090) + 1 AGX + 5 Xavier NX +
+    /// 3 Orin Nano (§IV-A1). Devices 1..=9 host one camera each.
+    pub fn paper_testbed() -> Cluster {
+        let mut devices = vec![Device::new(0, "server", DeviceClass::Server)];
+        devices.push(Device::new(1, "agx0", DeviceClass::JetsonAgx));
+        for i in 0..5 {
+            devices.push(Device::new(
+                2 + i,
+                &format!("nx{i}"),
+                DeviceClass::XavierNx,
+            ));
+        }
+        for i in 0..3 {
+            devices.push(Device::new(
+                7 + i,
+                &format!("orin{i}"),
+                DeviceClass::OrinNano,
+            ));
+        }
+        Cluster { devices }
+    }
+
+    /// Small cluster for unit tests / quickstart: server + 2 edge devices.
+    pub fn small() -> Cluster {
+        Cluster {
+            devices: vec![
+                Device::new(0, "server", DeviceClass::Server),
+                Device::new(1, "nx0", DeviceClass::XavierNx),
+                Device::new(2, "orin0", DeviceClass::OrinNano),
+            ],
+        }
+    }
+
+    pub fn server(&self) -> &Device {
+        &self.devices[0]
+    }
+
+    pub fn edge_devices(&self) -> impl Iterator<Item = &Device> {
+        self.devices.iter().filter(|d| !d.is_server())
+    }
+
+    pub fn n_edge(&self) -> usize {
+        self.edge_devices().count()
+    }
+
+    /// Total GPU count across the cluster.
+    pub fn n_gpus(&self) -> usize {
+        self.devices.iter().map(|d| d.gpus.len()).sum()
+    }
+
+    /// Map a data-source device id (1-based edge hosts) safely.
+    pub fn device(&self, id: usize) -> &Device {
+        &self.devices[id]
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices.is_empty() {
+            return Err("empty cluster".into());
+        }
+        if !self.devices[0].is_server() {
+            return Err("device 0 must be the server".into());
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            if d.id != i {
+                return Err(format!("device {i} has mismatched id {}", d.id));
+            }
+            if d.gpus.is_empty() {
+                return Err(format!("device {i} has no GPU"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let c = Cluster::paper_testbed();
+        assert_eq!(c.devices.len(), 10);
+        assert_eq!(c.n_edge(), 9);
+        assert_eq!(c.n_gpus(), 4 + 9);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn device_zero_is_server() {
+        assert!(Cluster::paper_testbed().server().is_server());
+        assert!(Cluster::small().server().is_server());
+    }
+
+    #[test]
+    fn validate_rejects_id_mismatch() {
+        let mut c = Cluster::small();
+        c.devices[1].id = 9;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Experiment configuration: a small INI/TOML-subset format (`key = value`
+//! with `[section]` headers — no serde in the offline registry) plus
+//! validated experiment presets for every figure.
+
+use std::collections::HashMap;
+
+use crate::coordinator::SchedulerKind;
+use crate::network::TraceKind;
+
+/// Raw parsed config: section -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse the INI-like text. Lines: `[section]`, `key = value`, `#`/`;`
+    /// comments, blank lines.
+    pub fn parse(text: &str) -> Result<RawConfig, String> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::from("general");
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unclosed section", ln + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            "true" | "1" | "yes" => Some(true),
+            "false" | "0" | "no" => Some(false),
+            _ => None,
+        }
+    }
+}
+
+/// Fully-resolved experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Number of edge devices with cameras (paper: 9).
+    pub n_sources: usize,
+    /// Cameras per device (Fig. 8 doubles this to 2).
+    pub cameras_per_device: usize,
+    /// Trace kind for edge uplinks.
+    pub trace: TraceKind,
+    /// Simulated duration, ms (paper main runs: 30 min).
+    pub duration_ms: f64,
+    /// SLO tightening (subtracted from each pipeline's SLO; Fig. 9).
+    pub slo_reduction_ms: f64,
+    /// Scheduler under test.
+    pub scheduler: SchedulerKind,
+    /// Root RNG seed.
+    pub seed: u64,
+    /// Use the 13-hour diurnal content profile (Fig. 11) instead of the
+    /// 30-min segment profile.
+    pub diurnal: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            n_sources: 9,
+            cameras_per_device: 1,
+            trace: TraceKind::FiveG,
+            duration_ms: 30.0 * 60.0 * 1000.0,
+            slo_reduction_ms: 0.0,
+            scheduler: SchedulerKind::OctopInf,
+            seed: 42,
+            diurnal: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from the INI-subset format.
+    pub fn from_text(text: &str) -> Result<ExperimentConfig, String> {
+        let raw = RawConfig::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = raw.get_u64("experiment", "n_sources") {
+            cfg.n_sources = v as usize;
+        }
+        if let Some(v) = raw.get_u64("experiment", "cameras_per_device") {
+            cfg.cameras_per_device = v as usize;
+        }
+        if let Some(v) = raw.get("experiment", "trace") {
+            cfg.trace = match v {
+                "5g" | "fiveg" => TraceKind::FiveG,
+                "lte" => TraceKind::Lte,
+                "constant" => TraceKind::Constant,
+                other => return Err(format!("unknown trace {other:?}")),
+            };
+        }
+        if let Some(v) = raw.get_f64("experiment", "duration_min") {
+            cfg.duration_ms = v * 60_000.0;
+        }
+        if let Some(v) = raw.get_f64("experiment", "slo_reduction_ms") {
+            cfg.slo_reduction_ms = v;
+        }
+        if let Some(v) = raw.get("experiment", "scheduler") {
+            cfg.scheduler = SchedulerKind::parse(v)
+                .ok_or_else(|| format!("unknown scheduler {v:?}"))?;
+        }
+        if let Some(v) = raw.get_u64("experiment", "seed") {
+            cfg.seed = v;
+        }
+        if let Some(v) = raw.get_bool("experiment", "diurnal") {
+            cfg.diurnal = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_sources == 0 || self.n_sources > 9 {
+            return Err(format!("n_sources {} not in 1..=9", self.n_sources));
+        }
+        if self.cameras_per_device == 0 || self.cameras_per_device > 4 {
+            return Err("cameras_per_device must be 1..=4".into());
+        }
+        if self.duration_ms <= 0.0 {
+            return Err("duration must be positive".into());
+        }
+        if self.slo_reduction_ms < 0.0 || self.slo_reduction_ms >= 150.0 {
+            return Err("slo_reduction_ms must be in [0, 150)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_ini_subset() {
+        let raw = RawConfig::parse(
+            "# comment\n[experiment]\nn_sources = 4\ntrace = \"lte\"\n\n[x]\nk=v\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("experiment", "n_sources"), Some("4"));
+        assert_eq!(raw.get("experiment", "trace"), Some("lte"));
+        assert_eq!(raw.get("x", "k"), Some("v"));
+        assert_eq!(raw.get("x", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(RawConfig::parse("[unclosed\n").is_err());
+        assert!(RawConfig::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn experiment_from_text() {
+        let cfg = ExperimentConfig::from_text(
+            "[experiment]\nn_sources = 3\nscheduler = rim\nduration_min = 5\ntrace = lte\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.n_sources, 3);
+        assert_eq!(cfg.scheduler, SchedulerKind::Rim);
+        assert_eq!(cfg.duration_ms, 300_000.0);
+        assert_eq!(cfg.trace, TraceKind::Lte);
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n_sources = 0;
+        assert!(cfg.validate().is_err());
+        cfg.n_sources = 10;
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.slo_reduction_ms = 200.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_scheduler_is_error() {
+        assert!(ExperimentConfig::from_text("[experiment]\nscheduler = foo\n")
+            .is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Run-time Horizontal AutoScaler (paper §III-D): between full scheduling
+//! rounds, react to workload surges/dips by cloning or reclaiming
+//! container instances and placing the clones temporally via CORAL's
+//! placement primitive.
+
+use crate::coordinator::types::{Plan, SchedEnv};
+use crate::Ms;
+
+/// Scale decision for one (pipeline, model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    Up,
+    Down,
+    Hold,
+}
+
+/// Thresholds (fractions of instance-group capacity).
+#[derive(Clone, Copy, Debug)]
+pub struct AutoScalerParams {
+    /// Scale up when observed rate exceeds this fraction of capacity.
+    pub surge_frac: f64,
+    /// Scale down when rate falls below this fraction (and instances > 1).
+    pub dip_frac: f64,
+    /// Minimum ms between actions on the same model (hysteresis).
+    pub cooldown_ms: Ms,
+}
+
+impl Default for AutoScalerParams {
+    fn default() -> Self {
+        AutoScalerParams { surge_frac: 0.85, dip_frac: 0.35, cooldown_ms: 10_000.0 }
+    }
+}
+
+/// Stateful autoscaler: remembers last action time per (pipeline, model).
+#[derive(Clone, Debug, Default)]
+pub struct AutoScaler {
+    params: AutoScalerParams,
+    last_action: std::collections::HashMap<(usize, usize), Ms>,
+}
+
+impl AutoScaler {
+    pub fn new(params: AutoScalerParams) -> AutoScaler {
+        AutoScaler { params, last_action: Default::default() }
+    }
+
+    /// Decide for one model given observed rate and current capacity.
+    pub fn decide(
+        &mut self,
+        key: (usize, usize),
+        now_ms: Ms,
+        rate_qps: f64,
+        capacity_qps: f64,
+        instances: u32,
+    ) -> ScaleAction {
+        if let Some(&t) = self.last_action.get(&key) {
+            if now_ms - t < self.params.cooldown_ms {
+                return ScaleAction::Hold;
+            }
+        }
+        let frac = rate_qps / capacity_qps.max(1e-9);
+        let action = if frac > self.params.surge_frac {
+            ScaleAction::Up
+        } else if frac < self.params.dip_frac && instances > 1 {
+            ScaleAction::Down
+        } else {
+            ScaleAction::Hold
+        };
+        if action != ScaleAction::Hold {
+            self.last_action.insert(key, now_ms);
+        }
+        action
+    }
+
+    /// Apply scaling over a whole plan in place; returns (#up, #down).
+    /// `rates[p][m]` are the currently observed request rates.
+    pub fn rescale(
+        &mut self,
+        env: &SchedEnv,
+        plan: &mut Plan,
+        rates: &[Vec<f64>],
+        now_ms: Ms,
+    ) -> (usize, usize) {
+        let (mut ups, mut downs) = (0, 0);
+        for a in plan.assignments.iter_mut() {
+            let spec = &env.pipelines[a.pipeline].models[a.model].spec;
+            let class = env.cluster.device(a.cfg.device).class;
+            let per_inst =
+                env.profiles.curve(spec, class).throughput(a.cfg.batch);
+            let cap = a.cfg.instances as f64 * per_inst;
+            let rate = rates[a.pipeline][a.model];
+            match self.decide(
+                (a.pipeline, a.model),
+                now_ms,
+                rate,
+                cap,
+                a.cfg.instances,
+            ) {
+                ScaleAction::Up => {
+                    a.cfg.instances += 1;
+                    // Clone the last binding's GPU spatially; CORAL will
+                    // re-place temporally at the next scheduling round —
+                    // until then the clone runs contended (paper: scheduled
+                    // "as described earlier" at the next opportunity).
+                    if let Some(last) = a.bindings.last().copied() {
+                        a.bindings.push(crate::coordinator::types::GpuBinding {
+                            temporal: None,
+                            ..last
+                        });
+                    }
+                    ups += 1;
+                }
+                ScaleAction::Down => {
+                    a.cfg.instances -= 1;
+                    a.bindings.pop(); // reclaim the portion (line: removed)
+                    downs += 1;
+                }
+                ScaleAction::Hold => {}
+            }
+        }
+        (ups, downs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler() -> AutoScaler {
+        AutoScaler::new(AutoScalerParams::default())
+    }
+
+    #[test]
+    fn surge_scales_up() {
+        let mut s = scaler();
+        assert_eq!(s.decide((0, 0), 0.0, 95.0, 100.0, 1), ScaleAction::Up);
+    }
+
+    #[test]
+    fn dip_scales_down_only_above_one_instance() {
+        let mut s = scaler();
+        assert_eq!(s.decide((0, 0), 0.0, 10.0, 100.0, 2), ScaleAction::Down);
+        assert_eq!(s.decide((0, 1), 0.0, 10.0, 100.0, 1), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn cooldown_suppresses_flapping() {
+        let mut s = scaler();
+        assert_eq!(s.decide((0, 0), 0.0, 95.0, 100.0, 1), ScaleAction::Up);
+        assert_eq!(s.decide((0, 0), 1000.0, 95.0, 100.0, 2), ScaleAction::Hold);
+        assert_eq!(s.decide((0, 0), 20_000.0, 95.0, 100.0, 2), ScaleAction::Up);
+    }
+
+    #[test]
+    fn mid_band_holds() {
+        let mut s = scaler();
+        assert_eq!(s.decide((0, 0), 0.0, 60.0, 100.0, 2), ScaleAction::Hold);
+    }
+}

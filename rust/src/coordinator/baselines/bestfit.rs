@@ -1,0 +1,92 @@
+//! Spatial best-fit GPU spreader: the paper equips all baselines (which
+//! have no GPU scheduling of their own) with a best-fit algorithm that
+//! spreads models across GPUs by resource consumption (§IV-A4). No
+//! temporal dimension — bindings carry `temporal: None`, so the simulator
+//! applies co-location interference when executions overlap.
+
+use std::collections::HashMap;
+
+use crate::coordinator::types::{
+    Assignment, GpuBinding, GpuId, Plan, SchedEnv, StageCfg,
+};
+
+/// Spread every instance across its device's GPUs, least-loaded first.
+pub fn spread(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
+    // Track (memory, util) load per GPU.
+    let mut load: HashMap<GpuId, (f64, f64)> = HashMap::new();
+    for d in &env.cluster.devices {
+        for gi in 0..d.gpus.len() {
+            load.insert(GpuId { device: d.id, gpu: gi }, (0.0, 0.0));
+        }
+    }
+
+    let mut assignments = Vec::new();
+    for (p, cfg) in cfgs.iter().enumerate() {
+        for (m, &c) in cfg.iter().enumerate() {
+            let spec = &env.pipelines[p].models[m].spec;
+            let mut bindings = Vec::new();
+            for _ in 0..c.instances {
+                // Least-loaded GPU of the device by memory, then util.
+                let gpu = env
+                    .cluster
+                    .device(c.device)
+                    .gpus
+                    .iter()
+                    .enumerate()
+                    .map(|(gi, _)| GpuId { device: c.device, gpu: gi })
+                    .min_by(|a, b| {
+                        let (ma, ua) = load[a];
+                        let (mb, ub) = load[b];
+                        (ma + 1000.0 * ua)
+                            .partial_cmp(&(mb + 1000.0 * ub))
+                            .unwrap()
+                    })
+                    .expect("device has at least one GPU");
+                let e = load.get_mut(&gpu).unwrap();
+                e.0 += spec.memory_mb(c.batch);
+                e.1 += spec.util_width;
+                bindings.push(GpuBinding {
+                    gpu,
+                    width: spec.util_width,
+                    temporal: None,
+                });
+            }
+            assignments.push(Assignment { pipeline: p, model: m, cfg: c, bindings });
+        }
+    }
+    Plan { assignments, unplaced: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    #[test]
+    fn spreads_across_server_gpus() {
+        let cluster = Cluster::paper_testbed();
+        let profiles = ProfileStore::analytic();
+        let pipelines = standard_pipelines(4);
+        let env =
+            SchedEnv::bootstrap(&cluster, &profiles, &pipelines, vec![100.0; 10]);
+        let cfgs: Vec<Vec<StageCfg>> = (0..4)
+            .map(|_| {
+                vec![StageCfg { device: 0, batch: 8, instances: 2 }; 3]
+            })
+            .collect();
+        let plan = spread(&env, &cfgs);
+        let gpus_used: std::collections::HashSet<GpuId> = plan
+            .assignments
+            .iter()
+            .flat_map(|a| a.bindings.iter().map(|b| b.gpu))
+            .collect();
+        assert!(gpus_used.len() >= 4, "used {} GPUs", gpus_used.len());
+        // All spatial-only.
+        assert!(plan
+            .assignments
+            .iter()
+            .all(|a| a.bindings.iter().all(|b| b.temporal.is_none())));
+    }
+}

@@ -1,0 +1,163 @@
+//! Distream baseline (Zeng et al., SenSys'20) as the paper implements it
+//! (§IV-A4): workload-adaptive *split point* between the edge device and
+//! the server, found by stochastic local search balancing edge load against
+//! edge capacity; static batch sizes (4 edge / 8 server / 2 detector);
+//! lazy dropping of late requests (granted by the paper).
+
+use super::{STATIC_DETECTOR_BATCH, STATIC_EDGE_BATCH, STATIC_SERVER_BATCH};
+use super::bestfit::spread;
+use crate::coordinator::types::{Plan, SchedEnv, Scheduler, StageCfg};
+use crate::util::Rng;
+
+pub struct Distream {
+    rng: Rng,
+    /// Current split per pipeline (stages < split run on the edge).
+    splits: Vec<usize>,
+}
+
+impl Distream {
+    pub fn new(seed: u64) -> Distream {
+        Distream { rng: Rng::new(seed), splits: Vec::new() }
+    }
+
+    /// Edge compute load (normalized busy fraction) if stages [0, split)
+    /// run on the pipeline's edge device at the static batches.
+    fn edge_load(&self, env: &SchedEnv, p: usize, split: usize) -> f64 {
+        let dag = &env.pipelines[p];
+        let class = env.cluster.device(dag.source_device).class;
+        (0..split)
+            .map(|m| {
+                let spec = &dag.models[m].spec;
+                let bz = if m == 0 { STATIC_DETECTOR_BATCH } else { STATIC_EDGE_BATCH };
+                let cap = env.profiles.curve(spec, class).throughput(bz);
+                env.rate(p, m) / cap.max(1e-9)
+            })
+            .sum()
+    }
+
+    /// Distream's balance objective: edge busy fraction should sit near a
+    /// target utilization (workload-adaptive partitioning).
+    fn objective(&self, env: &SchedEnv, p: usize, split: usize) -> f64 {
+        const TARGET: f64 = 0.75;
+        (self.edge_load(env, p, split) - TARGET).abs()
+    }
+}
+
+impl Scheduler for Distream {
+    fn name(&self) -> &'static str {
+        "distream"
+    }
+
+    fn plan(&mut self, env: &SchedEnv) -> Plan {
+        if self.splits.len() != env.pipelines.len() {
+            self.splits = vec![1; env.pipelines.len()];
+        }
+        let mut cfgs = Vec::new();
+        for p in 0..env.pipelines.len() {
+            let dag = &env.pipelines[p];
+            // Stochastic local search over the split point: evaluate the
+            // current split and a random neighbor, keep the better; with
+            // small probability take the neighbor anyway (exploration).
+            let cur = self.splits[p].min(dag.len());
+            let neighbor = if self.rng.chance(0.5) {
+                (cur + 1).min(dag.len())
+            } else {
+                cur.saturating_sub(1)
+            };
+            let (oc, on) =
+                (self.objective(env, p, cur), self.objective(env, p, neighbor));
+            let chosen = if on < oc || self.rng.chance(0.1) { neighbor } else { cur };
+            self.splits[p] = chosen;
+
+            let cfg: Vec<StageCfg> = (0..dag.len())
+                .map(|m| {
+                    let on_edge = m < chosen && dag.source_device != 0;
+                    let device = if on_edge { dag.source_device } else { 0 };
+                    let batch = if m == 0 {
+                        STATIC_DETECTOR_BATCH
+                    } else if on_edge {
+                        STATIC_EDGE_BATCH
+                    } else {
+                        STATIC_SERVER_BATCH
+                    };
+                    let class = env.cluster.device(device).class;
+                    let spec = &dag.models[m].spec;
+                    let cap = env.profiles.curve(spec, class).throughput(batch);
+                    let instances =
+                        ((env.rate(p, m) / cap.max(1e-9)).ceil() as u32).clamp(1, 16);
+                    StageCfg { device, batch, instances }
+                })
+                .collect();
+            cfgs.push(cfg);
+        }
+        spread(env, &cfgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    fn env_fixture() -> (Cluster, ProfileStore, Vec<crate::pipeline::PipelineDag>) {
+        let pipelines = standard_pipelines(3)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        (Cluster::paper_testbed(), ProfileStore::analytic(), pipelines)
+    }
+
+    #[test]
+    fn static_batches_enforced() {
+        let (cl, pf, pl) = env_fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Distream::new(1).plan(&env);
+        for a in &plan.assignments {
+            let expect = if a.model == 0 {
+                STATIC_DETECTOR_BATCH
+            } else if a.cfg.device != 0 {
+                STATIC_EDGE_BATCH
+            } else {
+                STATIC_SERVER_BATCH
+            };
+            assert_eq!(a.cfg.batch, expect);
+        }
+    }
+
+    #[test]
+    fn split_moves_with_workload() {
+        let (cl, pf, mut pl) = env_fixture();
+        // Tiny workload -> split should drift edge-ward over rounds.
+        for p in pl.iter_mut() {
+            p.source_fps = 2.0;
+        }
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let mut ds = Distream::new(2);
+        let mut last_edge_stages = 0;
+        for _ in 0..30 {
+            let plan = ds.plan(&env);
+            last_edge_stages = plan
+                .assignments
+                .iter()
+                .filter(|a| a.cfg.device != 0)
+                .count();
+        }
+        assert!(last_edge_stages > 0, "Distream never offloaded to edge");
+    }
+
+    #[test]
+    fn no_temporal_scheduling() {
+        let (cl, pf, pl) = env_fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Distream::new(3).plan(&env);
+        assert!(plan
+            .assignments
+            .iter()
+            .all(|a| a.bindings.iter().all(|b| b.temporal.is_none())));
+    }
+}

@@ -1,0 +1,140 @@
+//! Jellyfish baseline (Nigade et al., RTSS'22) as the paper implements it
+//! (§IV-A4): fully centralized — every model runs on the server; raw
+//! (resized) frames always cross the network. Adapts to network latency by
+//! picking among detector *versions* (resolutions) via a DP over the
+//! latency budget, and dynamically batches each version. Downstream models
+//! get static batch 8, one instance per detector version.
+
+use super::STATIC_SERVER_BATCH;
+use super::bestfit::spread;
+use crate::coordinator::estimator::transfer_latency;
+use crate::coordinator::types::{Plan, SchedEnv, Scheduler, StageCfg};
+use crate::pipeline::ModelKind;
+use crate::profiles::BATCH_SIZES;
+
+pub struct Jellyfish;
+
+impl Jellyfish {
+    pub fn new() -> Jellyfish {
+        Jellyfish
+    }
+
+    /// Jellyfish's DP reduced to our 3-version ladder: pick the largest
+    /// detector variant + batch whose (transfer + batch exec + fill) fits
+    /// the latency budget; degrade resolution as bandwidth drops.
+    fn pick_version_and_batch(env: &SchedEnv, p: usize) -> (usize, u32) {
+        let dag = &env.pipelines[p];
+        let budget = dag.slo_ms * 0.6; // detector's share of the SLO
+        let rate = env.rate(p, 0).max(0.01);
+        // Try large -> small variants, big -> small batches.
+        for variant in (0..3usize).rev() {
+            // Input bytes scale with the variant's stream resolution.
+            let bytes = 80_000.0 + 30_000.0 * variant as f64;
+            let tx = transfer_latency(env, dag.source_device, 0, bytes, rate);
+            let mut spec = dag.models[0].spec.clone();
+            spec.variant = variant;
+            let class = env.cluster.device(0).class;
+            for &bz in BATCH_SIZES.iter().rev() {
+                let fill = (bz - 1) as f64 * 1000.0 / rate;
+                let exec = env.profiles.batch_latency(&spec, class, bz);
+                if tx + fill + exec <= budget {
+                    return (variant, bz);
+                }
+            }
+        }
+        (0, 1) // worst case: smallest version, no batching
+    }
+}
+
+impl Default for Jellyfish {
+    fn default() -> Self {
+        Jellyfish::new()
+    }
+}
+
+impl Scheduler for Jellyfish {
+    fn name(&self) -> &'static str {
+        "jellyfish"
+    }
+
+    fn plan(&mut self, env: &SchedEnv) -> Plan {
+        let mut cfgs = Vec::new();
+        for p in 0..env.pipelines.len() {
+            let dag = &env.pipelines[p];
+            let (variant, det_bz) = Self::pick_version_and_batch(env, p);
+            let cfg: Vec<StageCfg> = (0..dag.len())
+                .map(|m| {
+                    let spec = &dag.models[m].spec;
+                    let batch = if spec.kind == ModelKind::Detector {
+                        det_bz
+                    } else {
+                        STATIC_SERVER_BATCH
+                    };
+                    let mut eff_spec = spec.clone();
+                    if eff_spec.kind == ModelKind::Detector {
+                        eff_spec.variant = variant;
+                    }
+                    let class = env.cluster.device(0).class;
+                    let cap =
+                        env.profiles.curve(&eff_spec, class).throughput(batch);
+                    let instances =
+                        ((env.rate(p, m) / cap.max(1e-9)).ceil() as u32).clamp(1, 16);
+                    StageCfg { device: 0, batch, instances }
+                })
+                .collect();
+            cfgs.push(cfg);
+        }
+        spread(env, &cfgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    fn fixture() -> (Cluster, ProfileStore, Vec<crate::pipeline::PipelineDag>) {
+        let pipelines = standard_pipelines(3)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        (Cluster::paper_testbed(), ProfileStore::analytic(), pipelines)
+    }
+
+    #[test]
+    fn everything_on_server() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Jellyfish::new().plan(&env);
+        assert!(plan.assignments.iter().all(|a| a.cfg.device == 0));
+    }
+
+    #[test]
+    fn degrades_version_under_weak_network() {
+        let (cl, pf, pl) = fixture();
+        let rich = SchedEnv::bootstrap(&cl, &pf, &pl, vec![500.0; 10]);
+        let poor = SchedEnv::bootstrap(&cl, &pf, &pl, vec![4.0; 10]);
+        let (v_rich, _) = Jellyfish::pick_version_and_batch(&rich, 0);
+        let (v_poor, _) = Jellyfish::pick_version_and_batch(&poor, 0);
+        assert!(
+            v_poor <= v_rich,
+            "poor network must not pick a larger version ({v_poor} > {v_rich})"
+        );
+    }
+
+    #[test]
+    fn detector_batch_adapts_to_rate() {
+        let (cl, pf, mut pl) = fixture();
+        for p in pl.iter_mut() {
+            p.source_fps = 60.0; // heavy rate -> larger batch pays off
+        }
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![500.0; 10]);
+        let (_, bz_hi) = Jellyfish::pick_version_and_batch(&env, 0);
+        assert!(bz_hi >= 2, "high rate should allow batching, got {bz_hi}");
+    }
+}

@@ -1,0 +1,26 @@
+//! The three SOTA baselines the paper evaluates against (§IV-A4), each
+//! implemented on the same substrate and given the paper's tuned settings:
+//!
+//! - [`distream`]: workload-adaptive split point, static batches
+//!   (4 edge / 8 server / 2 detector), lazy late-dropping.
+//! - [`jellyfish`]: centralized serving with detector-version selection by
+//!   network latency (DP) and per-version dynamic batching.
+//! - [`rim`]: maximize edge placement / concurrent execution, static
+//!   batches, lazy late-dropping.
+//!
+//! None performs temporal GPU scheduling; all receive the same best-fit
+//! spatial GPU spreader ([`bestfit`]) the paper grants them.
+
+pub mod bestfit;
+pub mod distream;
+pub mod jellyfish;
+pub mod rim;
+
+pub use distream::Distream;
+pub use jellyfish::Jellyfish;
+pub use rim::Rim;
+
+/// Static batch sizes the paper tunes for Distream and Rim (§IV-A4).
+pub const STATIC_EDGE_BATCH: u32 = 4;
+pub const STATIC_SERVER_BATCH: u32 = 8;
+pub const STATIC_DETECTOR_BATCH: u32 = 2;

@@ -1,0 +1,144 @@
+//! Rim baseline (Hu et al., IoTDI'21) as the paper implements it (§IV-A4):
+//! offload as much of the pipeline as possible to the edge, maximizing
+//! concurrent model execution / hardware utilization; static batches; no
+//! temporal scheduling (the paper notes Rim amplifies co-location
+//! interference at the edge, and its latency is the worst — Fig. 6b).
+
+use super::{STATIC_DETECTOR_BATCH, STATIC_EDGE_BATCH, STATIC_SERVER_BATCH};
+use super::bestfit::spread;
+use crate::coordinator::estimator::stage_memory_mb;
+use crate::coordinator::types::{Plan, SchedEnv, Scheduler, StageCfg};
+
+pub struct Rim;
+
+impl Rim {
+    pub fn new() -> Rim {
+        Rim
+    }
+}
+
+impl Default for Rim {
+    fn default() -> Self {
+        Rim::new()
+    }
+}
+
+impl Scheduler for Rim {
+    fn name(&self) -> &'static str {
+        "rim"
+    }
+
+    fn plan(&mut self, env: &SchedEnv) -> Plan {
+        // Per-device running memory use, so edge stuffing stops at capacity.
+        let mut edge_mem_left: Vec<f64> = env
+            .cluster
+            .devices
+            .iter()
+            .map(|d| d.gpus.iter().map(|g| g.mem_mb).sum::<f64>())
+            .collect();
+
+        let mut cfgs = Vec::new();
+        for p in 0..env.pipelines.len() {
+            let dag = &env.pipelines[p];
+            let edge = dag.source_device;
+            let cfg: Vec<StageCfg> = (0..dag.len())
+                .map(|m| {
+                    let batch = if m == 0 {
+                        STATIC_DETECTOR_BATCH
+                    } else {
+                        STATIC_EDGE_BATCH
+                    };
+                    // Greedily keep the stage at the edge while memory
+                    // lasts (maximize edge concurrency).
+                    let try_edge = StageCfg {
+                        device: edge,
+                        batch,
+                        instances: 1,
+                    };
+                    let mem = stage_memory_mb(env, p, m, try_edge);
+                    if edge != 0 && mem <= edge_mem_left[edge] {
+                        edge_mem_left[edge] -= mem;
+                        let class = env.cluster.device(edge).class;
+                        let spec = &dag.models[m].spec;
+                        let cap =
+                            env.profiles.curve(spec, class).throughput(batch);
+                        let instances = ((env.rate(p, m) / cap.max(1e-9)).ceil()
+                            as u32)
+                            .clamp(1, 4); // edge devices can't host many
+                        StageCfg { device: edge, batch, instances }
+                    } else {
+                        let batch = if m == 0 {
+                            STATIC_DETECTOR_BATCH
+                        } else {
+                            STATIC_SERVER_BATCH
+                        };
+                        let class = env.cluster.device(0).class;
+                        let spec = &dag.models[m].spec;
+                        let cap =
+                            env.profiles.curve(spec, class).throughput(batch);
+                        let instances = ((env.rate(p, m) / cap.max(1e-9)).ceil()
+                            as u32)
+                            .clamp(1, 16);
+                        StageCfg { device: 0, batch, instances }
+                    }
+                })
+                .collect();
+            cfgs.push(cfg);
+        }
+        spread(env, &cfgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    fn fixture() -> (Cluster, ProfileStore, Vec<crate::pipeline::PipelineDag>) {
+        let pipelines = standard_pipelines(3)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        (Cluster::paper_testbed(), ProfileStore::analytic(), pipelines)
+    }
+
+    #[test]
+    fn maximizes_edge_placement() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Rim::new().plan(&env);
+        let edge_stages =
+            plan.assignments.iter().filter(|a| a.cfg.device != 0).count();
+        let total = plan.assignments.len();
+        assert!(
+            edge_stages * 2 > total,
+            "Rim should push most stages edge-ward: {edge_stages}/{total}"
+        );
+    }
+
+    #[test]
+    fn respects_edge_memory() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Rim::new().plan(&env);
+        // Recompute per-device memory and compare with capacity.
+        for d in env.cluster.devices.iter().skip(1) {
+            let used: f64 = plan
+                .assignments
+                .iter()
+                .filter(|a| a.cfg.device == d.id)
+                .map(|a| {
+                    let spec = &pl[a.pipeline].models[a.model].spec;
+                    a.cfg.instances as f64 * spec.memory_mb(a.cfg.batch)
+                })
+                .sum();
+            let cap: f64 = d.gpus.iter().map(|g| g.mem_mb).sum();
+            assert!(used <= cap + 1e-6, "device {} over memory", d.id);
+        }
+    }
+}

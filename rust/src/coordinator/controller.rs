@@ -1,0 +1,173 @@
+//! The Controller: the paper's 5-step operation cycle (§III-A, Fig. 3).
+//!
+//! 1. Collect network/workload statistics (from the KB / snapshots).
+//! 2. Run CWD to select batch sizes, hosts, and instance counts.
+//! 3. Run CORAL for spatiotemporal placement.
+//! 4. Communicate the plan to Device Agents (the simulator / serving
+//!    stack consumes the `Plan` directly).
+//! 5. Metrics flow back into the KB; the AutoScaler reacts between rounds.
+
+use super::autoscaler::{AutoScaler, AutoScalerParams};
+use super::baselines::bestfit::spread;
+use super::coral::coral;
+use super::cwd::{cwd, CwdParams};
+use super::types::{Plan, SchedEnv, Scheduler, SchedulerKind};
+use crate::Ms;
+
+/// Scheduling period between full CWD+CORAL rounds (paper §IV-A5: 6 min).
+pub const SCHEDULING_PERIOD_MS: Ms = 6.0 * 60.0 * 1000.0;
+
+/// OctopInf controller (also hosts the Fig. 10 ablation variants).
+pub struct Controller {
+    kind: SchedulerKind,
+    pub autoscaler: AutoScaler,
+}
+
+impl Controller {
+    pub fn new(kind: SchedulerKind) -> Controller {
+        Controller {
+            kind,
+            autoscaler: AutoScaler::new(AutoScalerParams::default()),
+        }
+    }
+
+    fn cwd_params(&self) -> CwdParams {
+        match self.kind {
+            SchedulerKind::OctopInfStaticBatch => CwdParams {
+                static_batch: Some((4, 8, 2)),
+                ..Default::default()
+            },
+            SchedulerKind::OctopInfServerOnly => {
+                CwdParams { server_only: true, ..Default::default() }
+            }
+            _ => CwdParams::default(),
+        }
+    }
+
+    fn use_coral(&self) -> bool {
+        !matches!(self.kind, SchedulerKind::OctopInfNoCoral)
+    }
+}
+
+impl Scheduler for Controller {
+    fn name(&self) -> &'static str {
+        self.kind.label()
+    }
+
+    fn plan(&mut self, env: &SchedEnv) -> Plan {
+        // Step 2: CWD.
+        let mut cfgs: Vec<_> = cwd(env, &self.cwd_params())
+            .into_iter()
+            .map(|r| r.cfg)
+            .collect();
+        // Step 3: CORAL (or the spatial spreader for the ablation).
+        if !self.use_coral() {
+            return spread(env, &cfgs);
+        }
+        let mut plan = coral(env, &cfgs);
+        // Feasibility feedback: if CORAL could not reserve portions for
+        // some edge-placed stages (stream time exhausted), pull those
+        // stages back to the server and re-run CORAL once. This is the
+        // Controller revising CWD's coarse placement against CORAL's
+        // exact spatiotemporal budgets.
+        if plan.unplaced > 0 {
+            let mut changed = false;
+            for a in &plan.assignments {
+                let fully_placed =
+                    a.bindings.iter().all(|b| b.temporal.is_some());
+                if !fully_placed && a.cfg.device != 0 {
+                    let c = &mut cfgs[a.pipeline][a.model];
+                    c.device = 0;
+                    changed = true;
+                }
+            }
+            if changed {
+                plan = coral(env, &cfgs);
+            }
+        }
+        plan
+    }
+}
+
+/// Factory covering OctopInf variants and all baselines.
+pub fn make_scheduler(kind: SchedulerKind, seed: u64) -> Box<dyn Scheduler> {
+    use super::baselines::{Distream, Jellyfish, Rim};
+    match kind {
+        SchedulerKind::Distream => Box::new(Distream::new(seed)),
+        SchedulerKind::Jellyfish => Box::new(Jellyfish::new()),
+        SchedulerKind::Rim => Box::new(Rim::new()),
+        _ => Box::new(Controller::new(kind)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    fn fixture() -> (Cluster, ProfileStore, Vec<crate::pipeline::PipelineDag>) {
+        let pipelines = standard_pipelines(3)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        (Cluster::paper_testbed(), ProfileStore::analytic(), pipelines)
+    }
+
+    #[test]
+    fn octopinf_plan_is_temporal() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Controller::new(SchedulerKind::OctopInf).plan(&env);
+        let temporal = plan
+            .assignments
+            .iter()
+            .flat_map(|a| a.bindings.iter())
+            .filter(|b| b.temporal.is_some())
+            .count();
+        assert!(temporal > 0, "OctopInf must temporally schedule");
+    }
+
+    #[test]
+    fn no_coral_ablation_is_spatial_only() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Controller::new(SchedulerKind::OctopInfNoCoral).plan(&env);
+        assert!(plan
+            .assignments
+            .iter()
+            .all(|a| a.bindings.iter().all(|b| b.temporal.is_none())));
+    }
+
+    #[test]
+    fn server_only_ablation_never_uses_edge() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let plan = Controller::new(SchedulerKind::OctopInfServerOnly).plan(&env);
+        assert!(plan.assignments.iter().all(|a| a.cfg.device == 0));
+    }
+
+    #[test]
+    fn factory_builds_every_kind() {
+        for kind in [
+            SchedulerKind::OctopInf,
+            SchedulerKind::OctopInfNoCoral,
+            SchedulerKind::OctopInfStaticBatch,
+            SchedulerKind::OctopInfServerOnly,
+            SchedulerKind::Distream,
+            SchedulerKind::Jellyfish,
+            SchedulerKind::Rim,
+        ] {
+            let mut s = make_scheduler(kind, 7);
+            assert_eq!(s.name(), kind.label());
+            let (cl, pf, pl) = fixture();
+            let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+            let plan = s.plan(&env);
+            assert!(!plan.assignments.is_empty());
+        }
+    }
+}

@@ -1,0 +1,475 @@
+//! CWD — Cross-device Workload Distributor (paper Algorithm 1, §III-B).
+//!
+//! Workload-aware greedy search over per-stage `[batch, device, instances]`:
+//!
+//! 1. Initialize every model on the server at batch 1 with enough instances
+//!    to absorb the incoming rate (lines 3-5).
+//! 2. Sort models by burstiness (descending) and greedily double batch
+//!    sizes, reducing instances as throughput-per-instance rises; a step is
+//!    kept only if estimated pipeline latency stays within SLO/2 and
+//!    estimated effective throughput improves (lines 6-17; Insight 1).
+//! 3. `ToEdge()` DFS pushes a prefix of the pipeline to the data source's
+//!    edge device, keeping a stage there only if its output traffic is
+//!    lighter than its input traffic by factor α and no downstream serves
+//!    as a better split (lines 21-28; Insights 2-3).
+
+use super::estimator::{est_gpu_cost, est_latency, est_throughput, stage_memory_mb};
+use super::types::{SchedEnv, StageCfg};
+use crate::profiles::BATCH_SIZES;
+
+/// Result of CWD for one pipeline.
+#[derive(Clone, Debug)]
+pub struct CwdResult {
+    pub cfg: Vec<StageCfg>,
+}
+
+/// Tuning knobs (paper defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct CwdParams {
+    /// SLO guard fraction for batch exploration (paper: SLO/2 — the other
+    /// half is CORAL's duty cycle).
+    pub slo_fraction: f64,
+    /// Max batch size considered.
+    pub max_batch: u32,
+    /// Static batch override (Fig. 10 "Static Batch" ablation).
+    pub static_batch: Option<(u32, u32, u32)>, // (edge, server, detector)
+    /// Disable ToEdge (Fig. 10 "Server Only" ablation).
+    pub server_only: bool,
+}
+
+impl Default for CwdParams {
+    fn default() -> Self {
+        CwdParams {
+            slo_fraction: 0.5,
+            max_batch: *BATCH_SIZES.last().unwrap(),
+            static_batch: None,
+            server_only: false,
+        }
+    }
+}
+
+/// Instances needed on `device` at batch `bz` to absorb the model's rate.
+///
+/// Under CORAL each instance executes once per duty cycle (SLO/2), so its
+/// sustainable rate is `bz / duty` — usually tighter than the raw batch
+/// curve's `bz / L(bz)`. CWD sizes for the duty-cycled capacity so the
+/// temporal plan is feasible.
+fn instances_needed(env: &SchedEnv, pipeline: usize, model: usize, device: usize, bz: u32) -> u32 {
+    let dag = &env.pipelines[pipeline];
+    let spec = &dag.models[model].spec;
+    let class = env.cluster.device(device).class;
+    // A reserved instance chains full batches through its stream's free
+    // time when backlogged (CORAL stacks portions to minimize gaps), so
+    // sustained capacity approaches the batch curve; the 0.8 discount
+    // reserves slack for the portion-clocked partial batches.
+    let cap = env.profiles.curve(spec, class).throughput(bz) * 0.8;
+    // Burst headroom (Insight 1): bursty models see instantaneous rates
+    // far above the mean; size capacity for the burst envelope. CV is
+    // clamped — batched upstream completions clump arrivals, inflating
+    // raw inter-arrival CV beyond what capacity planning should chase.
+    let cv = env.burstiness(pipeline, model).min(2.0);
+    let rate = env.rate(pipeline, model) * (1.0 + 0.5 * cv);
+    ((rate / cap.max(1e-9)).ceil() as u32).clamp(1, 16)
+}
+
+/// Remaining GPU memory on a device given config already assigned there.
+fn device_mem_headroom(env: &SchedEnv, device: usize, cfg_all: &[(usize, Vec<StageCfg>)]) -> f64 {
+    let total: f64 = env.cluster.device(device).gpus.iter().map(|g| g.mem_mb).sum();
+    let mut used = 0.0;
+    for (p, cfg) in cfg_all {
+        for (m, c) in cfg.iter().enumerate() {
+            if c.device == device {
+                used += stage_memory_mb(env, *p, m, *c);
+            }
+        }
+    }
+    total - used
+}
+
+/// Total stream-time demand (ms per duty cycle) already committed on a
+/// device across all scheduled pipelines plus the one being built.
+/// CORAL can only reserve `streams × duty` ms per cycle; CWD filters
+/// placements that would blow that budget (the "unfruitful configurations"
+/// Insight-2 filtering removes).
+fn device_stream_time(
+    env: &SchedEnv,
+    device: usize,
+    cfg_all: &[(usize, Vec<StageCfg>)],
+) -> f64 {
+    let class = env.cluster.device(device).class;
+    let mut total = 0.0;
+    for (p, cfg) in cfg_all {
+        let dag = &env.pipelines[*p];
+        for (m, c) in cfg.iter().enumerate() {
+            if c.device == device {
+                let lat = env.profiles.batch_latency(&dag.models[m].spec, class, c.batch);
+                total += lat * c.instances as f64;
+            }
+        }
+    }
+    total
+}
+
+/// Stream-time budget of a device per duty cycle (streams × shortest duty
+/// among pipelines using it), with a safety margin for portion packing.
+fn device_stream_budget(env: &SchedEnv, device: usize, duty_ms: f64) -> f64 {
+    let d = env.cluster.device(device);
+    let streams: usize = d.gpus.iter().map(|g| g.streams).sum();
+    streams as f64 * duty_ms * 0.9
+}
+
+/// Network overhead (bytes/s) of a stage's *input* crossing the link.
+fn input_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
+    let spec = &env.pipelines[pipeline].models[model].spec;
+    env.rate(pipeline, model) * spec.input_bytes
+}
+
+/// Network overhead (bytes/s) of a stage's *output* crossing the link.
+fn output_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
+    let spec = &env.pipelines[pipeline].models[model].spec;
+    env.rate(pipeline, model) * spec.fanout_mean * spec.output_bytes
+}
+
+/// Run CWD for every pipeline; `scheduled[p]` is the per-stage config.
+pub fn cwd(env: &SchedEnv, params: &CwdParams) -> Vec<CwdResult> {
+    let mut scheduled: Vec<(usize, Vec<StageCfg>)> = Vec::new();
+
+    for p in 0..env.pipelines.len() {
+        let dag = &env.pipelines[p];
+        let slo_budget = dag.slo_ms * params.slo_fraction;
+
+        // ---- lines 3-5: minimal config, all on server, rate-matched ----
+        let mut cfg: Vec<StageCfg> = (0..dag.len())
+            .map(|m| StageCfg {
+                device: 0,
+                batch: 1,
+                instances: instances_needed(env, p, m, 0, 1),
+            })
+            .collect();
+
+        // ---- line 6: sort by burstiness, descending (Insight 1) ----
+        let mut order: Vec<usize> = (0..dag.len()).collect();
+        order.sort_by(|&a, &b| {
+            env.burstiness(p, b)
+                .partial_cmp(&env.burstiness(p, a))
+                .unwrap()
+        });
+
+        if let Some((_, server_bz, det_bz)) = params.static_batch {
+            // Fig. 10 ablation: fixed batches, skip exploration.
+            for (m, c) in cfg.iter_mut().enumerate() {
+                c.batch = if m == 0 { det_bz } else { server_bz };
+                c.instances = instances_needed(env, p, m, 0, c.batch);
+            }
+        } else {
+            // ---- lines 7-17: greedy batch doubling ----
+            explore_batches(env, params, p, &order, slo_budget, &mut cfg);
+        }
+
+        // ---- line 18: ToEdge(p[0]) ----
+        if !params.server_only {
+            let mut ctx = ToEdgeCtx { env, params, pipeline: p, scheduled: &scheduled };
+            to_edge(&mut ctx, 0, &mut cfg);
+            // Refinement: re-run batch exploration under the final
+            // placement — models that could not batch while the pipeline
+            // was (infeasibly) server-bound get their real batch sizes now
+            // ("exploration continues until no better configuration is
+            // found", line 17).
+            if params.static_batch.is_none() {
+                explore_batches(env, params, p, &order, slo_budget, &mut cfg);
+            }
+        }
+
+        scheduled.push((p, cfg));
+    }
+
+    scheduled.into_iter().map(|(_, cfg)| CwdResult { cfg }).collect()
+}
+
+/// Greedy batch-doubling pass (Algorithm 1 lines 7-17). Objective:
+/// effective throughput, tie-broken by GPU cost — batching that frees GPU
+/// time without hurting throughput is adopted (resource efficiency).
+fn explore_batches(
+    env: &SchedEnv,
+    params: &CwdParams,
+    p: usize,
+    order: &[usize],
+    slo_budget: f64,
+    cfg: &mut [StageCfg],
+) {
+    let mut best_thrpt = est_throughput(env, p, cfg);
+    let mut best_cost = est_gpu_cost(env, p, cfg);
+    loop {
+        let mut improved = false;
+        for &m in order {
+            let old = cfg[m];
+            let next_bz = old.batch * 2;
+            if next_bz > params.max_batch {
+                continue;
+            }
+            cfg[m].batch = next_bz;
+            cfg[m].instances = instances_needed(env, p, m, cfg[m].device, next_bz);
+            if est_latency(env, p, cfg) > slo_budget {
+                cfg[m] = old; // line 12: violates SLO guard
+                continue;
+            }
+            let thrpt = est_throughput(env, p, cfg);
+            let cost = est_gpu_cost(env, p, cfg);
+            if thrpt > best_thrpt + 1e-9
+                || (thrpt >= best_thrpt - 1e-9 && cost < best_cost - 1e-9)
+            {
+                best_thrpt = best_thrpt.max(thrpt); // lines 14-16
+                best_cost = cost;
+                improved = true;
+            } else {
+                cfg[m] = old;
+            }
+        }
+        if !improved {
+            break; // line 17
+        }
+    }
+}
+
+struct ToEdgeCtx<'a, 'b> {
+    env: &'a SchedEnv<'b>,
+    params: &'a CwdParams,
+    pipeline: usize,
+    scheduled: &'a [(usize, Vec<StageCfg>)],
+}
+
+/// DFS move of model `m` (and transitively its downstreams) to the edge
+/// device hosting the pipeline's source (Algorithm 1 lines 21-28).
+fn to_edge(ctx: &mut ToEdgeCtx, m: usize, cfg: &mut Vec<StageCfg>) {
+    let env = ctx.env;
+    let p = ctx.pipeline;
+    let dag = &env.pipelines[p];
+    let edge_dev = dag.source_device;
+    if edge_dev == 0 {
+        return; // source is the server itself; nothing to distribute
+    }
+    let slo_budget = dag.slo_ms * ctx.params.slo_fraction;
+
+    // ---- line 22: find the best feasible edge configuration for m ----
+    let old = cfg[m];
+    // Static-batch ablation pins the edge batch too.
+    let batches: Vec<u32> = match ctx.params.static_batch {
+        Some((edge_bz, _, det_bz)) => {
+            vec![if m == 0 { det_bz } else { edge_bz }]
+        }
+        None => BATCH_SIZES.to_vec(),
+    };
+    let mut best: Option<(StageCfg, f64, f64)> = None; // (cfg, thrpt, cost)
+    for &bz in &batches {
+        let cand = StageCfg {
+            device: edge_dev,
+            batch: bz,
+            instances: instances_needed(env, p, m, edge_dev, bz),
+        };
+        // Edge memory feasibility (coarse Eq. 4 check; CORAL is exact).
+        let mem = stage_memory_mb(env, p, m, cand);
+        let mut all = ctx.scheduled.to_vec();
+        all.push((p, cfg.clone()));
+        if mem > device_mem_headroom(env, edge_dev, &all) {
+            continue;
+        }
+        // Stream-time feasibility: the device must have enough reservable
+        // portion time per duty cycle for CORAL to schedule everything.
+        let duty = dag.slo_ms * ctx.params.slo_fraction;
+        let class = env.cluster.device(edge_dev).class;
+        let cand_time = env
+            .profiles
+            .batch_latency(&dag.models[m].spec, class, cand.batch)
+            * cand.instances as f64;
+        if device_stream_time(env, edge_dev, &all) + cand_time
+            > device_stream_budget(env, edge_dev, duty)
+        {
+            continue;
+        }
+        cfg[m] = cand;
+        if est_latency(env, p, cfg) <= slo_budget {
+            let thrpt = est_throughput(env, p, cfg);
+            let cost = est_gpu_cost(env, p, cfg);
+            let better = match &best {
+                None => true,
+                Some((_, bt, bc)) => {
+                    thrpt > bt + 1e-9 || (thrpt >= bt - 1e-9 && cost < bc - 1e-9)
+                }
+            };
+            if better {
+                best = Some((cand, thrpt, cost));
+            }
+        }
+        cfg[m] = old;
+    }
+    let Some((cand, _, _)) = best else {
+        return; // line 23-24: no feasible edge config, stop the DFS here
+    };
+    cfg[m] = cand;
+
+    // ---- lines 25-26: recurse downstream, least bursty first (Insight 1)
+    let mut downs = dag.models[m].downstream.clone();
+    downs.sort_by(|&a, &b| {
+        env.burstiness(p, a).partial_cmp(&env.burstiness(p, b)).unwrap()
+    });
+    for d in downs {
+        to_edge(ctx, d, cfg);
+    }
+
+    // ---- line 27-28: IO-ratio test on the return path (Insight 2) ----
+    let in_oh = input_overhead(env, p, m);
+    let out_oh = output_overhead(env, p, m);
+    let downstreams_on_edge = dag.models[m]
+        .downstream
+        .iter()
+        .any(|&d| cfg[d].device == edge_dev);
+    if in_oh * ctx.env.alpha < out_oh && !downstreams_on_edge {
+        cfg[m] = old; // revert: m would amplify network traffic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::{standard_pipelines, PipelineDag};
+    use crate::profiles::ProfileStore;
+
+    struct Fix {
+        cluster: Cluster,
+        profiles: ProfileStore,
+        pipelines: Vec<PipelineDag>,
+    }
+
+    fn fixture(n: usize) -> Fix {
+        Fix {
+            cluster: Cluster::paper_testbed(),
+            profiles: ProfileStore::analytic(),
+            pipelines: standard_pipelines(n).into_iter()
+                .map(|mut p| {
+                    // paper: sources live on edge devices 1..=9
+                    p.source_device += 1;
+                    p
+                })
+                .collect(),
+        }
+    }
+
+    fn env(f: &Fix, bw: f64) -> SchedEnv {
+        SchedEnv::bootstrap(
+            &f.cluster,
+            &f.profiles,
+            &f.pipelines,
+            vec![bw; f.cluster.devices.len()],
+        )
+    }
+
+    #[test]
+    fn respects_slo_guard() {
+        let f = fixture(3);
+        let e = env(&f, 100.0);
+        let results = cwd(&e, &CwdParams::default());
+        for (p, r) in results.iter().enumerate() {
+            let lat = est_latency(&e, p, &r.cfg);
+            assert!(
+                lat <= e.pipelines[p].slo_ms * 0.5 + 1e-6,
+                "pipeline {p}: est latency {lat} > SLO/2"
+            );
+        }
+    }
+
+    #[test]
+    fn batches_grow_beyond_one() {
+        let f = fixture(3);
+        let e = env(&f, 100.0);
+        let results = cwd(&e, &CwdParams::default());
+        let any_batched = results
+            .iter()
+            .flat_map(|r| r.cfg.iter())
+            .any(|c| c.batch > 1);
+        assert!(any_batched, "greedy exploration never increased a batch");
+    }
+
+    #[test]
+    fn batch_sizes_are_powers_of_two_in_range() {
+        let f = fixture(5);
+        let e = env(&f, 50.0);
+        for r in cwd(&e, &CwdParams::default()) {
+            for c in &r.cfg {
+                assert!(BATCH_SIZES.contains(&c.batch), "batch {}", c.batch);
+                assert!(c.instances >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn weak_network_pushes_detector_to_edge() {
+        let f = fixture(3);
+        // Starved uplink: sending raw frames to the server is hopeless.
+        let e = env(&f, 3.0);
+        let results = cwd(&e, &CwdParams::default());
+        for (p, r) in results.iter().enumerate() {
+            let src = e.pipelines[p].source_device;
+            assert_eq!(
+                r.cfg[0].device, src,
+                "pipeline {p}: detector must move to its edge device"
+            );
+        }
+    }
+
+    #[test]
+    fn rich_network_keeps_split_minimal() {
+        let f = fixture(3);
+        let e = env(&f, 10_000.0);
+        for (p, r) in cwd(&e, &CwdParams::default()).iter().enumerate() {
+            // Count device changes along upstream->downstream edges.
+            let dag = &e.pipelines[p];
+            let mut splits = 0;
+            for m in 0..dag.len() {
+                if let Some(u) = dag.upstream(m) {
+                    if r.cfg[u].device != r.cfg[m].device {
+                        splits += 1;
+                    }
+                }
+            }
+            assert!(splits <= 2, "pipeline {p} has {splits} splits");
+        }
+    }
+
+    #[test]
+    fn server_only_ablation_stays_on_server() {
+        let f = fixture(3);
+        let e = env(&f, 3.0); // even under weak network
+        let params = CwdParams { server_only: true, ..Default::default() };
+        for r in cwd(&e, &params) {
+            assert!(r.cfg.iter().all(|c| c.device == 0));
+        }
+    }
+
+    #[test]
+    fn static_batch_ablation_pins_batches() {
+        let f = fixture(2);
+        let e = env(&f, 100.0);
+        let params = CwdParams {
+            static_batch: Some((4, 8, 2)),
+            ..Default::default()
+        };
+        for r in cwd(&e, &params) {
+            assert_eq!(r.cfg[0].batch, 2); // detector
+            for c in &r.cfg[1..] {
+                assert!(c.batch == 8 || c.batch == 4);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let f = fixture(4);
+        let e = env(&f, 25.0);
+        let a = cwd(&e, &CwdParams::default());
+        let b = cwd(&e, &CwdParams::default());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cfg, y.cfg);
+        }
+    }
+}

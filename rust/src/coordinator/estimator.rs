@@ -1,0 +1,237 @@
+//! `EstLat` / `EstThrpt` — the pipeline latency and effective-throughput
+//! estimators CWD's greedy search queries (Algorithm 1 lines 11, 14).
+//!
+//! Latency follows the paper's Eq. 2 plus the worst-case batch-fill wait of
+//! Eq. 3 (the first query in a batch waits for the batch to fill); the IO
+//! term uses the current bandwidth snapshot, inflated by an M/M/1-style
+//! factor when offered network load approaches capacity (Obs. 2).
+
+use super::types::{SchedEnv, StageCfg};
+use crate::network::LOCAL_TRANSFER_MS;
+use crate::Ms;
+
+/// Per-query estimated latency of stage `m` under `cfg` (Eq. 2 + fill wait).
+pub fn stage_latency(
+    env: &SchedEnv,
+    pipeline: usize,
+    model: usize,
+    cfg: &[StageCfg],
+) -> Ms {
+    let dag = &env.pipelines[pipeline];
+    let spec = &dag.models[model].spec;
+    let c = cfg[model];
+    let class = env.cluster.device(c.device).class;
+    let rate = env.rate(pipeline, model).max(0.01);
+    let rate_per_inst = rate / c.instances.max(1) as f64;
+
+    // Worst-case fill wait: first query waits (bz-1) further arrivals.
+    let fill_ms = (c.batch.saturating_sub(1)) as f64 * 1000.0 / rate_per_inst.max(0.01);
+    // Burstiness shortens the *expected* fill (Insight 1): bursty arrivals
+    // fill batches in clumps. Scale the wait by 1/(1+CV).
+    let cv = env.burstiness(pipeline, model);
+    // Portion clocking bounds waiting at one duty cycle (worst case);
+    // the expected wait is half a duty — Eq. 3's worst-case analysis
+    // leaves the other half for execution.
+    let fill_ms = (fill_ms / (1.0 + cv)).min(dag.slo_ms / 4.0);
+
+    let exec_ms = env.profiles.batch_latency(spec, class, c.batch);
+
+    // Queueing when the stage is near saturation (soft penalty; the fill
+    // term already covers the duty-bounded waiting of healthy stages).
+    let cap_qps = c.instances as f64 * env.profiles.curve(spec, class).throughput(c.batch);
+    let rho = (rate / cap_qps.max(1e-9)).min(0.999);
+    let queue_ms = if rho > 0.85 { exec_ms * rho / (1.0 - rho) * 0.15 } else { 0.0 };
+
+    // IO: transfer from upstream's device (Eq. 2 second term).
+    let up_dev = dag.upstream(model).map(|u| cfg[u].device).unwrap_or(dag.source_device);
+    let io_ms = transfer_latency(env, up_dev, c.device, spec.input_bytes, rate);
+
+    fill_ms + exec_ms + queue_ms + io_ms
+}
+
+/// Expected per-query transfer latency between two devices for payloads of
+/// `bytes` at aggregate rate `rate_qps`.
+pub fn transfer_latency(
+    env: &SchedEnv,
+    from: usize,
+    to: usize,
+    bytes: f64,
+    rate_qps: f64,
+) -> Ms {
+    if from == to {
+        return LOCAL_TRANSFER_MS;
+    }
+    // All cross-device traffic traverses the edge<->server link of the edge
+    // endpoint (star topology around the server).
+    let edge = if from == 0 { to } else { from };
+    let bw = env.bw_mbps.get(edge).copied().unwrap_or(0.0);
+    if bw <= 0.0 {
+        return f64::INFINITY;
+    }
+    let per_query = bytes * 8.0 / (bw * 1000.0); // ms
+    let offered = rate_qps * bytes * 8.0 / 1e6; // Mbit/s
+    let rho = (offered / bw).min(0.999);
+    // M/M/1-flavored inflation as the link saturates.
+    per_query * (1.0 + rho / (1.0 - rho))
+}
+
+/// End-to-end worst-path latency of the pipeline (sum over the critical
+/// path of the DAG).
+pub fn est_latency(env: &SchedEnv, pipeline: usize, cfg: &[StageCfg]) -> Ms {
+    let dag = &env.pipelines[pipeline];
+    // Latency to *finish* each node, DAG-propagated.
+    let mut finish = vec![0.0f64; dag.len()];
+    for m in 0..dag.len() {
+        let own = stage_latency(env, pipeline, m, cfg);
+        let up = dag.upstream(m).map(|u| finish[u]).unwrap_or(0.0);
+        finish[m] = up + own;
+    }
+    finish.iter().copied().fold(0.0, f64::max)
+}
+
+/// Effective-throughput estimate (objects/s reaching sinks on time):
+/// bottleneck capacity ratio along the pipeline applied to the offered
+/// sink rate (compute AND network bottlenecks, Obs. 2).
+pub fn est_throughput(env: &SchedEnv, pipeline: usize, cfg: &[StageCfg]) -> f64 {
+    let dag = &env.pipelines[pipeline];
+    let mut min_ratio: f64 = 1.0;
+    for m in 0..dag.len() {
+        let spec = &dag.models[m].spec;
+        let c = cfg[m];
+        let class = env.cluster.device(c.device).class;
+        let rate = env.rate(pipeline, m).max(1e-9);
+        // Chained-reservation capacity (see cwd::instances_needed).
+        let per_inst =
+            env.profiles.curve(spec, class).throughput(c.batch) * 0.8;
+        let cap = c.instances as f64 * per_inst;
+        min_ratio = min_ratio.min(cap / rate);
+
+        // Network capacity of the inbound hop.
+        let up_dev =
+            dag.upstream(m).map(|u| cfg[u].device).unwrap_or(dag.source_device);
+        if up_dev != c.device {
+            let edge = if up_dev == 0 { c.device } else { up_dev };
+            let bw = env.bw_mbps.get(edge).copied().unwrap_or(0.0);
+            let offered = rate * spec.input_bytes * 8.0 / 1e6;
+            if offered > 0.0 {
+                min_ratio = min_ratio.min(bw / offered);
+            }
+        }
+    }
+    let sink_rate: f64 = (0..dag.len())
+        .filter(|&m| dag.models[m].downstream.is_empty())
+        .map(|m| env.rate(pipeline, m))
+        .sum();
+    sink_rate * min_ratio.clamp(0.0, 1.0)
+}
+
+/// Aggregate GPU busy time (ms per second of wall time) the pipeline's
+/// config consumes — CWD's tie-break objective: configurations that hold
+/// throughput while freeing GPU time are preferred (resource efficiency).
+pub fn est_gpu_cost(env: &SchedEnv, pipeline: usize, cfg: &[StageCfg]) -> f64 {
+    let dag = &env.pipelines[pipeline];
+    (0..dag.len())
+        .map(|m| {
+            let spec = &dag.models[m].spec;
+            let c = cfg[m];
+            let class = env.cluster.device(c.device).class;
+            let lat = env.profiles.batch_latency(spec, class, c.batch);
+            env.rate(pipeline, m) * lat / c.batch.max(1) as f64
+        })
+        .sum()
+}
+
+/// Estimated GPU memory demand of a stage config on its device (Eq. 4 input
+/// for CWD's coarse feasibility check; CORAL enforces exactly).
+pub fn stage_memory_mb(env: &SchedEnv, pipeline: usize, model: usize, c: StageCfg) -> f64 {
+    let spec = &env.pipelines[pipeline].models[model].spec;
+    c.instances as f64 * spec.memory_mb(c.batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    fn fixture() -> (Cluster, ProfileStore, Vec<crate::pipeline::PipelineDag>) {
+        (Cluster::small(), ProfileStore::analytic(), standard_pipelines(2))
+    }
+
+    fn cfg_all(dag_len: usize, device: usize, batch: u32) -> Vec<StageCfg> {
+        vec![StageCfg { device, batch, instances: 1 }; dag_len]
+    }
+
+    #[test]
+    fn bigger_batch_adds_fill_latency() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![100.0; 3]);
+        let lat1 = est_latency(&env, 0, &cfg_all(3, 0, 1));
+        let lat32 = est_latency(&env, 0, &cfg_all(3, 0, 32));
+        assert!(lat32 > lat1, "fill wait must grow: {lat1} vs {lat32}");
+    }
+
+    #[test]
+    fn outage_makes_latency_infinite() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![0.0; 3]);
+        // Pipeline 0's source is device 0 == server in `standard_pipelines`
+        // fixture? source_device = 0 => local. Use pipeline 1 (device 1).
+        let lat = est_latency(&env, 1, &cfg_all(3, 0, 4));
+        assert!(lat.is_infinite());
+    }
+
+    #[test]
+    fn throughput_capped_by_network() {
+        let (cl, pf, pl) = fixture();
+        let rich = SchedEnv::bootstrap(&cl, &pf, &pl, vec![1000.0; 3]);
+        let poor = SchedEnv::bootstrap(&cl, &pf, &pl, vec![1.0; 3]);
+        let cfg = cfg_all(3, 0, 8);
+        // Pipeline 1 sources on device 1 -> server placement crosses link.
+        let t_rich = est_throughput(&rich, 1, &cfg);
+        let t_poor = est_throughput(&poor, 1, &cfg);
+        assert!(t_poor < t_rich * 0.2, "rich {t_rich} poor {t_poor}");
+    }
+
+    #[test]
+    fn more_instances_more_throughput_when_saturated() {
+        let (cl, pf, pl) = fixture();
+        let mut env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![1000.0; 3]);
+        // Crank the workload so one instance saturates.
+        for o in env.obs[0].iter_mut() {
+            o.rate_qps *= 50.0;
+        }
+        let mut one = cfg_all(3, 0, 8);
+        let mut four = cfg_all(3, 0, 8);
+        for c in four.iter_mut() {
+            c.instances = 4;
+        }
+        let _ = &mut one;
+        assert!(est_throughput(&env, 0, &four) > est_throughput(&env, 0, &one));
+    }
+
+    #[test]
+    fn local_transfer_is_cheap() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![10.0; 3]);
+        assert!(transfer_latency(&env, 1, 1, 1e6, 10.0) < 0.1);
+        assert!(transfer_latency(&env, 1, 0, 1e6, 10.0) > 100.0);
+    }
+
+    #[test]
+    fn edge_placement_avoids_network_term() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![5.0; 3]);
+        // Pipeline 1 (source device 1): detector on edge vs on server under
+        // a weak link — edge placement must estimate lower latency despite
+        // slower compute.
+        let mut on_server = cfg_all(3, 0, 2);
+        let mut on_edge = cfg_all(3, 0, 2);
+        on_edge[0].device = 1;
+        on_server[0].instances = 1;
+        let ls = est_latency(&env, 1, &on_server);
+        let le = est_latency(&env, 1, &on_edge);
+        assert!(le < ls, "edge {le} server {ls}");
+    }
+}

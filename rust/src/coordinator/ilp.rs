@@ -1,0 +1,126 @@
+//! Brute-force reference solver for *tiny* instances of the paper's ILP
+//! (§II, Eq. 1-5). The full problem is NP-hard with complexity
+//! O(D·(BZ·G)^M) (§V-1); this enumerator is only usable for M ≤ ~4 and is
+//! used in tests to certify that CWD's greedy result is within a bounded
+//! factor of the true optimum — an assurance the paper argues but
+//! does not ship.
+
+use super::estimator::{est_latency, est_throughput};
+use super::types::{SchedEnv, StageCfg};
+use crate::profiles::BATCH_SIZES;
+
+/// Exhaustive search over (device, batch) per stage with rate-matched
+/// instance counts; returns the best config and its throughput.
+/// `devices` restricts the candidate hosts (usually [0, source_device]).
+pub fn optimal_config(
+    env: &SchedEnv,
+    pipeline: usize,
+    devices: &[usize],
+) -> Option<(Vec<StageCfg>, f64)> {
+    let dag = &env.pipelines[pipeline];
+    let n = dag.len();
+    assert!(n <= 5, "brute force limited to tiny pipelines (got {n})");
+
+    let per_stage: Vec<Vec<StageCfg>> = (0..n)
+        .map(|m| {
+            let mut opts = Vec::new();
+            for &d in devices {
+                for &bz in BATCH_SIZES.iter() {
+                    let spec = &dag.models[m].spec;
+                    let class = env.cluster.device(d).class;
+                    let cap = env.profiles.curve(spec, class).throughput(bz);
+                    let instances = ((env.rate(pipeline, m) / cap.max(1e-9))
+                        .ceil() as u32)
+                        .clamp(1, 16);
+                    opts.push(StageCfg { device: d, batch: bz, instances });
+                }
+            }
+            opts
+        })
+        .collect();
+
+    let mut best: Option<(Vec<StageCfg>, f64)> = None;
+    let mut idx = vec![0usize; n];
+    loop {
+        let cfg: Vec<StageCfg> =
+            (0..n).map(|m| per_stage[m][idx[m]]).collect();
+        if est_latency(env, pipeline, &cfg) <= dag.slo_ms / 2.0 {
+            let thrpt = est_throughput(env, pipeline, &cfg);
+            if best.as_ref().map(|(_, b)| thrpt > *b).unwrap_or(true) {
+                best = Some((cfg, thrpt));
+            }
+        }
+        // Odometer increment.
+        let mut k = 0;
+        loop {
+            idx[k] += 1;
+            if idx[k] < per_stage[k].len() {
+                break;
+            }
+            idx[k] = 0;
+            k += 1;
+            if k == n {
+                return best;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coordinator::cwd::{cwd, CwdParams};
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    #[test]
+    fn greedy_within_bounded_factor_of_optimal() {
+        let cluster = Cluster::paper_testbed();
+        let profiles = ProfileStore::analytic();
+        let pipelines: Vec<_> = standard_pipelines(1)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device = 2;
+                p
+            })
+            .collect();
+        for bw in [5.0, 25.0, 100.0] {
+            let env = crate::coordinator::types::SchedEnv::bootstrap(
+                &cluster,
+                &profiles,
+                &pipelines,
+                vec![bw; cluster.devices.len()],
+            );
+            let greedy = &cwd(&env, &CwdParams::default())[0];
+            let greedy_thrpt = est_throughput(&env, 0, &greedy.cfg);
+            let (_, opt_thrpt) =
+                optimal_config(&env, 0, &[0, 2]).expect("feasible optimum");
+            assert!(
+                greedy_thrpt >= 0.55 * opt_thrpt,
+                "bw={bw}: greedy {greedy_thrpt:.2} < 55% of optimal {opt_thrpt:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimum_respects_slo() {
+        let cluster = Cluster::paper_testbed();
+        let profiles = ProfileStore::analytic();
+        let pipelines: Vec<_> = standard_pipelines(1)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device = 1;
+                p
+            })
+            .collect();
+        let env = crate::coordinator::types::SchedEnv::bootstrap(
+            &cluster,
+            &profiles,
+            &pipelines,
+            vec![50.0; cluster.devices.len()],
+        );
+        let (cfg, _) = optimal_config(&env, 0, &[0, 1]).unwrap();
+        assert!(est_latency(&env, 0, &cfg) <= pipelines[0].slo_ms / 2.0 + 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's system contribution (§III): CWD cross-device workload
+//! distribution, CORAL co-location spatiotemporal scheduling, the runtime
+//! horizontal autoscaler, and the controller loop that drives them —
+//! plus the three SOTA baselines (§IV-A4) implemented on the same
+//! substrate, and a brute-force ILP reference for tiny instances.
+
+pub mod autoscaler;
+pub mod baselines;
+pub mod controller;
+pub mod coral;
+pub mod cwd;
+pub mod estimator;
+pub mod ilp;
+pub mod stream;
+pub mod types;
+
+pub use controller::Controller;
+pub use types::{
+    Assignment, GpuBinding, GpuId, ModelObs, Plan, SchedEnv, Scheduler,
+    SchedulerKind, StageCfg, TemporalSlot,
+};

@@ -1,0 +1,261 @@
+//! The *inference stream* abstraction (paper §III-C1, Fig. 5).
+//!
+//! A GPU's capacity is divided into concurrently executing **streams**; each
+//! stream is a temporal sequence of **portions**. A portion's length is the
+//! batch execution time of the instance occupying it; its width is the
+//! compute fraction the instance needs. Each stream carries a **duty
+//! cycle** (= SLO/2 of the pipeline that first claimed it): after the last
+//! portion, GPU access cycles back to the first.
+
+use super::types::GpuId;
+use crate::Ms;
+
+/// A scheduled execution portion within a stream.
+#[derive(Clone, Copy, Debug)]
+pub struct Portion {
+    pub start_ms: Ms,
+    pub end_ms: Ms,
+    pub width: f64,
+    /// (pipeline, model, instance) owning the portion.
+    pub owner: (usize, usize, u32),
+}
+
+impl Portion {
+    pub fn duration(&self) -> Ms {
+        self.end_ms - self.start_ms
+    }
+
+    pub fn overlaps(&self, other: &Portion) -> bool {
+        self.start_ms < other.end_ms - 1e-9 && other.start_ms < self.end_ms - 1e-9
+    }
+}
+
+/// A free interval available for placement within a stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FreePortion {
+    pub gpu: GpuId,
+    pub stream: usize,
+    pub start_ms: Ms,
+    pub end_ms: Ms,
+}
+
+impl FreePortion {
+    pub fn len(&self) -> Ms {
+        self.end_ms - self.start_ms
+    }
+
+    /// Can a portion of `dur` starting no earlier than `earliest` fit?
+    /// Returns the feasible start time (Algorithm 2 line 16 check).
+    pub fn fit(&self, earliest: Ms, dur: Ms) -> Option<Ms> {
+        let start = self.start_ms.max(earliest);
+        (start + dur <= self.end_ms + 1e-9).then_some(start)
+    }
+}
+
+/// One inference stream.
+#[derive(Clone, Debug)]
+pub struct Stream {
+    pub gpu: GpuId,
+    pub index: usize,
+    /// 0 until the first instance claims the stream (line 19-20).
+    pub duty_cycle_ms: Ms,
+    pub portions: Vec<Portion>,
+    /// Peak concurrent width of the stream (for the GPU util sum, Eq. 5).
+    pub max_width: f64,
+    /// Peak intermediate memory of any portion (temporal sharing, Eq. 4).
+    pub max_inter_mb: f64,
+}
+
+impl Stream {
+    pub fn new(gpu: GpuId, index: usize) -> Stream {
+        Stream {
+            gpu,
+            index,
+            duty_cycle_ms: 0.0,
+            portions: Vec::new(),
+            max_width: 0.0,
+            max_inter_mb: 0.0,
+        }
+    }
+
+    /// Free intervals within the horizon (duty cycle if set, else `horizon`).
+    pub fn free_portions(&self, horizon: Ms) -> Vec<FreePortion> {
+        let end = if self.duty_cycle_ms > 0.0 { self.duty_cycle_ms } else { horizon };
+        let mut sorted: Vec<&Portion> = self.portions.iter().collect();
+        sorted.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+        let mut free = Vec::new();
+        let mut cursor = 0.0;
+        for p in sorted {
+            if p.start_ms > cursor + 1e-9 {
+                free.push(FreePortion {
+                    gpu: self.gpu,
+                    stream: self.index,
+                    start_ms: cursor,
+                    end_ms: p.start_ms,
+                });
+            }
+            cursor = cursor.max(p.end_ms);
+        }
+        if cursor + 1e-9 < end {
+            free.push(FreePortion {
+                gpu: self.gpu,
+                stream: self.index,
+                start_ms: cursor,
+                end_ms: end,
+            });
+        }
+        free
+    }
+
+    /// Insert a portion; panics if it overlaps an existing one (scheduler
+    /// bug — CORAL must only place into free portions).
+    pub fn insert(&mut self, p: Portion, inter_mb: f64) {
+        for q in &self.portions {
+            assert!(
+                !p.overlaps(q),
+                "portion overlap on {:?}/{}: {:?} vs {:?}",
+                self.gpu,
+                self.index,
+                p,
+                q
+            );
+        }
+        self.max_width = self.max_width.max(p.width);
+        self.max_inter_mb = self.max_inter_mb.max(inter_mb);
+        self.portions.push(p);
+    }
+
+    /// Total occupied time within the duty cycle.
+    pub fn occupancy_ms(&self) -> Ms {
+        self.portions.iter().map(|p| p.duration()).sum()
+    }
+
+    /// Occupancy fraction of the duty cycle (1.0 = full).
+    pub fn occupancy(&self) -> f64 {
+        if self.duty_cycle_ms <= 0.0 {
+            return 0.0;
+        }
+        self.occupancy_ms() / self.duty_cycle_ms
+    }
+}
+
+/// All streams of one GPU plus its spatial budgets (Eq. 4/5 state).
+#[derive(Clone, Debug)]
+pub struct GpuStreams {
+    pub gpu: GpuId,
+    pub mem_mb: f64,
+    pub util_cap: f64,
+    pub streams: Vec<Stream>,
+    /// Total persistent weight memory of placed instances (W_g).
+    pub weight_mb: f64,
+}
+
+impl GpuStreams {
+    pub fn new(gpu: GpuId, mem_mb: f64, util_cap: f64, n_streams: usize) -> GpuStreams {
+        GpuStreams {
+            gpu,
+            mem_mb,
+            util_cap,
+            streams: (0..n_streams).map(|i| Stream::new(gpu, i)).collect(),
+            weight_mb: 0.0,
+        }
+    }
+
+    /// Current intermediate memory (Σ per-stream max — temporal sharing).
+    pub fn inter_mb(&self) -> f64 {
+        self.streams.iter().map(|s| s.max_inter_mb).sum()
+    }
+
+    /// Current aggregate utilization (Σ per-stream peak width, Eq. 5 as the
+    /// paper's line 15 evaluates it).
+    pub fn util(&self) -> f64 {
+        self.streams.iter().map(|s| s.max_width).sum()
+    }
+
+    /// Would adding (weight, inter, width) on stream `s` stay within caps?
+    pub fn admits(&self, s: usize, weight_mb: f64, inter_mb: f64, width: f64) -> bool {
+        let st = &self.streams[s];
+        let new_inter = self.inter_mb() - st.max_inter_mb + st.max_inter_mb.max(inter_mb);
+        let new_util = self.util() - st.max_width + st.max_width.max(width);
+        self.weight_mb + weight_mb + new_inter <= self.mem_mb + 1e-9
+            && new_util <= self.util_cap + 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuId {
+        GpuId { device: 0, gpu: 0 }
+    }
+
+    fn portion(s: f64, e: f64) -> Portion {
+        Portion { start_ms: s, end_ms: e, width: 0.3, owner: (0, 0, 0) }
+    }
+
+    #[test]
+    fn free_portions_of_empty_stream() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        let free = s.free_portions(1000.0);
+        assert_eq!(free.len(), 1);
+        assert_eq!(free[0].start_ms, 0.0);
+        assert_eq!(free[0].end_ms, 100.0);
+    }
+
+    #[test]
+    fn free_portions_between_occupied() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        s.insert(portion(10.0, 30.0), 5.0);
+        s.insert(portion(50.0, 60.0), 8.0);
+        let free = s.free_portions(1000.0);
+        assert_eq!(free.len(), 3);
+        assert_eq!((free[0].start_ms, free[0].end_ms), (0.0, 10.0));
+        assert_eq!((free[1].start_ms, free[1].end_ms), (30.0, 50.0));
+        assert_eq!((free[2].start_ms, free[2].end_ms), (60.0, 100.0));
+        assert_eq!(s.max_inter_mb, 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn overlapping_insert_panics() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        s.insert(portion(10.0, 30.0), 1.0);
+        s.insert(portion(20.0, 40.0), 1.0);
+    }
+
+    #[test]
+    fn fit_respects_earliest() {
+        let f = FreePortion { gpu: gpu(), stream: 0, start_ms: 10.0, end_ms: 50.0 };
+        assert_eq!(f.fit(0.0, 20.0), Some(10.0));
+        assert_eq!(f.fit(25.0, 20.0), Some(25.0));
+        assert_eq!(f.fit(35.0, 20.0), None);
+        assert_eq!(f.fit(0.0, 45.0), None);
+    }
+
+    #[test]
+    fn admits_memory_and_util() {
+        let mut g = GpuStreams::new(gpu(), 100.0, 1.0, 2);
+        assert!(g.admits(0, 50.0, 20.0, 0.5));
+        g.weight_mb = 50.0;
+        g.streams[0].max_inter_mb = 20.0;
+        g.streams[0].max_width = 0.5;
+        // Same stream, smaller new portion: shares the stream peak.
+        assert!(g.admits(0, 20.0, 10.0, 0.3));
+        // Other stream: adds to both sums.
+        assert!(g.admits(1, 20.0, 10.0, 0.3));
+        assert!(!g.admits(1, 40.0, 0.0, 0.3)); // 50+40+20 > 100
+        assert!(!g.admits(1, 0.0, 0.0, 0.6)); // 0.5+0.6 > 1.0
+    }
+
+    #[test]
+    fn occupancy_tracks_portions() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        s.insert(portion(0.0, 25.0), 0.0);
+        assert!((s.occupancy() - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,317 @@
+//! Shared scheduling types: the configuration vocabulary of the ILP
+//! (paper §II: `[bz, d, g, t]` per model) and the `Plan` all schedulers
+//! produce for the simulator / serving stack to execute.
+
+use crate::cluster::Cluster;
+use crate::pipeline::PipelineDag;
+use crate::profiles::ProfileStore;
+use crate::Ms;
+
+/// Globally unique GPU identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId {
+    pub device: usize,
+    pub gpu: usize,
+}
+
+/// CORAL temporal placement of one instance (paper §III-C: a *portion* of
+/// an inference *stream*).
+#[derive(Clone, Copy, Debug)]
+pub struct TemporalSlot {
+    pub stream: usize,
+    /// Offset of the portion within the stream's duty cycle, ms.
+    pub start_ms: Ms,
+    /// Portion length = batch execution latency, ms.
+    pub duration_ms: Ms,
+    /// Stream duty cycle this instance executes under (= SLO/2), ms.
+    pub duty_cycle_ms: Ms,
+}
+
+/// One instance's GPU binding. Baselines produce spatial-only bindings
+/// (`temporal: None`) — exactly the gap the paper's Table I highlights.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuBinding {
+    pub gpu: GpuId,
+    pub width: f64,
+    pub temporal: Option<TemporalSlot>,
+}
+
+/// Per-stage configuration chosen by workload distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageCfg {
+    pub device: usize,
+    pub batch: u32,
+    pub instances: u32,
+}
+
+/// Scheduled deployment of one (pipeline, model).
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub pipeline: usize,
+    pub model: usize,
+    pub cfg: StageCfg,
+    /// One binding per instance (len == cfg.instances when fully placed).
+    pub bindings: Vec<GpuBinding>,
+}
+
+/// Full deployment plan for the cluster.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub assignments: Vec<Assignment>,
+    /// Instances CORAL could not fit (run contended, without reservation).
+    pub unplaced: usize,
+}
+
+impl Plan {
+    pub fn assignment(&self, pipeline: usize, model: usize) -> Option<&Assignment> {
+        self.assignments
+            .iter()
+            .find(|a| a.pipeline == pipeline && a.model == model)
+    }
+
+    /// Number of edge/server split points of a pipeline in this plan
+    /// (Insight 3: fewer is better).
+    pub fn split_points(&self, pipeline: usize, dag: &PipelineDag) -> usize {
+        let device_of = |m: usize| {
+            self.assignment(pipeline, m).map(|a| a.cfg.device).unwrap_or(0)
+        };
+        let mut splits = 0;
+        for m in 0..dag.len() {
+            if let Some(up) = dag.upstream(m) {
+                if device_of(up) != device_of(m) {
+                    splits += 1;
+                }
+            }
+        }
+        splits
+    }
+
+    /// Total GPU memory the plan allocates (Fig. 6c metric). Temporal
+    /// sharing means instances in the same stream share intermediate
+    /// memory (max instead of sum) — the paper's key memory win.
+    pub fn total_memory_mb(&self, pipelines: &[PipelineDag]) -> f64 {
+        use std::collections::HashMap;
+        let mut weights = 0.0;
+        // (gpu, stream) -> max intermediate; spatial-only bindings get a
+        // unique pseudo-stream so they sum (no sharing).
+        let mut inter: HashMap<(GpuId, usize), f64> = HashMap::new();
+        let mut pseudo = 10_000usize;
+        for a in &self.assignments {
+            let spec = &pipelines[a.pipeline].models[a.model].spec;
+            for b in &a.bindings {
+                weights += spec.weight_mem_mb;
+                let im = spec.inter_mem_mb * a.cfg.batch as f64;
+                let key = match b.temporal {
+                    Some(t) => (b.gpu, t.stream),
+                    None => {
+                        pseudo += 1;
+                        (b.gpu, pseudo)
+                    }
+                };
+                let e = inter.entry(key).or_insert(0.0);
+                *e = e.max(im);
+            }
+        }
+        weights + inter.values().sum::<f64>()
+    }
+}
+
+/// Observed per-model workload statistics (from the KB in live runs).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelObs {
+    /// Request rate entering the model, queries/s.
+    pub rate_qps: f64,
+    /// CV of inter-arrival gaps (paper's burstiness, Insight 1).
+    pub burstiness: f64,
+}
+
+/// Everything a scheduler sees when planning (paper step 1-2 inputs).
+pub struct SchedEnv<'a> {
+    pub cluster: &'a Cluster,
+    pub profiles: &'a ProfileStore,
+    pub pipelines: &'a [PipelineDag],
+    /// obs[p][m] — per pipeline, per model.
+    pub obs: Vec<Vec<ModelObs>>,
+    /// Current bandwidth device <-> server, Mbit/s (index = device id).
+    pub bw_mbps: Vec<f64>,
+    /// IO-ratio slack factor α in ToEdge's test (paper line 27).
+    pub alpha: f64,
+}
+
+impl<'a> SchedEnv<'a> {
+    /// Build with rates derived from pipeline structure (no KB yet): the
+    /// cold-start estimate the Controller uses on round one.
+    pub fn bootstrap(
+        cluster: &'a Cluster,
+        profiles: &'a ProfileStore,
+        pipelines: &'a [PipelineDag],
+        bw_mbps: Vec<f64>,
+    ) -> SchedEnv<'a> {
+        let obs = pipelines
+            .iter()
+            .map(|p| {
+                let rates = p.request_rates(1.0);
+                rates
+                    .iter()
+                    .enumerate()
+                    .map(|(m, &r)| ModelObs {
+                        rate_qps: r,
+                        // Downstream stages inherit detector-driven
+                        // burstiness; entry stage is clocked (low CV).
+                        burstiness: if m == 0 { 0.1 } else { 1.2 },
+                    })
+                    .collect()
+            })
+            .collect();
+        SchedEnv { cluster, profiles, pipelines, obs, bw_mbps, alpha: 1.2 }
+    }
+
+    pub fn rate(&self, pipeline: usize, model: usize) -> f64 {
+        self.obs[pipeline][model].rate_qps
+    }
+
+    pub fn burstiness(&self, pipeline: usize, model: usize) -> f64 {
+        self.obs[pipeline][model].burstiness
+    }
+}
+
+/// Scheduler interface all five systems implement.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn plan(&mut self, env: &SchedEnv) -> Plan;
+}
+
+/// Selector used by the CLI / bench harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    OctopInf,
+    /// Ablation: CWD without CORAL (spatial best-fit only) — Fig. 10.
+    OctopInfNoCoral,
+    /// Ablation: static batches + CORAL — Fig. 10.
+    OctopInfStaticBatch,
+    /// Ablation: server-only dynamic batching + CORAL — Fig. 10.
+    OctopInfServerOnly,
+    Distream,
+    Jellyfish,
+    Rim,
+}
+
+impl SchedulerKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::OctopInf => "octopinf",
+            SchedulerKind::OctopInfNoCoral => "octopinf-no-coral",
+            SchedulerKind::OctopInfStaticBatch => "octopinf-static-batch",
+            SchedulerKind::OctopInfServerOnly => "octopinf-server-only",
+            SchedulerKind::Distream => "distream",
+            SchedulerKind::Jellyfish => "jellyfish",
+            SchedulerKind::Rim => "rim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        Some(match s {
+            "octopinf" => SchedulerKind::OctopInf,
+            "octopinf-no-coral" | "no-coral" => SchedulerKind::OctopInfNoCoral,
+            "octopinf-static-batch" | "static-batch" => {
+                SchedulerKind::OctopInfStaticBatch
+            }
+            "octopinf-server-only" | "server-only" => {
+                SchedulerKind::OctopInfServerOnly
+            }
+            "distream" => SchedulerKind::Distream,
+            "jellyfish" => SchedulerKind::Jellyfish,
+            "rim" => SchedulerKind::Rim,
+            _ => return None,
+        })
+    }
+
+    pub fn all_main() -> [SchedulerKind; 4] {
+        [
+            SchedulerKind::OctopInf,
+            SchedulerKind::Distream,
+            SchedulerKind::Jellyfish,
+            SchedulerKind::Rim,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::standard_pipelines;
+
+    #[test]
+    fn bootstrap_env_rates_match_dag() {
+        let cluster = Cluster::small();
+        let profiles = ProfileStore::analytic();
+        let pipelines = standard_pipelines(2);
+        let env = SchedEnv::bootstrap(&cluster, &profiles, &pipelines, vec![1000.0; 3]);
+        assert_eq!(env.obs.len(), 2);
+        assert!((env.rate(0, 0) - 15.0).abs() < 1e-9);
+        assert!(env.rate(0, 1) > env.rate(0, 0)); // fanout amplifies
+    }
+
+    #[test]
+    fn scheduler_kind_roundtrip() {
+        for k in [
+            SchedulerKind::OctopInf,
+            SchedulerKind::Distream,
+            SchedulerKind::Jellyfish,
+            SchedulerKind::Rim,
+            SchedulerKind::OctopInfNoCoral,
+        ] {
+            assert_eq!(SchedulerKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(SchedulerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn split_point_count() {
+        let pipelines = standard_pipelines(1);
+        let mk = |devices: [usize; 3]| Plan {
+            assignments: (0..3)
+                .map(|m| Assignment {
+                    pipeline: 0,
+                    model: m,
+                    cfg: StageCfg { device: devices[m], batch: 1, instances: 1 },
+                    bindings: vec![],
+                })
+                .collect(),
+            unplaced: 0,
+        };
+        assert_eq!(mk([0, 0, 0]).split_points(0, &pipelines[0]), 0);
+        assert_eq!(mk([1, 0, 0]).split_points(0, &pipelines[0]), 2);
+        assert_eq!(mk([1, 1, 1]).split_points(0, &pipelines[0]), 0);
+    }
+
+    #[test]
+    fn temporal_sharing_reduces_memory() {
+        let pipelines = standard_pipelines(1);
+        let gpu = GpuId { device: 0, gpu: 0 };
+        let slot = |s| TemporalSlot {
+            stream: s,
+            start_ms: 0.0,
+            duration_ms: 5.0,
+            duty_cycle_ms: 100.0,
+        };
+        let mk = |temporal: bool| Plan {
+            assignments: (0..3)
+                .map(|m| Assignment {
+                    pipeline: 0,
+                    model: m,
+                    cfg: StageCfg { device: 0, batch: 8, instances: 1 },
+                    bindings: vec![GpuBinding {
+                        gpu,
+                        width: 0.2,
+                        temporal: temporal.then(|| slot(0)),
+                    }],
+                })
+                .collect(),
+            unplaced: 0,
+        };
+        let shared = mk(true).total_memory_mb(&pipelines);
+        let unshared = mk(false).total_memory_mb(&pipelines);
+        assert!(shared < unshared, "shared {shared} unshared {unshared}");
+    }
+}

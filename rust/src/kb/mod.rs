@@ -1,0 +1,181 @@
+//! Knowledge Base: the in-memory time-series store standing in for the
+//! paper's PostgreSQL KB (§III-A). Device Agents push container metrics;
+//! the Controller queries windows for scheduling (rates, burstiness,
+//! bandwidth, utilization).
+
+use std::collections::HashMap;
+
+use crate::util::stats::Summary;
+use crate::Ms;
+
+/// One metric sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub t_ms: Ms,
+    pub value: f64,
+}
+
+/// A named, bounded time series.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    samples: std::collections::VecDeque<Sample>,
+    cap: usize,
+}
+
+impl Series {
+    fn new(cap: usize) -> Series {
+        Series { samples: Default::default(), cap }
+    }
+
+    fn push(&mut self, s: Sample) {
+        self.samples.push_back(s);
+        while self.samples.len() > self.cap {
+            self.samples.pop_front();
+        }
+    }
+
+    /// Samples within the trailing window ending at `now_ms`.
+    pub fn window(&self, now_ms: Ms, window_ms: Ms) -> impl Iterator<Item = &Sample> {
+        let lo = now_ms - window_ms;
+        self.samples.iter().filter(move |s| s.t_ms >= lo && s.t_ms <= now_ms)
+    }
+
+    pub fn latest(&self) -> Option<Sample> {
+        self.samples.back().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Metric key: (entity, metric-name), e.g. ("traffic0/object_det", "rate").
+pub type Key = (String, String);
+
+/// The Knowledge Base.
+#[derive(Clone, Debug, Default)]
+pub struct KnowledgeBase {
+    series: HashMap<Key, Series>,
+    default_cap: usize,
+}
+
+impl KnowledgeBase {
+    pub fn new() -> KnowledgeBase {
+        KnowledgeBase { series: HashMap::new(), default_cap: 4096 }
+    }
+
+    pub fn push(&mut self, entity: &str, metric: &str, t_ms: Ms, value: f64) {
+        let cap = self.default_cap;
+        self.series
+            .entry((entity.to_string(), metric.to_string()))
+            .or_insert_with(|| Series::new(cap))
+            .push(Sample { t_ms, value });
+    }
+
+    pub fn series(&self, entity: &str, metric: &str) -> Option<&Series> {
+        self.series.get(&(entity.to_string(), metric.to_string()))
+    }
+
+    /// Mean of a metric over the trailing window.
+    pub fn window_mean(
+        &self,
+        entity: &str,
+        metric: &str,
+        now_ms: Ms,
+        window_ms: Ms,
+    ) -> Option<f64> {
+        let s = self.series(entity, metric)?;
+        let mut sum = Summary::new();
+        for smp in s.window(now_ms, window_ms) {
+            sum.push(smp.value);
+        }
+        (sum.count() > 0).then(|| sum.mean())
+    }
+
+    /// CV of a metric over the trailing window (burstiness queries).
+    pub fn window_cv(
+        &self,
+        entity: &str,
+        metric: &str,
+        now_ms: Ms,
+        window_ms: Ms,
+    ) -> Option<f64> {
+        let s = self.series(entity, metric)?;
+        let mut sum = Summary::new();
+        for smp in s.window(now_ms, window_ms) {
+            sum.push(smp.value);
+        }
+        (sum.count() > 1).then(|| sum.cv())
+    }
+
+    pub fn latest(&self, entity: &str, metric: &str) -> Option<f64> {
+        self.series(entity, metric)?.latest().map(|s| s.value)
+    }
+
+    /// All entities carrying a given metric.
+    pub fn entities_with(&self, metric: &str) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .series
+            .keys()
+            .filter(|(_, m)| m == metric)
+            .map(|(e, _)| e.as_str())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..10 {
+            kb.push("p0/det", "rate", i as f64 * 1000.0, i as f64);
+        }
+        assert_eq!(kb.latest("p0/det", "rate"), Some(9.0));
+        let mean = kb.window_mean("p0/det", "rate", 9000.0, 4000.0).unwrap();
+        assert!((mean - 7.0).abs() < 1e-9); // samples 5..=9 avg
+    }
+
+    #[test]
+    fn window_excludes_old() {
+        let mut kb = KnowledgeBase::new();
+        kb.push("e", "m", 0.0, 100.0);
+        kb.push("e", "m", 10_000.0, 1.0);
+        let mean = kb.window_mean("e", "m", 10_000.0, 500.0).unwrap();
+        assert_eq!(mean, 1.0);
+    }
+
+    #[test]
+    fn missing_series_is_none() {
+        let kb = KnowledgeBase::new();
+        assert!(kb.window_mean("x", "y", 0.0, 1.0).is_none());
+        assert!(kb.latest("x", "y").is_none());
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let mut kb = KnowledgeBase::new();
+        for i in 0..10_000 {
+            kb.push("e", "m", i as f64, 0.0);
+        }
+        assert!(kb.series("e", "m").unwrap().len() <= 4096);
+    }
+
+    #[test]
+    fn entities_listing() {
+        let mut kb = KnowledgeBase::new();
+        kb.push("b", "rate", 0.0, 1.0);
+        kb.push("a", "rate", 0.0, 1.0);
+        kb.push("a", "util", 0.0, 1.0);
+        assert_eq!(kb.entities_with("rate"), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,38 @@
+//! # OctopInf — workload-aware inference serving for Edge Video Analytics
+//!
+//! From-scratch reproduction of *OCTOPINF: Workload-Aware Inference Serving
+//! for Edge Video Analytics* (Nguyen et al., IEEE PerCom 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   [`coordinator`] (CWD workload distributor, CORAL spatiotemporal GPU
+//!   scheduler, horizontal autoscaler, controller loop), the baselines it is
+//!   evaluated against, plus every substrate the evaluation needs
+//!   ([`cluster`], [`network`], [`workload`], [`profiles`], [`sim`], [`kb`]).
+//! - **Layer 2** — JAX models (`python/compile/model.py`) AOT-lowered to HLO
+//!   text in `artifacts/`, loaded at runtime by [`runtime`].
+//! - **Layer 1** — Pallas kernels (`python/compile/kernels/`) that carry the
+//!   models' FLOPs.
+//!
+//! Python never runs on the request path: [`serving`] drives real inference
+//! purely through PJRT-compiled artifacts.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod kb;
+pub mod metrics;
+pub mod network;
+pub mod pipeline;
+pub mod profiles;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Milliseconds, the time unit used across the scheduler and simulator.
+pub type Ms = f64;
+/// Bytes, the data-size unit used for IO-ratio and transfer modelling.
+pub type Bytes = f64;

@@ -1,0 +1,217 @@
+//! `octopinf` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   profile   — execute every AOT artifact via PJRT, write profiles.tsv
+//!   simulate  — run one scheduler over a scenario, print metrics
+//!   figure N  — regenerate a paper figure/table (6..11, or `1` for Tab. I)
+//!   serve     — stand up the real PJRT serving stack on synthetic traffic
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use octopinf::config::ExperimentConfig;
+use octopinf::coordinator::SchedulerKind;
+use octopinf::experiments;
+use octopinf::runtime::{default_artifacts_dir, Runtime};
+use octopinf::serving::{serve, ModelServeCfg, Request};
+use octopinf::sim::{run as sim_run, Scenario};
+use octopinf::util::cli::Args;
+use octopinf::util::table::{fnum, Table};
+
+const USAGE: &str = "usage: octopinf <profile|simulate|figure|serve> [options]
+  profile  [--reps 5] [--out artifacts/profiles.tsv]
+  simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke]
+           [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
+           [--seed 42] [--duration-min N]
+  figure   <1|6|7|8|9|10|11> [--quick]
+  serve    [--duration-s 10] [--fps 30] [--slo-ms 200]";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match cmd.as_str() {
+        "profile" => cmd_profile(&args),
+        "simulate" => cmd_simulate(&args),
+        "figure" => cmd_figure(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Measure real PJRT batch latencies for every artifact.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dir = default_artifacts_dir();
+    let reps = args.get_usize("reps", 3);
+    // Interpret-mode detector convs are slow on CPU at large batches; the
+    // affine fit only needs a few points (BatchCurve::fit extrapolates).
+    let max_batch = args.get_usize("max-batch", 8);
+    let out = args.get_or("out", "artifacts/profiles.tsv").to_string();
+    let mut rt = Runtime::new(&dir)?;
+    let models: Vec<String> =
+        rt.models().into_iter().map(String::from).collect();
+    let mut t = Table::new(vec!["family", "batch", "lat_ms"]);
+    let mut tsv = String::from("family\tbatch\tlat_ms\n");
+    for model in &models {
+        let batches: Vec<usize> = rt
+            .manifest
+            .batches(model)
+            .into_iter()
+            .filter(|&b| b <= max_batch)
+            .collect();
+        for batch in batches {
+            let ms = rt.profile(model, batch, reps)?;
+            t.row(vec![model.clone(), batch.to_string(), fnum(ms, 3)]);
+            tsv.push_str(&format!("{model}\t{batch}\t{ms:.4}\n"));
+        }
+    }
+    std::fs::write(&out, tsv)?;
+    println!("{}", t.to_markdown());
+    println!("\nwrote {out}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let scen_name = args.get_or("scenario", "standard");
+    let mut cfg: ExperimentConfig = octopinf::sim::scenario::preset(scen_name)
+        .ok_or_else(|| anyhow!("unknown scenario {scen_name:?}"))?;
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    if let Some(d) = args.get("duration-min") {
+        cfg.duration_ms = d.parse::<f64>()? * 60_000.0;
+    }
+    let kind = SchedulerKind::parse(args.get_or("scheduler", "octopinf"))
+        .ok_or_else(|| anyhow!("unknown scheduler"))?;
+    let sc = Scenario::build(cfg);
+    let mut m = sim_run(&sc, kind);
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["scheduler".to_string(), kind.label().to_string()]);
+    t.row(vec!["effective_thpt(obj/s)".into(), fnum(m.effective_throughput(), 2)]);
+    t.row(vec!["total_thpt(obj/s)".into(), fnum(m.total_throughput(), 2)]);
+    t.row(vec!["violation_rate".into(), fnum(m.violation_rate(), 3)]);
+    t.row(vec!["latency_p50(ms)".into(), fnum(m.latency.p50(), 1)]);
+    t.row(vec!["latency_p95(ms)".into(), fnum(m.latency.p95(), 1)]);
+    t.row(vec!["latency_p99(ms)".into(), fnum(m.latency.p99(), 1)]);
+    t.row(vec!["peak_memory(MB)".into(), fnum(m.peak_memory_mb, 0)]);
+    t.row(vec!["mean_gpu_util".into(), fnum(m.mean_gpu_util, 3)]);
+    t.row(vec!["dropped".into(), m.dropped.to_string()]);
+    println!("{}", t.to_markdown());
+    println!("\nlatency histogram: {}", m.latency_hist.sparkline());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("figure number required (1, 6..11)"))?;
+    let quick = args.flag("quick");
+    match which.as_str() {
+        "1" => println!("{}", experiments::table1().to_markdown()),
+        "6" => {
+            println!("## Fig. 6a-c: overall comparison\n");
+            println!("{}", experiments::fig6_overall(quick).to_markdown());
+            println!("\n## Fig. 6d: OctopInf workload tracking\n");
+            println!("{}", experiments::fig6_timeline(quick).to_markdown());
+        }
+        "7" => {
+            for (name, t) in experiments::fig7_adaptivity(quick) {
+                println!("## Fig. 7: {name}\n\n{}\n", t.to_markdown());
+            }
+        }
+        "8" => println!("{}", experiments::fig8_scale(quick).to_markdown()),
+        "9" => println!("{}", experiments::fig9_slo(quick).to_markdown()),
+        "10" => println!("{}", experiments::fig10_ablation(quick).to_markdown()),
+        "11" => println!("{}", experiments::fig11_longterm(quick).to_markdown()),
+        other => return Err(anyhow!("unknown figure {other:?}")),
+    }
+    Ok(())
+}
+
+/// Real serving demo: synthetic camera traffic through the PJRT stack.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let duration_s = args.get_f64("duration-s", 10.0);
+    let fps = args.get_f64("fps", 30.0);
+    let slo_ms = args.get_f64("slo-ms", 200.0);
+    let dir = default_artifacts_dir();
+    if !Path::new(&dir).join("manifest.tsv").exists() {
+        return Err(anyhow!("artifacts missing — run `make artifacts`"));
+    }
+
+    let mut cfgs = HashMap::new();
+    cfgs.insert("det_m".to_string(), ModelServeCfg { batch: 4, max_wait_ms: 25.0 });
+    cfgs.insert("classifier".to_string(), ModelServeCfg { batch: 8, max_wait_ms: 15.0 });
+    cfgs.insert("embedder".to_string(), ModelServeCfg { batch: 8, max_wait_ms: 15.0 });
+
+    let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+
+    // Client thread: frames at `fps`, plus crops fanned out per frame.
+    let gen = std::thread::spawn(move || {
+        let mut rng = octopinf::util::Rng::new(7);
+        let frame_px = 128 * 128 * 3;
+        let crop_px = 32 * 32 * 3;
+        let n_frames = (duration_s * fps) as u64;
+        let mut id = 0u64;
+        for _ in 0..n_frames {
+            let t0 = std::time::Instant::now();
+            id += 1;
+            let _ = req_tx.send(Request {
+                id,
+                model: "det_m".into(),
+                data: (0..frame_px).map(|_| rng.f64() as f32).collect(),
+                slo_ms,
+                submitted: std::time::Instant::now(),
+            });
+            for _ in 0..rng.poisson(4.0) {
+                id += 1;
+                let model =
+                    if rng.chance(0.6) { "classifier" } else { "embedder" };
+                let _ = req_tx.send(Request {
+                    id,
+                    model: model.into(),
+                    data: (0..crop_px).map(|_| rng.f64() as f32).collect(),
+                    slo_ms,
+                    submitted: std::time::Instant::now(),
+                });
+            }
+            let frame_period = std::time::Duration::from_secs_f64(1.0 / fps);
+            if let Some(rest) = frame_period.checked_sub(t0.elapsed()) {
+                std::thread::sleep(rest);
+            }
+        }
+        // Dropping req_tx closes the stream.
+    });
+
+    // Drain responses concurrently so the channel never backs up.
+    let drain = std::thread::spawn(move || {
+        let mut n = 0u64;
+        while resp_rx.recv().is_ok() {
+            n += 1;
+        }
+        n
+    });
+
+    let mut report = serve(&dir, &cfgs, req_rx, resp_tx)?;
+    gen.join().unwrap();
+    let delivered = drain.join().unwrap();
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["served".to_string(), report.served.to_string()]);
+    t.row(vec!["delivered".into(), delivered.to_string()]);
+    t.row(vec!["on_time".into(), report.on_time.to_string()]);
+    t.row(vec!["slo_attainment".into(), fnum(report.slo_attainment(), 3)]);
+    t.row(vec!["eff_thpt(req/s)".into(), fnum(report.effective_throughput(), 1)]);
+    t.row(vec!["latency_p50(ms)".into(), fnum(report.latency.p50(), 2)]);
+    t.row(vec!["latency_p95(ms)".into(), fnum(report.latency.p95(), 2)]);
+    t.row(vec!["latency_p99(ms)".into(), fnum(report.latency.p99(), 2)]);
+    println!("{}", t.to_markdown());
+    Ok(())
+}

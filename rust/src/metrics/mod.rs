@@ -1,0 +1,142 @@
+//! Evaluation metrics (paper §IV-B): effective throughput (on-time objects
+//! per second), end-to-end latency distributions, and total GPU memory
+//! allocation — plus the per-minute timelines behind Fig. 6d/7/11.
+
+use crate::util::stats::{Histogram, Percentiles};
+use crate::Ms;
+
+/// Outcome of one query at the sink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    OnTime,
+    Late,
+    Dropped,
+}
+
+/// Aggregated run metrics for one system under one scenario.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub duration_ms: Ms,
+    pub on_time: u64,
+    pub late: u64,
+    pub dropped: u64,
+    /// Latency samples of completed (on-time + late) queries.
+    pub latency: Percentiles,
+    pub latency_hist: Histogram,
+    /// Peak total GPU memory allocated, MB.
+    pub peak_memory_mb: f64,
+    /// Per-minute (workload objects/s, effective objects/s) timeline.
+    pub timeline: Vec<(f64, f64)>,
+    /// Mean GPU utilization across the run, [0,1] of cluster capacity.
+    pub mean_gpu_util: f64,
+}
+
+impl RunMetrics {
+    pub fn new(duration_ms: Ms) -> RunMetrics {
+        RunMetrics {
+            duration_ms,
+            on_time: 0,
+            late: 0,
+            dropped: 0,
+            latency: Percentiles::new(),
+            latency_hist: Histogram::new(0.0, 1000.0, 50),
+            peak_memory_mb: 0.0,
+            timeline: Vec::new(),
+            mean_gpu_util: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, outcome: Outcome, latency_ms: Ms) {
+        match outcome {
+            Outcome::OnTime => self.on_time += 1,
+            Outcome::Late => self.late += 1,
+            Outcome::Dropped => {
+                self.dropped += 1;
+                return;
+            }
+        }
+        self.latency.push(latency_ms);
+        self.latency_hist.push(latency_ms);
+    }
+
+    /// Effective throughput: on-time completions per second (objects/s).
+    pub fn effective_throughput(&self) -> f64 {
+        self.on_time as f64 * 1000.0 / self.duration_ms
+    }
+
+    /// Total throughput: all completions per second (the gap to effective
+    /// is the paper's "wasted computation").
+    pub fn total_throughput(&self) -> f64 {
+        (self.on_time + self.late) as f64 * 1000.0 / self.duration_ms
+    }
+
+    /// Fraction of completions violating the SLO.
+    pub fn violation_rate(&self) -> f64 {
+        let done = self.on_time + self.late;
+        if done == 0 {
+            0.0
+        } else {
+            self.late as f64 / done as f64
+        }
+    }
+
+    /// Effective/total ratio (Fig. 8's "throughput ratio").
+    pub fn effective_ratio(&self) -> f64 {
+        let t = self.total_throughput();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.effective_throughput() / t
+        }
+    }
+
+    /// Completion rate vs all queries (completed + dropped).
+    pub fn completion_rate(&self) -> f64 {
+        let all = self.on_time + self.late + self.dropped;
+        if all == 0 {
+            0.0
+        } else {
+            (self.on_time + self.late) as f64 / all as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_accounting() {
+        let mut m = RunMetrics::new(10_000.0); // 10 s
+        for _ in 0..50 {
+            m.record(Outcome::OnTime, 100.0);
+        }
+        for _ in 0..10 {
+            m.record(Outcome::Late, 400.0);
+        }
+        for _ in 0..5 {
+            m.record(Outcome::Dropped, 0.0);
+        }
+        assert!((m.effective_throughput() - 5.0).abs() < 1e-9);
+        assert!((m.total_throughput() - 6.0).abs() < 1e-9);
+        assert!((m.violation_rate() - 10.0 / 60.0).abs() < 1e-9);
+        assert!((m.completion_rate() - 60.0 / 65.0).abs() < 1e-9);
+        assert_eq!(m.latency.len(), 60);
+    }
+
+    #[test]
+    fn dropped_has_no_latency_sample() {
+        let mut m = RunMetrics::new(1000.0);
+        m.record(Outcome::Dropped, 123.0);
+        assert!(m.latency.is_empty());
+        assert_eq!(m.dropped, 1);
+    }
+
+    #[test]
+    fn ratio_bounds() {
+        let mut m = RunMetrics::new(1000.0);
+        assert_eq!(m.effective_ratio(), 0.0);
+        m.record(Outcome::OnTime, 50.0);
+        assert_eq!(m.effective_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Network substrate: time-varying bandwidth between edge devices and the
+//! server (paper §IV-A5 uses Irish 5G/LTE traces [22]; we substitute a
+//! regime-switching process matched to that dataset's statistics, plus a
+//! CSV loader for real traces — see DESIGN.md §Substitutions).
+
+mod trace;
+
+pub use trace::{BwTrace, LinkQuality, TraceKind};
+
+use crate::{Bytes, Ms};
+
+/// A device<->server link with a bandwidth trace.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub trace: BwTrace,
+    /// Fixed propagation delay, ms.
+    pub rtt_ms: Ms,
+}
+
+impl Link {
+    pub fn new(trace: BwTrace, rtt_ms: Ms) -> Link {
+        Link { trace, rtt_ms }
+    }
+
+    /// Bandwidth at absolute time `t_ms`, Mbit/s.
+    pub fn bandwidth_mbps(&self, t_ms: Ms) -> f64 {
+        self.trace.bandwidth_mbps(t_ms)
+    }
+
+    /// Transfer latency for `bytes` at time `t_ms` (paper L_m^io =
+    /// size(In_m)/BW), including half-RTT handshake.
+    pub fn transfer_ms(&self, bytes: Bytes, t_ms: Ms) -> Ms {
+        let bw = self.bandwidth_mbps(t_ms);
+        if bw <= 0.0 {
+            return f64::INFINITY; // outage
+        }
+        let bits = bytes * 8.0;
+        self.rtt_ms / 2.0 + bits / (bw * 1000.0) // Mbit/s == kbit/ms
+    }
+}
+
+/// On-device transfers are effectively free (paper: bandwidth `ε` is a
+/// large hardware constant); we model a fixed small copy cost.
+pub const LOCAL_TRANSFER_MS: Ms = 0.05;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_scales_with_bytes() {
+        let link = Link::new(BwTrace::constant(100.0), 10.0);
+        let small = link.transfer_ms(10_000.0, 0.0);
+        let big = link.transfer_ms(1_000_000.0, 0.0);
+        assert!(big > small);
+        // 1 MB at 100 Mbit/s = 80 ms + 5 ms half-RTT.
+        assert!((big - 85.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn outage_is_infinite() {
+        let link = Link::new(BwTrace::constant(0.0), 10.0);
+        assert!(link.transfer_ms(1000.0, 0.0).is_infinite());
+    }
+}

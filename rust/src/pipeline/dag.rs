@@ -1,0 +1,218 @@
+//! Pipeline DAG: models + edges + SLO, with traversal helpers used by the
+//! schedulers (topological order, downstream rate propagation).
+
+use super::spec::ModelSpec;
+use crate::Ms;
+
+/// One node in the pipeline DAG.
+#[derive(Clone, Debug)]
+pub struct ModelNode {
+    pub spec: ModelSpec,
+    /// Indices of downstream models fed by this node's output.
+    pub downstream: Vec<usize>,
+    /// Fraction of this node's output routed to each downstream (sums <= 1;
+    /// e.g. a detector routes car boxes to the car classifier and person
+    /// boxes to the face embedder).
+    pub routing: Vec<f64>,
+}
+
+/// A DAG of DNN stages with an end-to-end SLO (paper §II).
+#[derive(Clone, Debug)]
+pub struct PipelineDag {
+    pub name: String,
+    pub slo_ms: Ms,
+    pub models: Vec<ModelNode>,
+    /// Device id hosting this pipeline's data source (camera).
+    pub source_device: usize,
+    /// Frames per second entering model 0.
+    pub source_fps: f64,
+}
+
+impl PipelineDag {
+    pub fn new(name: &str, slo_ms: Ms, source_device: usize, fps: f64) -> Self {
+        PipelineDag {
+            name: name.to_string(),
+            slo_ms,
+            models: Vec::new(),
+            source_device,
+            source_fps: fps,
+        }
+    }
+
+    /// Append a model; returns its index.
+    pub fn add(&mut self, spec: ModelSpec) -> usize {
+        self.models.push(ModelNode { spec, downstream: Vec::new(), routing: Vec::new() });
+        self.models.len() - 1
+    }
+
+    /// Connect `from` -> `to`, routing `frac` of from's output.
+    pub fn connect(&mut self, from: usize, to: usize, frac: f64) {
+        assert!(from < self.models.len() && to < self.models.len());
+        assert!(from != to, "self-loop");
+        assert!(to > from, "edges must go forward (indices are topo order)");
+        self.models[from].downstream.push(to);
+        self.models[from].routing.push(frac);
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Upstream of each node (None for the entry model).
+    pub fn upstream(&self, idx: usize) -> Option<usize> {
+        self.models
+            .iter()
+            .enumerate()
+            .find(|(_, n)| n.downstream.contains(&idx))
+            .map(|(i, _)| i)
+    }
+
+    /// Per-model request rates (queries/s) given the source fps, propagating
+    /// detector fanout and routing fractions downstream.
+    pub fn request_rates(&self, fanout_scale: f64) -> Vec<f64> {
+        let mut rates = vec![0.0; self.models.len()];
+        if self.models.is_empty() {
+            return rates;
+        }
+        rates[0] = self.source_fps;
+        for i in 0..self.models.len() {
+            let out_rate =
+                rates[i] * self.models[i].spec.fanout_mean * fanout_scale.max(0.0);
+            for (d, &ds) in self.models[i].downstream.iter().enumerate() {
+                rates[ds] += out_rate * self.models[i].routing[d];
+            }
+        }
+        rates
+    }
+
+    /// Indices in topological order (construction enforces forward edges, so
+    /// this is just 0..n — kept as a named helper for clarity at call sites).
+    pub fn topo_order(&self) -> Vec<usize> {
+        (0..self.models.len()).collect()
+    }
+
+    /// The longest path (in hops) — sanity metric used in tests.
+    pub fn depth(&self) -> usize {
+        let mut depth = vec![1usize; self.models.len()];
+        for i in (0..self.models.len()).rev() {
+            for &d in &self.models[i].downstream {
+                depth[i] = depth[i].max(1 + depth[d]);
+            }
+        }
+        depth.first().copied().unwrap_or(0)
+    }
+
+    /// Validate structural invariants; returns an error description.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.models.is_empty() {
+            return Err("pipeline has no models".into());
+        }
+        if self.slo_ms <= 0.0 {
+            return Err("SLO must be positive".into());
+        }
+        for (i, n) in self.models.iter().enumerate() {
+            if n.downstream.len() != n.routing.len() {
+                return Err(format!("model {i}: routing/downstream mismatch"));
+            }
+            let total: f64 = n.routing.iter().sum();
+            if total > 1.0 + 1e-9 {
+                return Err(format!("model {i}: routing sums to {total} > 1"));
+            }
+            for &d in &n.downstream {
+                if d <= i || d >= self.models.len() {
+                    return Err(format!("model {i}: bad edge -> {d}"));
+                }
+            }
+        }
+        // Reachability: every non-entry model must have an upstream.
+        for i in 1..self.models.len() {
+            if self.upstream(i).is_none() {
+                return Err(format!("model {i} is unreachable"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::spec::ModelSpec;
+
+    fn toy() -> PipelineDag {
+        let mut p = PipelineDag::new("toy", 200.0, 0, 15.0);
+        let det = p.add(ModelSpec::detector("det", 1, 128));
+        let cls = p.add(ModelSpec::classifier("cls"));
+        let emb = p.add(ModelSpec::embedder("emb"));
+        p.connect(det, cls, 0.6);
+        p.connect(det, emb, 0.4);
+        p
+    }
+
+    #[test]
+    fn validates() {
+        assert!(toy().validate().is_ok());
+    }
+
+    #[test]
+    fn rates_propagate_fanout() {
+        let p = toy();
+        let r = p.request_rates(1.0);
+        assert!((r[0] - 15.0).abs() < 1e-9);
+        // detector fanout 6.0 -> 90 obj/s split 60/40
+        assert!((r[1] - 54.0).abs() < 1e-9);
+        assert!((r[2] - 36.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_scale_with_content() {
+        let p = toy();
+        let lo = p.request_rates(0.5);
+        let hi = p.request_rates(2.0);
+        assert!((hi[1] / lo[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn upstream_lookup() {
+        let p = toy();
+        assert_eq!(p.upstream(0), None);
+        assert_eq!(p.upstream(1), Some(0));
+        assert_eq!(p.upstream(2), Some(0));
+    }
+
+    #[test]
+    fn rejects_overcommitted_routing() {
+        let mut p = PipelineDag::new("bad", 100.0, 0, 15.0);
+        let a = p.add(ModelSpec::detector("d", 0, 96));
+        let b = p.add(ModelSpec::classifier("c"));
+        let c = p.add(ModelSpec::classifier("c2"));
+        p.connect(a, b, 0.9);
+        p.connect(a, c, 0.9);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "forward")]
+    fn rejects_backward_edge() {
+        let mut p = PipelineDag::new("bad", 100.0, 0, 15.0);
+        let a = p.add(ModelSpec::detector("d", 0, 96));
+        let b = p.add(ModelSpec::classifier("c"));
+        let _ = (a, b);
+        p.connect(1, 0, 1.0);
+    }
+
+    #[test]
+    fn depth_of_chain() {
+        let mut p = PipelineDag::new("chain", 300.0, 0, 15.0);
+        let a = p.add(ModelSpec::detector("d", 0, 96));
+        let b = p.add(ModelSpec::classifier("c"));
+        let c = p.add(ModelSpec::embedder("e"));
+        p.connect(a, b, 1.0);
+        p.connect(b, c, 1.0);
+        assert_eq!(p.depth(), 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! EVA pipelines: DAGs of DNN model stages with SLOs (paper §II, Fig. 2).
+
+mod dag;
+mod presets;
+mod spec;
+
+pub use dag::{ModelNode, PipelineDag};
+pub use presets::{surveillance_pipeline, traffic_pipeline, standard_pipelines};
+pub use spec::{ModelKind, ModelSpec};

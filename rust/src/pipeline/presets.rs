@@ -1,0 +1,78 @@
+//! The paper's two experiment pipelines (Fig. 2, §IV-A2):
+//!
+//! - **traffic** (SLO 200 ms): `ObjectDet -> {CarClassify, PlateDet(emb)}`
+//! - **surveillance** (SLO 300 ms): `ObjectDet -> {FaceEmb, GenderCls}`
+
+use super::dag::PipelineDag;
+use super::spec::ModelSpec;
+
+/// Traffic-monitoring pipeline: detector feeds a car-type classifier and a
+/// plate embedder (standing in for Plate Det -> Plate Recog).
+pub fn traffic_pipeline(source_device: usize, fps: f64) -> PipelineDag {
+    let mut p = PipelineDag::new("traffic", 200.0, source_device, fps);
+    let det = p.add(ModelSpec::detector("object_det", 1, 128));
+    let cls = p.add(ModelSpec::classifier("car_classify"));
+    let plate = p.add(ModelSpec::embedder("plate_recog"));
+    // ~65 % of detected objects are vehicles -> classifier; 35 % get plate
+    // lookup (front-facing vehicles).
+    p.connect(det, cls, 0.65);
+    p.connect(det, plate, 0.35);
+    p
+}
+
+/// Building-surveillance pipeline: detector feeds face embedding and
+/// gender/age classification.
+pub fn surveillance_pipeline(source_device: usize, fps: f64) -> PipelineDag {
+    let mut p = PipelineDag::new("surveillance", 300.0, source_device, fps);
+    let det = p.add(ModelSpec::detector("object_det", 1, 128));
+    let face = p.add(ModelSpec::embedder("face_recog"));
+    let gender = p.add(ModelSpec::classifier("gender_classify"));
+    p.connect(det, face, 0.5);
+    p.connect(det, gender, 0.5);
+    // Surveillance scenes have fewer, larger targets than traffic.
+    p.models[det].spec.fanout_mean = 3.5;
+    p
+}
+
+/// The paper's standard 9-source deployment: 6 traffic + 3 surveillance
+/// cameras, one per edge device (§IV-A3), 15 fps each.
+pub fn standard_pipelines(n_devices: usize) -> Vec<PipelineDag> {
+    let fps = 15.0;
+    (0..n_devices)
+        .map(|d| {
+            if d % 3 == 2 {
+                surveillance_pipeline(d, fps)
+            } else {
+                traffic_pipeline(d, fps)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        assert!(traffic_pipeline(0, 15.0).validate().is_ok());
+        assert!(surveillance_pipeline(0, 15.0).validate().is_ok());
+    }
+
+    #[test]
+    fn paper_slos() {
+        assert_eq!(traffic_pipeline(0, 15.0).slo_ms, 200.0);
+        assert_eq!(surveillance_pipeline(0, 15.0).slo_ms, 300.0);
+    }
+
+    #[test]
+    fn standard_mix_is_two_thirds_traffic() {
+        let ps = standard_pipelines(9);
+        let traffic = ps.iter().filter(|p| p.name == "traffic").count();
+        assert_eq!(traffic, 6);
+        assert_eq!(ps.len(), 9);
+        for (d, p) in ps.iter().enumerate() {
+            assert_eq!(p.source_device, d);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Static per-model descriptions: IO sizes, memory, compute — the inputs
+//! the paper's profiler supplies to the Controller (§III-A, Table II).
+
+use crate::Bytes;
+
+/// Functional role of a stage; maps to the AOT artifact families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Frame-level object detector (TinyDet variants).
+    Detector,
+    /// Crop classifier (car type, gender/age...).
+    Classifier,
+    /// Crop embedder (plate recog, face recog, re-id...).
+    Embedder,
+}
+
+impl ModelKind {
+    /// Name of the AOT artifact family implementing this stage on the real
+    /// serving path (`artifacts/<family>_b<batch>.hlo.txt`).
+    pub fn artifact_family(&self, variant: usize) -> &'static str {
+        match self {
+            ModelKind::Detector => ["det_s", "det_m", "det_l"][variant.min(2)],
+            ModelKind::Classifier => "classifier",
+            ModelKind::Embedder => "embedder",
+        }
+    }
+}
+
+/// Static profile of one pipeline stage.
+///
+/// `W_m` / `I_m` (Eq. 4) are the weight and per-query intermediate memory;
+/// `util_width` is the fraction of a GPU's compute the stage occupies while
+/// executing (the "width" of its CORAL portion); `fanout_mean` is the mean
+/// number of downstream queries produced per input query (objects per
+/// frame for a detector, 1 for crop models).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub kind: ModelKind,
+    /// Detector resolution variant (0 = S, 1 = M, 2 = L); ignored otherwise.
+    pub variant: usize,
+    /// Bytes entering the stage per query (frame or crop).
+    pub input_bytes: Bytes,
+    /// Bytes leaving the stage per produced query.
+    pub output_bytes: Bytes,
+    /// Mean downstream queries per input query.
+    pub fanout_mean: f64,
+    /// Persistent weight memory, MB (W_m).
+    pub weight_mem_mb: f64,
+    /// Intermediate memory per query in a running batch, MB (I_m).
+    pub inter_mem_mb: f64,
+    /// Fraction of GPU compute consumed while executing (portion width).
+    pub util_width: f64,
+    /// FLOPs per sample (for roofline accounting).
+    pub flops_per_sample: f64,
+}
+
+impl ModelSpec {
+    /// IO ratio used by CWD's `ToEdge` test (Insight 2): expected output
+    /// traffic per input query, relative to input size.
+    pub fn io_ratio(&self) -> f64 {
+        if self.input_bytes <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.fanout_mean * self.output_bytes / self.input_bytes
+    }
+
+    /// Total memory for an instance serving batch `bz` (Eq. 4 contribution).
+    pub fn memory_mb(&self, bz: u32) -> f64 {
+        self.weight_mem_mb + self.inter_mem_mb * bz as f64
+    }
+}
+
+/// Convenience constructors matched to the paper's two pipelines.
+impl ModelSpec {
+    pub fn detector(name: &str, variant: usize, resolution: u32) -> ModelSpec {
+        let _ = resolution; // kept for API clarity; bytes use stream size
+        ModelSpec {
+            name: name.to_string(),
+            kind: ModelKind::Detector,
+            variant,
+            // What crosses the network is the encoded camera stream frame
+            // (720p-class), resized per detector variant — this is what
+            // makes LTE uplinks a real bottleneck, as in the paper.
+            input_bytes: 80_000.0 + 30_000.0 * variant as f64,
+            // Per detected object: crop + box metadata.
+            output_bytes: 32.0 * 32.0 * 3.0 + 64.0,
+            fanout_mean: 6.0, // calibrated at runtime from KB
+            weight_mem_mb: 120.0 + 40.0 * variant as f64,
+            inter_mem_mb: 18.0 + 8.0 * variant as f64,
+            util_width: 0.35 + 0.10 * variant as f64,
+            flops_per_sample: 15.4e6 * (1.0 + variant as f64),
+        }
+    }
+
+    pub fn classifier(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            kind: ModelKind::Classifier,
+            variant: 0,
+            input_bytes: 32.0 * 32.0 * 3.0 + 64.0,
+            output_bytes: 96.0, // label + confidence record
+            fanout_mean: 1.0,
+            weight_mem_mb: 45.0,
+            inter_mem_mb: 6.0,
+            util_width: 0.15,
+            flops_per_sample: 2.5e6,
+        }
+    }
+
+    pub fn embedder(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            kind: ModelKind::Embedder,
+            variant: 0,
+            input_bytes: 32.0 * 32.0 * 3.0 + 64.0,
+            output_bytes: 64.0 * 4.0 + 32.0, // f32 embedding + id
+            fanout_mean: 1.0,
+            weight_mem_mb: 50.0,
+            inter_mem_mb: 6.0,
+            util_width: 0.15,
+            flops_per_sample: 2.7e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detector_io_ratio_grows_with_fanout() {
+        let mut d = ModelSpec::detector("det", 1, 128);
+        let r1 = d.io_ratio();
+        d.fanout_mean *= 2.0;
+        assert!((d.io_ratio() - 2.0 * r1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classifier_shrinks_data() {
+        let c = ModelSpec::classifier("cls");
+        assert!(c.io_ratio() < 1.0, "classifier must compress its input");
+    }
+
+    #[test]
+    fn memory_scales_with_batch() {
+        let d = ModelSpec::detector("det", 0, 96);
+        assert!(d.memory_mb(8) > d.memory_mb(1));
+        assert!((d.memory_mb(0) - d.weight_mem_mb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn artifact_family_mapping() {
+        assert_eq!(ModelKind::Detector.artifact_family(0), "det_s");
+        assert_eq!(ModelKind::Detector.artifact_family(2), "det_l");
+        assert_eq!(ModelKind::Classifier.artifact_family(0), "classifier");
+    }
+}

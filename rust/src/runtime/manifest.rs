@@ -1,0 +1,136 @@
+//! Artifact manifest parser (`artifacts/manifest.tsv`, written by
+//! `python -m compile.aot`). TSV because the offline rust dependency set
+//! has no JSON parser — the JSON flavor next to it is for humans.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Metadata of one compiled (model, batch) artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub batch: usize,
+    pub file: String,
+    /// Per-sample input shape (without batch dim).
+    pub input_shape: Vec<usize>,
+    /// Per-sample output shape.
+    pub output_shape: Vec<usize>,
+    pub flops_per_sample: u64,
+    pub param_count: u64,
+}
+
+/// All artifacts, indexed by (model, batch).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    by_key: HashMap<(String, usize), ArtifactMeta>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("shape {s:?}: {e}")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 && line.starts_with("model\t") {
+                continue;
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let c: Vec<&str> = line.split('\t').collect();
+            if c.len() != 7 {
+                return Err(anyhow!("manifest row {}: {} cols", i + 1, c.len()));
+            }
+            let meta = ArtifactMeta {
+                model: c[0].to_string(),
+                batch: c[1].parse().context("batch")?,
+                file: c[2].to_string(),
+                input_shape: parse_shape(c[3])?,
+                output_shape: parse_shape(c[4])?,
+                flops_per_sample: c[5].parse().context("flops")?,
+                param_count: c[6].parse().context("params")?,
+            };
+            m.by_key.insert((meta.model.clone(), meta.batch), meta);
+        }
+        if m.by_key.is_empty() {
+            return Err(anyhow!("empty manifest"));
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, model: &str, batch: usize) -> Option<&ArtifactMeta> {
+        self.by_key.get(&(model.to_string(), batch))
+    }
+
+    /// Distinct model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.by_key.keys().map(|(m, _)| m.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Available batch sizes for a model, ascending.
+    pub fn batches(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_key
+            .keys()
+            .filter(|(m, _)| m == model)
+            .map(|&(_, b)| b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "model\tbatch\tfile\tinput_shape\toutput_shape\tflops_per_sample\tparam_count\n\
+det_s\t1\tdet_s_b1.hlo.txt\t96x96x3\t108x9\t15386112\t62267\n\
+det_s\t4\tdet_s_b4.hlo.txt\t96x96x3\t108x9\t15386112\t62267\n\
+classifier\t8\tclassifier_b8.hlo.txt\t32x32x3\t8\t2500000\t7000\n";
+
+    #[test]
+    fn parses_rows() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let a = m.get("det_s", 4).unwrap();
+        assert_eq!(a.input_shape, vec![96, 96, 3]);
+        assert_eq!(a.output_shape, vec![108, 9]);
+        assert_eq!(m.models(), vec!["classifier", "det_s"]);
+        assert_eq!(m.batches("det_s"), vec![1, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        assert!(Manifest::parse("model\tbatch\nonly\ttwo\n").is_err());
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse(
+            "a\tnot_a_number\tf\t1x1\t1\t0\t0\n"
+        )
+        .is_err());
+    }
+}

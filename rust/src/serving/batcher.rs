@@ -1,0 +1,117 @@
+//! Dynamic batcher: accumulates requests and releases a batch when full or
+//! when the oldest request has waited `max_wait_ms` (the latency/throughput
+//! balance CWD tunes per model — §III-B).
+
+use std::collections::VecDeque;
+
+/// Generic over the request type so it is unit-testable without PJRT.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    batch: usize,
+    max_wait_ms: f64,
+    queue: VecDeque<(f64, T)>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(batch: usize, max_wait_ms: f64) -> Self {
+        DynamicBatcher {
+            batch: batch.max(1),
+            max_wait_ms: max_wait_ms.max(0.0),
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Add a request at `now_ms`; returns a full batch if one is ready.
+    pub fn push(&mut self, item: T, now_ms: f64) -> Option<Vec<T>> {
+        self.queue.push_back((now_ms, item));
+        (self.queue.len() >= self.batch).then(|| self.take(self.batch))
+    }
+
+    /// Timer poll: release a partial batch if the head has waited too long.
+    pub fn poll(&mut self, now_ms: f64) -> Option<Vec<T>> {
+        if self.queue.len() >= self.batch {
+            return Some(self.take(self.batch));
+        }
+        match self.queue.front() {
+            Some(&(t0, _)) if now_ms - t0 >= self.max_wait_ms => {
+                Some(self.take(self.queue.len()))
+            }
+            _ => None,
+        }
+    }
+
+    /// Force-release whatever is queued (shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        (!self.queue.is_empty()).then(|| self.take(self.queue.len()))
+    }
+
+    fn take(&mut self, n: usize) -> Vec<T> {
+        self.queue.drain(..n).map(|(_, x)| x).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_full_batch_on_push() {
+        let mut b = DynamicBatcher::new(3, 100.0);
+        assert!(b.push(1, 0.0).is_none());
+        assert!(b.push(2, 1.0).is_none());
+        let batch = b.push(3, 2.0).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn poll_times_out_partial() {
+        let mut b = DynamicBatcher::new(4, 50.0);
+        b.push('a', 0.0);
+        b.push('b', 10.0);
+        assert!(b.poll(40.0).is_none());
+        let batch = b.poll(51.0).unwrap();
+        assert_eq!(batch, vec!['a', 'b']);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = DynamicBatcher::new(2, 10.0);
+        b.push(10, 0.0);
+        let out = b.push(20, 1.0).unwrap();
+        assert_eq!(out, vec![10, 20]);
+    }
+
+    #[test]
+    fn flush_empties() {
+        let mut b = DynamicBatcher::new(8, 1000.0);
+        b.push(1, 0.0);
+        b.push(2, 0.0);
+        assert_eq!(b.flush().unwrap().len(), 2);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn oversize_wait_handles_empty_queue() {
+        let mut b: DynamicBatcher<u8> = DynamicBatcher::new(4, 50.0);
+        assert!(b.poll(1e9).is_none());
+    }
+
+    #[test]
+    fn batch_of_one_is_immediate() {
+        let mut b = DynamicBatcher::new(1, 0.0);
+        assert_eq!(b.push(7, 0.0).unwrap(), vec![7]);
+    }
+}

@@ -1,0 +1,177 @@
+//! The real serving path: a request router + per-model dynamic batchers +
+//! a PJRT executor, all in Rust, driven purely by the AOT artifacts.
+//! This is what `examples/e2e_serve.rs` and `octopinf serve` run — Python
+//! is never involved.
+//!
+//! Threading: clients submit [`Request`]s over an mpsc channel from any
+//! thread; a single executor thread owns the PJRT [`Runtime`] (XLA handles
+//! are not `Send`) and drives batching + execution; responses flow back
+//! over a channel with full timing.
+
+pub mod batcher;
+
+pub use batcher::DynamicBatcher;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::stats::Percentiles;
+
+/// One inference request (a frame or a crop, row-major f32).
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub data: Vec<f32>,
+    pub slo_ms: f64,
+    pub submitted: Instant,
+}
+
+/// Completion record returned to the client.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub model: String,
+    pub output: Vec<f32>,
+    pub latency_ms: f64,
+    pub batch_size: usize,
+    pub on_time: bool,
+}
+
+/// Per-model serving configuration (CWD's chosen batch + wait bound).
+#[derive(Clone, Debug)]
+pub struct ModelServeCfg {
+    pub batch: usize,
+    pub max_wait_ms: f64,
+}
+
+/// Aggregate report of one serving session.
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    pub served: u64,
+    pub on_time: u64,
+    pub per_model: HashMap<String, u64>,
+    pub latency: Percentiles,
+    pub batch_hist: HashMap<usize, u64>,
+    pub wall_ms: f64,
+}
+
+impl ServeReport {
+    pub fn effective_throughput(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            0.0
+        } else {
+            self.on_time as f64 * 1000.0 / self.wall_ms
+        }
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.on_time as f64 / self.served as f64
+        }
+    }
+}
+
+/// The executor loop: drains `rx` until it closes, batches per model, runs
+/// PJRT, and reports each completion on `tx`.
+///
+/// Returns the aggregate report when the request stream ends.
+pub fn serve(
+    artifacts_dir: &Path,
+    cfgs: &HashMap<String, ModelServeCfg>,
+    rx: Receiver<Request>,
+    tx: Sender<Response>,
+) -> Result<ServeReport> {
+    let mut rt = Runtime::new(artifacts_dir)?;
+    let mut batchers: HashMap<String, DynamicBatcher<Request>> = cfgs
+        .iter()
+        .map(|(m, c)| (m.clone(), DynamicBatcher::new(c.batch, c.max_wait_ms)))
+        .collect();
+    // Pre-compile engines so the first request doesn't eat compile time.
+    for (m, c) in cfgs {
+        rt.engine(m, c.batch)?;
+    }
+
+    let mut report = ServeReport::default();
+    let session_start = Instant::now();
+    let mut open = true;
+    while open || batchers.values().any(|b| !b.is_empty()) {
+        // Pull with a short timeout so flush timers fire.
+        match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+            Ok(req) => {
+                let b = batchers
+                    .entry(req.model.clone())
+                    .or_insert_with(|| DynamicBatcher::new(1, 5.0));
+                b.push(req, now_ms(session_start));
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+        // Flush ready batches.
+        let now = now_ms(session_start);
+        for (model, b) in batchers.iter_mut() {
+            // When the stream closed, force-flush leftovers.
+            let ready = if open { b.poll(now) } else { b.flush() };
+            let Some(batch) = ready else { continue };
+            run_batch(&mut rt, model, cfgs, batch, &tx, &mut report)?;
+        }
+    }
+    report.wall_ms = session_start.elapsed().as_secs_f64() * 1e3;
+    Ok(report)
+}
+
+fn now_ms(start: Instant) -> f64 {
+    start.elapsed().as_secs_f64() * 1e3
+}
+
+fn run_batch(
+    rt: &mut Runtime,
+    model: &str,
+    cfgs: &HashMap<String, ModelServeCfg>,
+    batch: Vec<Request>,
+    tx: &Sender<Response>,
+    report: &mut ServeReport,
+) -> Result<()> {
+    let bz = cfgs.get(model).map(|c| c.batch).unwrap_or(1);
+    let n = batch.len();
+    let per_in: usize = rt
+        .engine(model, bz)?
+        .meta
+        .input_shape
+        .iter()
+        .product();
+    let mut input = Vec::with_capacity(n * per_in);
+    for r in &batch {
+        debug_assert_eq!(r.data.len(), per_in);
+        input.extend_from_slice(&r.data);
+    }
+    let out = rt.execute_padded(model, bz, n, &input)?;
+    let per_out = out.len() / n.max(1);
+    for (i, req) in batch.into_iter().enumerate() {
+        let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+        let on_time = latency_ms <= req.slo_ms;
+        report.served += 1;
+        if on_time {
+            report.on_time += 1;
+        }
+        *report.per_model.entry(req.model.clone()).or_default() += 1;
+        report.latency.push(latency_ms);
+        *report.batch_hist.entry(n).or_default() += 1;
+        // Client may be gone (fire-and-forget benchmarks) — ignore errors.
+        let _ = tx.send(Response {
+            id: req.id,
+            model: req.model,
+            output: out[i * per_out..(i + 1) * per_out].to_vec(),
+            latency_ms,
+            batch_size: n,
+            on_time,
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,864 @@
+//! The discrete-event engine.
+//!
+//! Mechanics shared by every scheduler (identical comparison substrate):
+//! frame sources -> per-(pipeline, model) dynamic batchers -> GPU
+//! executors -> routing/fanout -> sinks; FIFO uplinks; periodic
+//! rescheduling (paper: 6 min); autoscaler ticks for the OctopInf
+//! variants; lazy dropping of already-late queries at dispatch.
+//!
+//! CORAL-reserved instances execute interference-free inside their duty
+//! cycle (the reservation is the paper's point); spatial-only instances
+//! suffer the co-location interference model when executions overlap.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::coordinator::controller::{make_scheduler, SCHEDULING_PERIOD_MS};
+use crate::coordinator::{
+    GpuId, ModelObs, Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg,
+};
+use crate::metrics::{Outcome, RunMetrics};
+use crate::sim::link::FifoLink;
+use crate::sim::scenario::Scenario;
+use crate::util::Rng;
+use crate::workload::{ArrivalWindow, ContentDynamics};
+use crate::Ms;
+
+/// Co-location interference: latency multiplier when executions overlap on
+/// a GPU without a temporal reservation (§II: "unpredictable performance
+/// degradations"; calibrated so the w/o-CORAL ablation loses ~10 % —
+/// Fig. 10 — and Rim's edge stuffing hurts badly — Fig. 6b).
+#[derive(Clone, Copy, Debug)]
+pub struct InterferenceModel {
+    /// Penalty per co-running execution (kernel-level timeslicing cost).
+    pub per_corunner: f64,
+    /// Exponent applied to (total width / capacity) when oversubscribed.
+    pub oversub_exp: f64,
+}
+
+impl Default for InterferenceModel {
+    fn default() -> Self {
+        // Calibrated against the co-location literature the paper cites
+        // (HiTDL, Masa): 5-10 co-resident DNNs on one GPU degrade latency
+        // multi-x; CUDA timeslices kernels with no model-level coordination.
+        InterferenceModel { per_corunner: 0.35, oversub_exp: 2.0 }
+    }
+}
+
+impl InterferenceModel {
+    /// Multiplier given total overlapping width (incl. self), capacity, and
+    /// number of co-runners (excl. self).
+    pub fn multiplier(&self, total_width: f64, cap: f64, co_runners: usize) -> f64 {
+        let base = 1.0 + self.per_corunner * co_runners as f64;
+        if total_width <= cap {
+            base
+        } else {
+            base * (total_width / cap).powf(self.oversub_exp)
+        }
+    }
+}
+
+/// A query flowing through a pipeline (a frame, then per-object crops).
+#[derive(Clone, Copy, Debug)]
+struct Query {
+    created_ms: Ms,
+    deadline_ms: Ms,
+    /// Objects carried (frames: detected count; crops: 1).
+    objects: u16,
+}
+
+/// Instance-group runtime state for one (pipeline, model).
+struct Group {
+    cfg: StageCfg,
+    bindings: Vec<crate::coordinator::GpuBinding>,
+    busy: Vec<bool>,
+    queue: VecDeque<Query>,
+    window: ArrivalWindow,
+    /// Pending flush-timer deadline (dedup of Flush events).
+    flush_at: Option<Ms>,
+}
+
+impl Group {
+    /// Sustainable rate of the group: reserved instances chain full
+    /// batches through stream gaps (0.8 × curve); contended instances are
+    /// curve-bound.
+    fn capacity_qps(&self, sc: &ScenarioData, p: usize, m: usize) -> f64 {
+        let spec = &sc.pipelines[p].models[m].spec;
+        let class = sc.cluster.device(self.cfg.device).class;
+        let curve_cap = sc.profiles.curve(spec, class).throughput(self.cfg.batch);
+        self.bindings
+            .iter()
+            .map(|b| if b.temporal.is_some() { curve_cap * 0.8 } else { curve_cap })
+            .sum()
+    }
+}
+
+enum Ev {
+    Frame { pipeline: usize },
+    Arrive { pipeline: usize, model: usize, query: Query },
+    Flush { pipeline: usize, model: usize },
+    /// CORAL duty-cycle occurrence of one reserved instance: execute
+    /// whatever queued (paper Fig. 5: GPU access cycles back each duty).
+    Portion { pipeline: usize, model: usize, binding: usize, epoch: u64 },
+    ExecDone { pipeline: usize, model: usize, binding: usize, queries: Vec<Query> },
+    Reschedule,
+    AutoScale,
+    Tick,
+}
+
+struct TimedEvent {
+    t: Ms,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for TimedEvent {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for TimedEvent {}
+impl PartialOrd for TimedEvent {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for TimedEvent {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reversed for a min-heap on (t, seq).
+        o.t.partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// One running execution on a GPU (for overlap queries).
+#[derive(Clone, Copy)]
+struct GpuRun {
+    end_ms: Ms,
+    width: f64,
+}
+
+/// First occurrence of a duty-cycle slot at or after `now`.
+fn next_occurrence(now: Ms, start_ms: Ms, duty_ms: Ms) -> Ms {
+    let duty = duty_ms.max(1.0);
+    if now <= start_ms {
+        return start_ms;
+    }
+    let k = ((now - start_ms) / duty).ceil();
+    start_ms + k * duty
+}
+
+pub struct Simulator {
+    kind: SchedulerKind,
+    sched: Box<dyn Scheduler>,
+    // Scenario data (owned copies; content processes are stateful).
+    sc: ScenarioData,
+    content: Vec<ContentDynamics>,
+    links: Vec<FifoLink>,
+    // Event machinery.
+    heap: BinaryHeap<TimedEvent>,
+    seq: u64,
+    now: Ms,
+    // Deployment.
+    /// Dense per-(pipeline, model) state — indexed, not hashed,
+    /// because every simulated event touches it.
+    groups: Vec<Vec<Group>>,
+    plan: Plan,
+    /// Flat per-GPU state; `gpu_offset[device] + gpu` indexes both.
+    gpu_offset: Vec<usize>,
+    gpu_runs: Vec<Vec<GpuRun>>,
+    gpu_busy_width_ms: Vec<f64>,
+    // Metrics.
+    metrics: RunMetrics,
+    rng: Rng,
+    minute_workload: f64,
+    minute_effective: f64,
+    interference: InterferenceModel,
+    /// Plan generation; stale Portion events are ignored after reschedule.
+    epoch: u64,
+}
+
+/// Owned subset of `Scenario` the engine needs (the borrow-free core).
+struct ScenarioData {
+    cfg: crate::config::ExperimentConfig,
+    cluster: crate::cluster::Cluster,
+    profiles: crate::profiles::ProfileStore,
+    pipelines: Vec<crate::pipeline::PipelineDag>,
+    traces: Vec<crate::network::BwTrace>,
+}
+
+const QUEUE_CAP: usize = 1024;
+const AUTOSCALE_PERIOD_MS: Ms = 10_000.0;
+const TICK_MS: Ms = 60_000.0;
+
+impl Simulator {
+    pub fn new(scenario: &Scenario, kind: SchedulerKind) -> Simulator {
+        let sc = ScenarioData {
+            cfg: scenario.cfg.clone(),
+            cluster: scenario.cluster.clone(),
+            profiles: scenario.profiles.clone(),
+            pipelines: scenario.pipelines.clone(),
+            traces: scenario.traces.clone(),
+        };
+        let links = sc
+            .traces
+            .iter()
+            .map(|t| FifoLink::new(t.clone(), 20.0))
+            .collect();
+        let duration = sc.cfg.duration_ms;
+        let mut gpu_offset = Vec::with_capacity(sc.cluster.devices.len());
+        let mut n_gpus = 0;
+        for d in &sc.cluster.devices {
+            gpu_offset.push(n_gpus);
+            n_gpus += d.gpus.len();
+        }
+        Simulator {
+            kind,
+            sched: make_scheduler(kind, scenario.cfg.seed ^ 0xC0FFEE),
+            content: scenario.content.clone(),
+            links,
+            heap: BinaryHeap::with_capacity(1 << 16),
+            seq: 0,
+            now: 0.0,
+            groups: Vec::new(),
+            plan: Plan::default(),
+            gpu_offset,
+            gpu_runs: vec![Vec::new(); n_gpus],
+            gpu_busy_width_ms: vec![0.0; n_gpus],
+            metrics: RunMetrics::new(duration),
+            rng: Rng::new(scenario.cfg.seed ^ 0x51A7ED),
+            minute_workload: 0.0,
+            minute_effective: 0.0,
+            interference: InterferenceModel::default(),
+            epoch: 0,
+            sc,
+        }
+    }
+
+    #[inline]
+    fn gpu_idx(&self, g: GpuId) -> usize {
+        self.gpu_offset[g.device] + g.gpu
+    }
+
+    fn push(&mut self, t: Ms, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(TimedEvent { t, seq: self.seq, ev });
+    }
+
+    /// Build the scheduler environment from current observations.
+    fn build_env(&self) -> (Vec<Vec<ModelObs>>, Vec<f64>) {
+        let mut obs = Vec::new();
+        for (p, dag) in self.sc.pipelines.iter().enumerate() {
+            let structural = dag.request_rates(1.0);
+            let mut row = Vec::new();
+            for m in 0..dag.len() {
+                let g = self.groups.get(p).and_then(|row| row.get(m));
+                let (rate, cv) = match g {
+                    Some(g) if g.window.len() >= 10 => {
+                        (g.window.rate_qps(), g.window.burstiness())
+                    }
+                    _ => (structural[m], if m == 0 { 0.1 } else { 1.2 }),
+                };
+                row.push(ModelObs { rate_qps: rate.max(0.05), burstiness: cv });
+            }
+            obs.push(row);
+        }
+        let bw = self
+            .sc
+            .traces
+            .iter()
+            .map(|t| t.bandwidth_mbps(self.now))
+            .collect();
+        (obs, bw)
+    }
+
+    /// Run the scheduler and (re)install the plan, preserving queues.
+    fn reschedule(&mut self) {
+        let (obs, bw) = self.build_env();
+        let env = SchedEnv {
+            cluster: &self.sc.cluster,
+            profiles: &self.sc.profiles,
+            pipelines: &self.sc.pipelines,
+            obs,
+            bw_mbps: bw,
+            alpha: 1.2,
+        };
+        let plan = self.sched.plan(&env);
+        self.install_plan(plan);
+    }
+
+    fn install_plan(&mut self, plan: Plan) {
+        let mem = plan.total_memory_mb(&self.sc.pipelines);
+        self.metrics.peak_memory_mb = self.metrics.peak_memory_mb.max(mem);
+        self.epoch += 1;
+        if self.groups.is_empty() {
+            self.groups = self
+                .sc
+                .pipelines
+                .iter()
+                .map(|dag| {
+                    (0..dag.len())
+                        .map(|_| Group {
+                            cfg: StageCfg { device: 0, batch: 1, instances: 0 },
+                            bindings: Vec::new(),
+                            busy: Vec::new(),
+                            queue: VecDeque::new(),
+                            window: ArrivalWindow::new(60_000.0),
+                            flush_at: None,
+                        })
+                        .collect()
+                })
+                .collect();
+        }
+        for a in &plan.assignments {
+            let entry = &mut self.groups[a.pipeline][a.model];
+            entry.cfg = a.cfg;
+            entry.bindings = a.bindings.clone();
+            entry.busy = vec![false; a.bindings.len()];
+            // Queue and window survive rescheduling (containers are
+            // re-deployed, in-flight work continues).
+        }
+        self.plan = plan;
+        // Seed portion clocks for every CORAL-reserved instance.
+        let mut ticks = Vec::new();
+        for (p, row) in self.groups.iter().enumerate() {
+            for (m, g) in row.iter().enumerate() {
+            for (bi, b) in g.bindings.iter().enumerate() {
+                if let Some(slot) = b.temporal {
+                    let t = next_occurrence(self.now, slot.start_ms, slot.duty_cycle_ms);
+                    ticks.push((t, p, m, bi));
+                }
+            }
+            }
+        }
+        let epoch = self.epoch;
+        for (t, p, m, bi) in ticks {
+            self.push(t, Ev::Portion { pipeline: p, model: m, binding: bi, epoch });
+        }
+    }
+
+    /// Execute one duty-cycle occurrence of a reserved instance.
+    fn portion_tick(&mut self, pipeline: usize, model: usize, binding: usize) {
+        let now = self.now;
+        let g = &mut self.groups[pipeline][model];
+        let Some(b) = g.bindings.get(binding).copied() else { return };
+        let Some(slot) = b.temporal else { return };
+        // Re-arm the clock first.
+        let next = now + slot.duty_cycle_ms.max(1.0);
+        let epoch = self.epoch;
+        self.push(next, Ev::Portion { pipeline, model, binding, epoch });
+
+        let g = &mut self.groups[pipeline][model];
+        if g.busy[binding] {
+            return; // previous batch overran its cycle
+        }
+        // Lazy-drop late queries, then take up to one batch.
+        let mut dropped = 0u32;
+        while let Some(q) = g.queue.front() {
+            if q.deadline_ms < now {
+                g.queue.pop_front();
+                dropped += 1;
+            } else {
+                break;
+            }
+        }
+        let take = g.cfg.batch.min(g.queue.len() as u32) as usize;
+        let batch: Vec<Query> = g.queue.drain(..take).collect();
+        if take > 0 {
+            g.busy[binding] = true;
+        }
+        let cfg = g.cfg;
+        for _ in 0..dropped {
+            self.metrics.record(Outcome::Dropped, 0.0);
+        }
+        if take == 0 {
+            return; // idle cycle: GPU time returned (temporal sharing win)
+        }
+        let spec = &self.sc.pipelines[pipeline].models[model].spec;
+        let class = self.sc.cluster.device(cfg.device).class;
+        let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch);
+        let end = now + dur; // reservation: interference-free
+        let gi = self.gpu_idx(b.gpu);
+        self.gpu_busy_width_ms[gi] += dur * b.width;
+        self.push(end, Ev::ExecDone { pipeline, model, binding, queries: batch });
+    }
+
+    /// Autoscaler tick (OctopInf variants only, §III-D).
+    fn autoscale(&mut self) {
+        if !matches!(
+            self.kind,
+            SchedulerKind::OctopInf
+                | SchedulerKind::OctopInfNoCoral
+                | SchedulerKind::OctopInfStaticBatch
+                | SchedulerKind::OctopInfServerOnly
+        ) {
+            return;
+        }
+        let keys: Vec<(usize, usize)> = (0..self.groups.len())
+            .flat_map(|p| (0..self.groups[p].len()).map(move |m| (p, m)))
+            .collect();
+        for key in keys {
+            let (rate, cap, instances) = {
+                let g = &self.groups[key.0][key.1];
+                (
+                    g.window.rate_qps(),
+                    g.capacity_qps(&self.sc, key.0, key.1),
+                    g.cfg.instances,
+                )
+            };
+            use crate::coordinator::autoscaler::ScaleAction;
+            // Reuse the Controller's autoscaler thresholds inline.
+            let frac = rate / cap.max(1e-9);
+            let action = if frac > 0.85 {
+                ScaleAction::Up
+            } else if frac < 0.35 && instances > 1 {
+                ScaleAction::Down
+            } else {
+                ScaleAction::Hold
+            };
+            let g = &mut self.groups[key.0][key.1];
+            match action {
+                ScaleAction::Up => {
+                    if let Some(last) = g.bindings.last().copied() {
+                        g.cfg.instances += 1;
+                        // Clone runs contended until the next CORAL round.
+                        g.bindings.push(crate::coordinator::GpuBinding {
+                            temporal: None,
+                            ..last
+                        });
+                        g.busy.push(false);
+                    }
+                }
+                ScaleAction::Down => {
+                    // Remove an idle instance if any (reclaim portion).
+                    if let Some(idx) =
+                        g.busy.iter().rposition(|&b| !b).filter(|_| g.busy.len() > 1)
+                    {
+                        g.cfg.instances -= 1;
+                        g.bindings.remove(idx);
+                        g.busy.remove(idx);
+                    }
+                }
+                ScaleAction::Hold => {}
+            }
+        }
+    }
+
+    /// Max time a query may wait in this stage's batcher before flushing.
+    ///
+    /// OctopInf bounds waiting SLO-awarely (its contended clones flush at
+    /// SLO/(2·depth); reserved instances are portion-clocked anyway). The
+    /// baselines run their published policy — wait for the static batch to
+    /// fill, give up only near the SLO — which is exactly the "clunky
+    /// latency chunks" failure mode of §IV-C4.
+    fn max_wait_ms(&self, pipeline: usize, _model: usize) -> Ms {
+        let dag = &self.sc.pipelines[pipeline];
+        match self.kind {
+            SchedulerKind::OctopInf
+            | SchedulerKind::OctopInfNoCoral
+            | SchedulerKind::OctopInfStaticBatch
+            | SchedulerKind::OctopInfServerOnly => {
+                dag.slo_ms / (2.0 * dag.depth().max(1) as f64)
+            }
+            SchedulerKind::Distream
+            | SchedulerKind::Jellyfish
+            | SchedulerKind::Rim => dag.slo_ms / 2.0,
+        }
+    }
+
+    fn arrive(&mut self, pipeline: usize, model: usize, query: Query) {
+        let now = self.now;
+        let max_wait = self.max_wait_ms(pipeline, model);
+        let g = &mut self.groups[pipeline][model];
+        g.window.record(now);
+        if g.queue.len() >= QUEUE_CAP {
+            g.queue.pop_front();
+            self.metrics.record(Outcome::Dropped, 0.0);
+        }
+        g.queue.push_back(query);
+        let full = g.queue.len() >= g.cfg.batch as usize;
+        let need_timer = g.flush_at.is_none();
+        if full {
+            // Full batches get immediate service: contended instances
+            // dispatch normally; reserved ones stack an extra portion into
+            // their stream's free time (§III-C2 gap minimization).
+            let reserved_idle: Option<usize> = {
+                let g = &self.groups[pipeline][model];
+                g.bindings
+                    .iter()
+                    .enumerate()
+                    .position(|(i, b)| b.temporal.is_some() && !g.busy[i])
+            };
+            if let Some(bi) = reserved_idle {
+                self.chain_reserved(pipeline, model, bi);
+            }
+            self.try_dispatch(pipeline, model);
+        } else if need_timer {
+            let t = now + max_wait;
+            self.groups[pipeline][model].flush_at = Some(t);
+            self.push(t, Ev::Flush { pipeline, model });
+        }
+    }
+
+    /// Attempt to dispatch batches while a free instance and work exist.
+    fn try_dispatch(&mut self, pipeline: usize, model: usize) {
+        loop {
+            let now = self.now;
+            let g = &mut self.groups[pipeline][model];
+            if g.queue.is_empty() {
+                return;
+            }
+            // Only contended (non-reserved) instances dispatch here;
+            // CORAL-reserved instances are driven by Portion events.
+            let Some(binding_idx) = g
+                .bindings
+                .iter()
+                .enumerate()
+                .position(|(i, b)| !g.busy[i] && b.temporal.is_none())
+            else {
+                return; // all eligible instances busy (or all reserved)
+            };
+            // Lazy dropping: discard queries already past their deadline.
+            let mut dropped = 0u32;
+            while let Some(q) = g.queue.front() {
+                if q.deadline_ms < now {
+                    g.queue.pop_front();
+                    dropped += 1;
+                } else {
+                    break;
+                }
+            }
+            let empty = g.queue.is_empty();
+            for _ in 0..dropped {
+                self.metrics.record(Outcome::Dropped, 0.0);
+            }
+            if empty {
+                return;
+            }
+            let g = &mut self.groups[pipeline][model];
+            let take = g.cfg.batch.min(g.queue.len() as u32) as usize;
+            // Not full yet: wait for the flush timer unless it already fired.
+            if take < g.cfg.batch as usize {
+                if let Some(t) = g.flush_at {
+                    if t > now {
+                        return;
+                    }
+                }
+            }
+            let batch: Vec<Query> = g.queue.drain(..take).collect();
+            g.flush_at = None;
+            g.busy[binding_idx] = true;
+            let binding = g.bindings[binding_idx];
+            let cfg = g.cfg;
+
+            // Execution timing.
+            let spec = &self.sc.pipelines[pipeline].models[model].spec;
+            let class = self.sc.cluster.device(cfg.device).class;
+            let base_lat = self.sc.profiles.batch_latency(spec, class, cfg.batch);
+            let cap = 1.0; // util_cap of every GPU in this build
+            let (start, mult) = {
+                let runs = &mut self.gpu_runs[self.gpu_offset[binding.gpu.device] + binding.gpu.gpu];
+                runs.retain(|r| r.end_ms > now);
+                let total: f64 =
+                    runs.iter().map(|r| r.width).sum::<f64>() + binding.width;
+                let m = self.interference.multiplier(total, cap, runs.len());
+                (now, m)
+            };
+            let dur = base_lat * mult;
+            let end = start + dur;
+            let gi = self.gpu_idx(binding.gpu);
+            self.gpu_runs[gi].push(GpuRun { end_ms: end, width: binding.width });
+            self.gpu_busy_width_ms[gi] += dur * binding.width;
+            self.push(
+                end,
+                Ev::ExecDone { pipeline, model, binding: binding_idx, queries: batch },
+            );
+        }
+    }
+
+    /// A reserved instance with a *full* batch queued may immediately run
+    /// again in its stream's free time — CORAL "stacks execution portions
+    /// one after another to minimize gaps, which waste resources"
+    /// (§III-C2). Partial batches still wait for the next duty tick.
+    fn chain_reserved(&mut self, pipeline: usize, model: usize, binding: usize) {
+        let now = self.now;
+        let g = &mut self.groups[pipeline][model];
+        let Some(b) = g.bindings.get(binding).copied() else { return };
+        if b.temporal.is_none() || binding >= g.busy.len() || g.busy[binding] {
+            return;
+        }
+        if g.queue.len() < g.cfg.batch as usize {
+            return;
+        }
+        let take = g.cfg.batch as usize;
+        let batch: Vec<Query> = g.queue.drain(..take).collect();
+        g.busy[binding] = true;
+        let cfg = g.cfg;
+        let spec = &self.sc.pipelines[pipeline].models[model].spec;
+        let class = self.sc.cluster.device(cfg.device).class;
+        let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch);
+        let end = now + dur;
+        let gi = self.gpu_idx(b.gpu);
+        self.gpu_busy_width_ms[gi] += dur * b.width;
+        self.push(end, Ev::ExecDone { pipeline, model, binding, queries: batch });
+    }
+
+    fn exec_done(
+        &mut self,
+        pipeline: usize,
+        model: usize,
+        binding: usize,
+        queries: Vec<Query>,
+    ) {
+        let now = self.now;
+        {
+            let g = &mut self.groups[pipeline][model];
+            if binding < g.busy.len() {
+                g.busy[binding] = false;
+            }
+        }
+        let dag = &self.sc.pipelines[pipeline];
+        let slo = dag.slo_ms;
+        let downstream = dag.models[model].downstream.clone();
+        let routing = dag.models[model].routing.clone();
+        let group_dev =
+            self.groups[pipeline][model].cfg.device;
+
+        if downstream.is_empty() {
+            // Sink: account one completion per carried object.
+            for q in &queries {
+                let latency = now - q.created_ms;
+                let n = q.objects.max(1) as u64;
+                for _ in 0..n {
+                    let outcome = if latency <= slo {
+                        self.minute_effective += 1.0;
+                        Outcome::OnTime
+                    } else {
+                        Outcome::Late
+                    };
+                    self.metrics.record(outcome, latency);
+                }
+            }
+        } else {
+            // Route objects to downstream stages.
+            for q in &queries {
+                let n_objects = q.objects as usize;
+                for _ in 0..n_objects {
+                    // Choose downstream by routing fraction.
+                    let x = self.rng.f64();
+                    let mut acc = 0.0;
+                    let mut chosen = None;
+                    for (i, &frac) in routing.iter().enumerate() {
+                        acc += frac;
+                        if x < acc {
+                            chosen = Some(downstream[i]);
+                            break;
+                        }
+                    }
+                    let Some(d) = chosen else { continue }; // unrouted residue
+                    let next = Query {
+                        created_ms: q.created_ms,
+                        deadline_ms: q.deadline_ms,
+                        objects: 1,
+                    };
+                    let dst_dev = self.groups[pipeline][d].cfg.device;
+                    let arrive_t = self.transfer_time(
+                        group_dev,
+                        dst_dev,
+                        self.sc.pipelines[pipeline].models[d].spec.input_bytes,
+                    );
+                    if arrive_t.is_finite() {
+                        self.push(arrive_t, Ev::Arrive { pipeline, model: d, query: next });
+                    } else {
+                        self.metrics.record(Outcome::Dropped, 0.0);
+                    }
+                }
+            }
+        }
+        // Free instance may pick up queued work: reserved instances chain
+        // full batches into stream gaps; contended ones dispatch normally.
+        self.chain_reserved(pipeline, model, binding);
+        self.try_dispatch(pipeline, model);
+    }
+
+    /// Absolute arrival time for a payload sent now between devices.
+    fn transfer_time(&mut self, from: usize, to: usize, bytes: f64) -> Ms {
+        if from == to {
+            return self.now + crate::network::LOCAL_TRANSFER_MS;
+        }
+        let edge = if from == 0 { to } else { from };
+        self.links[edge].send(self.now, bytes)
+    }
+
+    fn frame(&mut self, pipeline: usize) {
+        let now = self.now;
+        let dag = &self.sc.pipelines[pipeline];
+        let fps = dag.source_fps;
+        let slo = dag.slo_ms;
+        let src = dag.source_device;
+        let det_bytes = dag.models[0].spec.input_bytes;
+        let objects = self.content[pipeline].objects_in_frame(now);
+        self.minute_workload += objects as f64;
+        let q = Query {
+            created_ms: now,
+            deadline_ms: now + slo,
+            objects: objects.min(u16::MAX as u32) as u16,
+        };
+        let det_dev =
+            self.groups[pipeline][0].cfg.device;
+        let arrive_t = self.transfer_time(src, det_dev, det_bytes);
+        if arrive_t.is_finite() {
+            self.push(arrive_t, Ev::Arrive { pipeline, model: 0, query: q });
+        } else {
+            self.metrics.record(Outcome::Dropped, 0.0);
+        }
+        // Next frame.
+        self.push(now + 1000.0 / fps, Ev::Frame { pipeline });
+    }
+
+    /// Execute the scenario to completion and return metrics.
+    pub fn run(&mut self) -> RunMetrics {
+        // Initial plan + event seeding.
+        self.reschedule();
+        for p in 0..self.sc.pipelines.len() {
+            // Stagger sources a little so frames don't align pathologically.
+            let jitter = (p as f64) * 7.0;
+            self.push(jitter, Ev::Frame { pipeline: p });
+        }
+        self.push(SCHEDULING_PERIOD_MS, Ev::Reschedule);
+        self.push(AUTOSCALE_PERIOD_MS, Ev::AutoScale);
+        self.push(TICK_MS, Ev::Tick);
+
+        let horizon = self.sc.cfg.duration_ms;
+        while let Some(te) = self.heap.pop() {
+            if te.t > horizon {
+                break;
+            }
+            self.now = te.t;
+            match te.ev {
+                Ev::Frame { pipeline } => self.frame(pipeline),
+                Ev::Arrive { pipeline, model, query } => {
+                    self.arrive(pipeline, model, query)
+                }
+                Ev::Flush { pipeline, model } => {
+                    self.groups[pipeline][model].flush_at = None;
+                    self.try_dispatch(pipeline, model);
+                }
+                Ev::Portion { pipeline, model, binding, epoch } => {
+                    if epoch == self.epoch {
+                        self.portion_tick(pipeline, model, binding);
+                    }
+                }
+                Ev::ExecDone { pipeline, model, binding, queries } => {
+                    self.exec_done(pipeline, model, binding, queries)
+                }
+                Ev::Reschedule => {
+                    self.reschedule();
+                    self.push(self.now + SCHEDULING_PERIOD_MS, Ev::Reschedule);
+                }
+                Ev::AutoScale => {
+                    self.autoscale();
+                    self.push(self.now + AUTOSCALE_PERIOD_MS, Ev::AutoScale);
+                }
+                Ev::Tick => {
+                    self.metrics.timeline.push((
+                        self.minute_workload / 60.0,
+                        self.minute_effective / 60.0,
+                    ));
+                    self.minute_workload = 0.0;
+                    self.minute_effective = 0.0;
+                    self.push(self.now + TICK_MS, Ev::Tick);
+                }
+            }
+        }
+
+        // Mean GPU utilization over the run.
+        let total_width_ms: f64 = self.gpu_busy_width_ms.iter().sum();
+        let n_gpus = self.sc.cluster.n_gpus() as f64;
+        self.metrics.mean_gpu_util =
+            (total_width_ms / (horizon * n_gpus)).min(1.0);
+        if std::env::var("OCTOPINF_SIM_DEBUG").is_ok() {
+            let keys: Vec<(usize, usize)> = (0..self.groups.len())
+                .flat_map(|p| (0..self.groups[p].len()).map(move |m| (p, m)))
+                .collect();
+            for (p, m) in keys {
+                let g = &self.groups[p][m];
+                eprintln!(
+                    "group p{p}/m{m}: dev={} bz={} inst={} q={} rate={:.1} cap={:.1} temporal={} busy={:?} flush_at={:?}",
+                    g.cfg.device,
+                    g.cfg.batch,
+                    g.cfg.instances,
+                    g.queue.len(),
+                    g.window.rate_qps(),
+                    g.capacity_qps(&self.sc, p, m),
+                    g.bindings.iter().filter(|b| b.temporal.is_some()).count(),
+                    g.busy,
+                    g.flush_at,
+                );
+            }
+        }
+        self.metrics.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::sim::scenario::{preset, Scenario};
+
+    fn smoke_cfg() -> ExperimentConfig {
+        preset("smoke").unwrap()
+    }
+
+    #[test]
+    fn interference_model_shape() {
+        let m = InterferenceModel::default();
+        assert!((m.multiplier(0.5, 1.0, 0) - 1.0).abs() < 1e-9);
+        assert!(m.multiplier(1.5, 1.0, 2) > 1.5);
+        assert!(m.multiplier(0.9, 1.0, 3) > 1.0);
+    }
+
+    #[test]
+    fn smoke_run_produces_throughput() {
+        let sc = Scenario::build(smoke_cfg());
+        let m = crate::sim::run(&sc, SchedulerKind::OctopInf);
+        assert!(m.on_time > 0, "no on-time completions");
+        assert!(m.effective_throughput() > 1.0);
+        assert!(m.peak_memory_mb > 0.0);
+        assert!(!m.timeline.is_empty());
+    }
+
+    #[test]
+    fn all_schedulers_complete_smoke() {
+        let sc = Scenario::build(smoke_cfg());
+        for kind in SchedulerKind::all_main() {
+            let m = crate::sim::run(&sc, kind);
+            assert!(
+                m.on_time + m.late + m.dropped > 0,
+                "{:?} produced nothing",
+                kind
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let sc1 = Scenario::build(smoke_cfg());
+        let sc2 = Scenario::build(smoke_cfg());
+        let a = crate::sim::run(&sc1, SchedulerKind::OctopInf);
+        let b = crate::sim::run(&sc2, SchedulerKind::OctopInf);
+        assert_eq!(a.on_time, b.on_time);
+        assert_eq!(a.late, b.late);
+        assert_eq!(a.dropped, b.dropped);
+    }
+
+    #[test]
+    fn latencies_within_sanity() {
+        let sc = Scenario::build(smoke_cfg());
+        let mut m = crate::sim::run(&sc, SchedulerKind::OctopInf);
+        let p99 = m.latency.p99();
+        assert!(p99 > 0.0 && p99 < 5_000.0, "p99 {p99}");
+    }
+}

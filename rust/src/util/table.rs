@@ -1,0 +1,116 @@
+//! ASCII / markdown table rendering for benchmark and figure output.
+//! Every `figure N` subcommand prints its paper-table through this.
+
+/// Column-aligned table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavored markdown.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let fmt_row = |cells: &[String]| {
+            let body: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect();
+            format!("| {} |", body.join(" | "))
+        };
+        let sep: Vec<String> = w.iter().map(|&n| "-".repeat(n)).collect();
+        let mut out = vec![fmt_row(&self.header), format!("| {} |", sep.join(" | "))];
+        out.extend(self.rows.iter().map(|r| fmt_row(r)));
+        out.join("\n")
+    }
+
+    /// Tab-separated (for piping into plotting tools).
+    pub fn to_tsv(&self) -> String {
+        let mut out = vec![self.header.join("\t")];
+        out.extend(self.rows.iter().map(|r| r.join("\t")));
+        out.join("\n")
+    }
+}
+
+/// Format a float with fixed decimals, trimming "-0.0".
+pub fn fnum(x: f64, decimals: usize) -> String {
+    let s = format!("{:.*}", decimals, x);
+    if s.starts_with("-0.") && s[1..].parse::<f64>() == Ok(0.0) {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new(vec!["sys", "thpt"]);
+        t.row(vec!["octopinf", "123.4"]);
+        t.row(vec!["rim", "55.1"]);
+        let md = t.to_markdown();
+        assert!(md.contains("| sys      | thpt  |"));
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn tsv_roundtrip_columns() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.to_tsv(), "a\tb\n1\t2");
+    }
+
+    #[test]
+    fn fnum_trims_negative_zero() {
+        assert_eq!(fnum(-0.0001, 2), "0.00");
+        assert_eq!(fnum(1.256, 2), "1.26");
+    }
+}

@@ -1,0 +1,217 @@
+//! Content-dynamics generator: per-frame object counts over wall time.
+//!
+//! Three multiplicative components (matching what the paper's footage
+//! exhibits — Fig. 1, Fig. 11):
+//!   1. circadian curve: low at night, ramp through the morning, peak
+//!      mid-afternoon (the paper observes a 3:30 PM peak), taper by 8 PM;
+//!   2. burst regime (MMPP): calm <-> burst Markov states; bursts multiply
+//!      intensity (rush hour, a crowd entering the scene);
+//!   3. frame-level Poisson noise around the instantaneous mean.
+
+use crate::util::Rng;
+use crate::Ms;
+
+/// Shape of the day-scale intensity curve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiurnalShape {
+    /// Traffic cameras: strong afternoon peak.
+    Traffic,
+    /// Building surveillance: flatter, lunchtime + evening bumps.
+    Surveillance,
+    /// No diurnal modulation (short experiments).
+    Flat,
+}
+
+/// Parameters for one camera's content process.
+#[derive(Clone, Debug)]
+pub struct ContentProfile {
+    pub shape: DiurnalShape,
+    /// Mean objects per frame at the diurnal peak.
+    pub peak_objects: f64,
+    /// Burst multiplier while in the burst regime.
+    pub burst_factor: f64,
+    /// Mean dwell in calm state, ms.
+    pub calm_dwell_ms: Ms,
+    /// Mean dwell in burst state, ms.
+    pub burst_dwell_ms: Ms,
+    /// Start-of-experiment offset into the day, ms (9 AM in the paper).
+    pub day_offset_ms: Ms,
+}
+
+impl ContentProfile {
+    pub fn traffic() -> ContentProfile {
+        ContentProfile {
+            shape: DiurnalShape::Traffic,
+            peak_objects: 9.0,
+            burst_factor: 2.6,
+            calm_dwell_ms: 90_000.0,
+            burst_dwell_ms: 25_000.0,
+            day_offset_ms: 9.0 * 3_600_000.0,
+        }
+    }
+
+    pub fn surveillance() -> ContentProfile {
+        ContentProfile {
+            shape: DiurnalShape::Surveillance,
+            peak_objects: 5.0,
+            burst_factor: 3.2,
+            calm_dwell_ms: 140_000.0,
+            burst_dwell_ms: 15_000.0,
+            day_offset_ms: 9.0 * 3_600_000.0,
+        }
+    }
+
+    pub fn flat(mean_objects: f64) -> ContentProfile {
+        ContentProfile {
+            shape: DiurnalShape::Flat,
+            peak_objects: mean_objects,
+            burst_factor: 2.0,
+            calm_dwell_ms: 60_000.0,
+            burst_dwell_ms: 20_000.0,
+            day_offset_ms: 0.0,
+        }
+    }
+}
+
+/// Stateful per-camera object-count process.
+#[derive(Clone, Debug)]
+pub struct ContentDynamics {
+    profile: ContentProfile,
+    rng: Rng,
+    in_burst: bool,
+    regime_until_ms: Ms,
+}
+
+impl ContentDynamics {
+    pub fn new(profile: ContentProfile, rng: Rng) -> ContentDynamics {
+        ContentDynamics { profile, rng, in_burst: false, regime_until_ms: 0.0 }
+    }
+
+    /// Diurnal multiplier in [0.1, 1.0] at absolute experiment time `t_ms`.
+    pub fn diurnal(&self, t_ms: Ms) -> f64 {
+        let day_ms = 24.0 * 3_600_000.0;
+        let tod = (self.profile.day_offset_ms + t_ms) % day_ms; // time of day
+        let hour = tod / 3_600_000.0;
+        match self.profile.shape {
+            DiurnalShape::Flat => 1.0,
+            DiurnalShape::Traffic => {
+                // Ramp 6AM->peak 15.5 (3:30 PM, paper Fig. 11)->taper by 20.
+                let peak_h = 15.5;
+                let width = 5.5;
+                let x = (hour - peak_h) / width;
+                (0.12 + 0.88 * (-x * x).exp()).min(1.0)
+            }
+            DiurnalShape::Surveillance => {
+                // Two bumps: lunch (12.5) and evening (18).
+                let b1 = (-((hour - 12.5) / 2.5f64).powi(2)).exp();
+                let b2 = (-((hour - 18.0) / 2.0f64).powi(2)).exp();
+                (0.2 + 0.5 * b1 + 0.45 * b2).min(1.0)
+            }
+        }
+    }
+
+    /// Advance burst regime and return the mean object intensity at `t_ms`.
+    pub fn intensity(&mut self, t_ms: Ms) -> f64 {
+        if t_ms >= self.regime_until_ms {
+            // Flip regime with exponential dwell.
+            self.in_burst = !self.in_burst && {
+                // Entering burst is likelier when diurnal intensity is high
+                // (rush hour amplification, paper §IV-C3).
+                let p = 0.35 + 0.4 * self.diurnal(t_ms);
+                self.rng.chance(p)
+            };
+            let dwell = if self.in_burst {
+                self.profile.burst_dwell_ms
+            } else {
+                self.profile.calm_dwell_ms
+            };
+            self.regime_until_ms = t_ms + self.rng.exp(1.0 / dwell);
+        }
+        let base = self.profile.peak_objects * self.diurnal(t_ms);
+        if self.in_burst {
+            base * self.profile.burst_factor
+        } else {
+            base
+        }
+    }
+
+    /// Draw the object count for a frame at `t_ms`.
+    pub fn objects_in_frame(&mut self, t_ms: Ms) -> u32 {
+        let lambda = self.intensity(t_ms);
+        self.rng.poisson(lambda) as u32
+    }
+
+    pub fn in_burst(&self) -> bool {
+        self.in_burst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(shape: fn() -> ContentProfile, seed: u64) -> ContentDynamics {
+        ContentDynamics::new(shape(), Rng::new(seed))
+    }
+
+    #[test]
+    fn traffic_peaks_mid_afternoon() {
+        let d = gen(ContentProfile::traffic, 1);
+        // t offsets from 9 AM start: 3:30 PM = +6.5h; 3 AM = +18h.
+        let peak = d.diurnal(6.5 * 3_600_000.0);
+        let night = d.diurnal(18.0 * 3_600_000.0);
+        assert!(peak > 0.95);
+        assert!(night < 0.3);
+    }
+
+    #[test]
+    fn flat_has_no_modulation() {
+        let d = gen(|| ContentProfile::flat(4.0), 2);
+        assert_eq!(d.diurnal(0.0), 1.0);
+        assert_eq!(d.diurnal(12.0 * 3_600_000.0), 1.0);
+    }
+
+    #[test]
+    fn bursts_raise_mean_count() {
+        let mut d = gen(ContentProfile::traffic, 3);
+        let mut calm = Vec::new();
+        let mut burst = Vec::new();
+        for i in 0..200_000 {
+            let t = i as f64 * 66.7; // 15 fps over ~3.7h
+            let c = d.objects_in_frame(t);
+            if d.in_burst() {
+                burst.push(c as f64);
+            } else {
+                calm.push(c as f64);
+            }
+        }
+        assert!(!burst.is_empty() && !calm.is_empty());
+        let m = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(m(&burst) > 1.6 * m(&calm), "burst {} calm {}", m(&burst), m(&calm));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = gen(ContentProfile::surveillance, 9);
+        let mut b = gen(ContentProfile::surveillance, 9);
+        for i in 0..1000 {
+            let t = i as f64 * 66.7;
+            assert_eq!(a.objects_in_frame(t), b.objects_in_frame(t));
+        }
+    }
+
+    #[test]
+    fn burstiness_of_generated_arrivals_exceeds_poisson() {
+        // Downstream arrivals (object-driven) should be bursty: CV > 1.
+        let mut d = gen(ContentProfile::traffic, 11);
+        let mut arrivals = Vec::new();
+        for i in 0..50_000 {
+            let t = i as f64 * 66.7;
+            for _ in 0..d.objects_in_frame(t) {
+                arrivals.push(t);
+            }
+        }
+        let b = crate::util::stats::burstiness(&arrivals);
+        assert!(b > 1.0, "CV {b}");
+    }
+}

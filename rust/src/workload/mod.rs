@@ -1,0 +1,105 @@
+//! Video-content workload substrate (paper §IV-A3: nine 13-hour real CCTV
+//! streams). We substitute a seeded content-dynamics generator exposing the
+//! same scheduler-visible dials: per-frame object counts with a circadian
+//! (diurnal) intensity curve, Markov-modulated burst episodes (rush hour /
+//! crowd events), and per-class object mixes.
+
+mod content;
+
+pub use content::{ContentDynamics, ContentProfile, DiurnalShape};
+
+use crate::util::stats::burstiness;
+
+/// Sliding window of arrival timestamps used to estimate per-model request
+/// rate and burstiness (CV of inter-arrival gaps) — CWD's Insight 1 inputs.
+#[derive(Clone, Debug)]
+pub struct ArrivalWindow {
+    window_ms: f64,
+    arrivals: std::collections::VecDeque<f64>,
+}
+
+impl ArrivalWindow {
+    pub fn new(window_ms: f64) -> Self {
+        ArrivalWindow { window_ms, arrivals: Default::default() }
+    }
+
+    pub fn record(&mut self, t_ms: f64) {
+        self.arrivals.push_back(t_ms);
+        let cutoff = t_ms - self.window_ms;
+        while self.arrivals.front().is_some_and(|&f| f < cutoff) {
+            self.arrivals.pop_front();
+        }
+    }
+
+    /// Arrivals per second over the window.
+    pub fn rate_qps(&self) -> f64 {
+        if self.arrivals.len() < 2 {
+            return 0.0;
+        }
+        let span =
+            self.arrivals.back().unwrap() - self.arrivals.front().unwrap();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        (self.arrivals.len() - 1) as f64 * 1000.0 / span
+    }
+
+    /// Coefficient of variation of inter-arrival gaps.
+    ///
+    /// Computed directly over the ring buffer (no allocation): this runs
+    /// per instance-group on every autoscaler tick and scheduler round.
+    pub fn burstiness(&self) -> f64 {
+        if self.arrivals.len() < 3 {
+            return 0.0;
+        }
+        let mut s = crate::util::stats::Summary::new();
+        let mut prev: Option<f64> = None;
+        for &t in &self.arrivals {
+            if let Some(p) = prev {
+                s.push((t - p).max(0.0));
+            }
+            prev = Some(t);
+        }
+        s.cv()
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_evicts_old() {
+        let mut w = ArrivalWindow::new(1000.0);
+        for i in 0..100 {
+            w.record(i as f64 * 100.0);
+        }
+        assert!(w.len() <= 11);
+    }
+
+    #[test]
+    fn rate_estimates_regular_stream() {
+        let mut w = ArrivalWindow::new(10_000.0);
+        for i in 0..50 {
+            w.record(i as f64 * 100.0); // 10/s
+        }
+        assert!((w.rate_qps() - 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn burstiness_zero_for_regular() {
+        let mut w = ArrivalWindow::new(10_000.0);
+        for i in 0..50 {
+            w.record(i as f64 * 100.0);
+        }
+        assert!(w.burstiness() < 1e-9);
+    }
+}

@@ -1,0 +1,342 @@
+//! Property-based tests over coordinator invariants, using the in-tree
+//! `util::prop` mini-framework (offline registry has no proptest).
+
+use octopinf::cluster::Cluster;
+use octopinf::coordinator::coral::coral;
+use octopinf::coordinator::cwd::{cwd, CwdParams};
+use octopinf::coordinator::estimator::est_latency;
+use octopinf::coordinator::stream::{FreePortion, GpuStreams, Portion, Stream};
+use octopinf::coordinator::{GpuId, SchedEnv, StageCfg};
+use octopinf::network::BwTrace;
+use octopinf::pipeline::{standard_pipelines, PipelineDag};
+use octopinf::profiles::{ProfileStore, BATCH_SIZES};
+use octopinf::serving::DynamicBatcher;
+use octopinf::util::prop::{check, forall};
+use octopinf::util::Rng;
+
+/// Random scheduling environment: pipelines, rates, bandwidths.
+struct EnvInput {
+    n_pipelines: usize,
+    fps: f64,
+    bw: f64,
+    rate_scale: f64,
+}
+
+impl std::fmt::Debug for EnvInput {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "EnvInput(n={}, fps={:.1}, bw={:.1}, scale={:.2})",
+            self.n_pipelines, self.fps, self.bw, self.rate_scale
+        )
+    }
+}
+
+fn gen_env_input(r: &mut Rng) -> EnvInput {
+    EnvInput {
+        n_pipelines: 1 + r.below(6),
+        fps: r.range(5.0, 30.0),
+        bw: r.range(2.0, 200.0),
+        rate_scale: r.range(0.2, 4.0),
+    }
+}
+
+fn build_pipelines(inp: &EnvInput) -> Vec<PipelineDag> {
+    standard_pipelines(inp.n_pipelines)
+        .into_iter()
+        .map(|mut p| {
+            p.source_device += 1;
+            p.source_fps = inp.fps;
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cwd_respects_slo_guard_and_batch_domain() {
+    let cluster = Cluster::paper_testbed();
+    let profiles = ProfileStore::analytic();
+    forall(101, 40, gen_env_input, |inp| {
+        let pipelines = build_pipelines(inp);
+        let mut env = SchedEnv::bootstrap(
+            &cluster,
+            &profiles,
+            &pipelines,
+            vec![inp.bw; cluster.devices.len()],
+        );
+        for row in env.obs.iter_mut() {
+            for o in row.iter_mut() {
+                o.rate_qps *= inp.rate_scale;
+            }
+        }
+        for (p, r) in cwd(&env, &CwdParams::default()).iter().enumerate() {
+            for c in &r.cfg {
+                check(BATCH_SIZES.contains(&c.batch), format!("batch {}", c.batch))?;
+                check(c.instances >= 1 && c.instances <= 16, "instances bound")?;
+                check(
+                    c.device < cluster.devices.len(),
+                    format!("device {}", c.device),
+                )?;
+            }
+            // CWD's guard: the result meets SLO/2, OR the environment is
+            // such that even the minimal all-server fallback cannot (an
+            // overloaded cluster / dead network / IO-ratio revert) — in
+            // which case CWD must not be *worse* than that fallback.
+            let lat = est_latency(&env, p, &r.cfg);
+            let fallback: Vec<StageCfg> = (0..r.cfg.len())
+                .map(|_| StageCfg { device: 0, batch: 1, instances: 16 })
+                .collect();
+            let fb_lat = est_latency(&env, p, &fallback);
+            check(
+                lat <= (pipelines[p].slo_ms / 2.0).max(fb_lat) + 1e-6
+                    || lat.is_infinite(),
+                format!("pipeline {p} est latency {lat} > max(SLO/2, fallback {fb_lat})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coral_memory_util_and_device_affinity() {
+    let cluster = Cluster::paper_testbed();
+    let profiles = ProfileStore::analytic();
+    forall(202, 30, gen_env_input, |inp| {
+        let pipelines = build_pipelines(inp);
+        let env = SchedEnv::bootstrap(
+            &cluster,
+            &profiles,
+            &pipelines,
+            vec![inp.bw; cluster.devices.len()],
+        );
+        let cfgs: Vec<Vec<StageCfg>> =
+            cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+        let plan = coral(&env, &cfgs);
+        // Recompute per-GPU budgets from the plan's reserved bindings.
+        use std::collections::HashMap;
+        let mut weight: HashMap<GpuId, f64> = HashMap::new();
+        let mut inter: HashMap<(GpuId, usize), f64> = HashMap::new();
+        let mut width: HashMap<(GpuId, usize), f64> = HashMap::new();
+        for a in &plan.assignments {
+            check(a.cfg.instances as usize == a.bindings.len(), "binding count")?;
+            let spec = &pipelines[a.pipeline].models[a.model].spec;
+            for b in &a.bindings {
+                check(b.gpu.device == a.cfg.device, "binding on wrong device")?;
+                if let Some(t) = b.temporal {
+                    *weight.entry(b.gpu).or_default() += spec.weight_mem_mb;
+                    let e = inter.entry((b.gpu, t.stream)).or_default();
+                    *e = e.max(spec.inter_mem_mb * a.cfg.batch as f64);
+                    let w = width.entry((b.gpu, t.stream)).or_default();
+                    *w = w.max(b.width);
+                }
+            }
+        }
+        for d in &cluster.devices {
+            for (gi, g) in d.gpus.iter().enumerate() {
+                let id = GpuId { device: d.id, gpu: gi };
+                let wsum = weight.get(&id).copied().unwrap_or(0.0);
+                let isum: f64 = inter
+                    .iter()
+                    .filter(|((g2, _), _)| *g2 == id)
+                    .map(|(_, v)| v)
+                    .sum();
+                check(
+                    wsum + isum <= g.mem_mb + 1e-6,
+                    format!("{id:?} memory {wsum}+{isum} > {}", g.mem_mb),
+                )?;
+                let usum: f64 = width
+                    .iter()
+                    .filter(|((g2, _), _)| *g2 == id)
+                    .map(|(_, v)| v)
+                    .sum();
+                check(usum <= g.util_cap + 1e-6, format!("{id:?} util {usum}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stream_portions_never_overlap() {
+    forall(
+        303,
+        200,
+        |r| {
+            // Random portion insert sequence into one stream.
+            let n = 1 + r.below(20);
+            (0..n)
+                .map(|_| (r.range(0.0, 200.0), r.range(0.5, 30.0), r.range(0.05, 0.5)))
+                .collect::<Vec<_>>()
+        },
+        |reqs| {
+            let gpu = GpuId { device: 0, gpu: 0 };
+            let mut s = Stream::new(gpu, 0);
+            s.duty_cycle_ms = 250.0;
+            for &(start, dur, w) in reqs {
+                // Only insert via a fitting free portion, like CORAL does.
+                let free = s.free_portions(250.0);
+                if let Some(f) = free.iter().find_map(|f| {
+                    f.fit(start, dur).map(|st| FreePortion {
+                        start_ms: st,
+                        ..*f
+                    })
+                }) {
+                    s.insert(
+                        Portion {
+                            start_ms: f.start_ms,
+                            end_ms: f.start_ms + dur,
+                            width: w,
+                            owner: (0, 0, 0),
+                        },
+                        1.0,
+                    );
+                }
+            }
+            // Invariant: sorted portions are disjoint.
+            let mut ps = s.portions.clone();
+            ps.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+            for w in ps.windows(2) {
+                check(
+                    w[0].end_ms <= w[1].start_ms + 1e-9,
+                    format!("overlap {:?} {:?}", w[0], w[1]),
+                )?;
+            }
+            // Free time + occupied time == duty cycle.
+            let occ = s.occupancy_ms();
+            let free: f64 = s.free_portions(250.0).iter().map(|f| f.len()).sum();
+            check(
+                (occ + free - 250.0).abs() < 1e-6,
+                format!("time leak: occ {occ} + free {free} != 250"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_gpu_admits_is_monotone() {
+    forall(
+        404,
+        200,
+        |r| {
+            (
+                r.range(10.0, 1000.0),  // mem cap
+                r.range(0.0, 500.0),    // weight
+                r.range(0.0, 300.0),    // inter
+                r.range(0.0, 1.0),      // width
+            )
+        },
+        |&(cap, w, i, wd)| {
+            let gpu = GpuId { device: 0, gpu: 0 };
+            let g = GpuStreams::new(gpu, cap, 1.0, 2);
+            let admit = g.admits(0, w, i, wd);
+            // Anything strictly smaller must also be admitted.
+            if admit {
+                check(
+                    g.admits(0, w * 0.5, i * 0.5, wd * 0.5),
+                    "smaller request rejected while larger admitted",
+                )?;
+            }
+            // Anything beyond the caps must be rejected.
+            check(!g.admits(0, cap + 1.0, 0.0, 0.1), "over-memory admitted")?;
+            check(!g.admits(0, 0.0, 0.0, 1.5), "over-util admitted")
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_requests_in_fifo_order() {
+    forall(
+        505,
+        150,
+        |r| {
+            let batch = 1 + r.below(8);
+            let wait = r.range(1.0, 50.0);
+            let n = 1 + r.below(100);
+            let arrivals: Vec<f64> = {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += r.exp(0.2);
+                        t
+                    })
+                    .collect()
+            };
+            (batch, wait, arrivals)
+        },
+        |(batch, wait, arrivals)| {
+            let mut b: DynamicBatcher<usize> = DynamicBatcher::new(*batch, *wait);
+            let mut out = Vec::new();
+            for (id, &t) in arrivals.iter().enumerate() {
+                if let Some(batch) = b.push(id, t) {
+                    out.extend(batch);
+                }
+                if let Some(batch) = b.poll(t) {
+                    out.extend(batch);
+                }
+            }
+            if let Some(rest) = b.flush() {
+                out.extend(rest);
+            }
+            check(out.len() == arrivals.len(), "lost or duplicated requests")?;
+            check(
+                out.windows(2).all(|w| w[0] < w[1]),
+                "FIFO order violated",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_bw_traces_nonnegative_and_deterministic() {
+    forall(
+        606,
+        50,
+        |r| (r.next_u64(), r.range(10_000.0, 600_000.0)),
+        |&(seed, dur)| {
+            let a = BwTrace::generate(
+                octopinf::network::TraceKind::Lte,
+                dur,
+                &mut Rng::new(seed),
+            );
+            let b = BwTrace::generate(
+                octopinf::network::TraceKind::Lte,
+                dur,
+                &mut Rng::new(seed),
+            );
+            for i in 0..(dur / 1000.0) as usize {
+                let t = i as f64 * 1000.0;
+                check(a.bandwidth_mbps(t) >= 0.0, "negative bandwidth")?;
+                check(
+                    a.bandwidth_mbps(t) == b.bandwidth_mbps(t),
+                    "trace not deterministic",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_split_points_bounded_by_depth() {
+    let cluster = Cluster::paper_testbed();
+    let profiles = ProfileStore::analytic();
+    forall(707, 30, gen_env_input, |inp| {
+        let pipelines = build_pipelines(inp);
+        let env = SchedEnv::bootstrap(
+            &cluster,
+            &profiles,
+            &pipelines,
+            vec![inp.bw; cluster.devices.len()],
+        );
+        let cfgs: Vec<Vec<StageCfg>> =
+            cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+        let plan = coral(&env, &cfgs);
+        for (p, dag) in pipelines.iter().enumerate() {
+            let splits = plan.split_points(p, dag);
+            // Insight 3: splits are minimized; a 3-stage DAG never needs
+            // more than 2 and CWD should not zig-zag.
+            check(splits <= 2, format!("pipeline {p}: {splits} splits"))?;
+        }
+        Ok(())
+    });
+}
