@@ -2,8 +2,19 @@
 //! Shared mini bench harness (the offline registry has no criterion):
 //! wall-clock the figure regenerators, print their tables, and emit a
 //! `name ... elapsed` summary line per bench for bench_output.txt.
+//!
+//! A [`Recorder`] additionally captures every measurement and writes a
+//! machine-readable `BENCH_<name>.json` (name, iters, ns/op) next to the
+//! human output, so bench trajectories can be tracked across PRs without
+//! scraping stdout. JSON is hand-rendered — no serde in the registry.
 
 use std::time::Instant;
+
+/// Worker count for parallel experiment grids: `JOBS` env var, defaulting
+/// to 0 ("one worker per hardware thread" — see `experiments::runner`).
+pub fn jobs_from_env() -> usize {
+    std::env::var("JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
 
 pub fn bench<F: FnOnce() -> String>(name: &str, f: F) {
     let t0 = Instant::now();
@@ -15,7 +26,8 @@ pub fn bench<F: FnOnce() -> String>(name: &str, f: F) {
 }
 
 /// Micro-benchmark: run `f` `iters` times, report ns/iter stats.
-pub fn micro<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+/// Returns the measured ns/iter so callers can record it.
+pub fn micro<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // Warmup.
     f();
     let t0 = Instant::now();
@@ -34,4 +46,64 @@ pub fn micro<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         (per * 1e9, "ns")
     };
     println!("micro {name:<40} {value:>10.2} {unit}/iter  ({iters} iters)");
+    per * 1e9
+}
+
+/// One recorded measurement.
+struct Entry {
+    name: String,
+    iters: usize,
+    ns_per_iter: f64,
+}
+
+/// Collects micro-bench results and writes `BENCH_<bench>.json`.
+pub struct Recorder {
+    bench: String,
+    entries: Vec<Entry>,
+}
+
+impl Recorder {
+    pub fn new(bench: &str) -> Recorder {
+        Recorder { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Run and record a micro-benchmark (same output as [`micro`]).
+    pub fn micro<F: FnMut()>(&mut self, name: &str, iters: usize, f: F) {
+        let ns_per_iter = micro(name, iters, f);
+        self.entries.push(Entry { name: name.to_string(), iters, ns_per_iter });
+    }
+
+    /// Render the collected entries as JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", escape(&self.bench)));
+        out.push_str("  \"results\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {:.1}}}{}\n",
+                escape(&e.name),
+                e.iters,
+                e.ns_per_iter,
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<bench>.json` into the working directory (the repo
+    /// root under `cargo bench`). Prints the path on success.
+    pub fn write(&self) {
+        let path = format!("BENCH_{}.json", self.bench);
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Minimal JSON string escaping (names are plain ASCII identifiers).
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }

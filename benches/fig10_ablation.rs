@@ -9,7 +9,8 @@ use octopinf::experiments;
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
+    let jobs = common::jobs_from_env();
     common::bench("fig10_ablation", || {
-        experiments::fig10_ablation(quick).to_markdown()
+        experiments::fig10_ablation(quick, jobs).to_markdown()
     });
 }

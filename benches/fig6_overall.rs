@@ -2,7 +2,8 @@
 //! Jellyfish, Rim on the standard 9-camera / 5G / 30-min scenario, plus
 //! OctopInf's workload-tracking timeline.
 //!
-//! `cargo bench --bench fig6_overall` (QUICK=1 for a 5-min version).
+//! `cargo bench --bench fig6_overall` (QUICK=1 for a 5-min version,
+//! JOBS=N to bound the parallel grid; default: all hardware threads).
 
 mod common;
 
@@ -10,8 +11,9 @@ use octopinf::experiments;
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
+    let jobs = common::jobs_from_env();
     common::bench("fig6a-c_overall_comparison", || {
-        experiments::fig6_overall(quick).to_markdown()
+        experiments::fig6_overall(quick, jobs).to_markdown()
     });
     common::bench("fig6d_workload_tracking", || {
         experiments::fig6_timeline(quick).to_markdown()

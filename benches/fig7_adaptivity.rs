@@ -9,7 +9,8 @@ use octopinf::experiments;
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
-    for (name, table) in experiments::fig7_adaptivity(quick) {
+    let jobs = common::jobs_from_env();
+    for (name, table) in experiments::fig7_adaptivity(quick, jobs) {
         common::bench(&format!("fig7_{name}"), || table.to_markdown());
     }
 }

@@ -9,7 +9,8 @@ use octopinf::experiments;
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
+    let jobs = common::jobs_from_env();
     common::bench("fig8_double_workload", || {
-        experiments::fig8_scale(quick).to_markdown()
+        experiments::fig8_scale(quick, jobs).to_markdown()
     });
 }

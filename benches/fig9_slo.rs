@@ -9,5 +9,8 @@ use octopinf::experiments;
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
-    common::bench("fig9_strict_slo", || experiments::fig9_slo(quick).to_markdown());
+    let jobs = common::jobs_from_env();
+    common::bench("fig9_strict_slo", || {
+        experiments::fig9_slo(quick, jobs).to_markdown()
+    });
 }

@@ -1,5 +1,6 @@
 //! Hot-path micro-benchmarks for the §Perf pass: the operations that
-//! dominate the simulator and the serving loop.
+//! dominate the simulator and the serving loop. Emits the human summary
+//! plus machine-readable `BENCH_hotpath.json` for trajectory tracking.
 
 mod common;
 
@@ -7,30 +8,32 @@ use octopinf::config::ExperimentConfig;
 use octopinf::coordinator::SchedulerKind;
 use octopinf::serving::DynamicBatcher;
 use octopinf::sim::{run, Scenario};
-use octopinf::util::stats::{burstiness, Percentiles};
+use octopinf::util::stats::{burstiness, QuantileSketch};
 use octopinf::util::Rng;
 use octopinf::workload::{ArrivalWindow, ContentDynamics, ContentProfile};
 
 fn main() {
+    let mut rec = common::Recorder::new("hotpath");
+
     // End-to-end simulator throughput: events/s over a 2-minute scenario.
     let mut cfg = ExperimentConfig::default();
     cfg.duration_ms = 2.0 * 60_000.0;
     let sc = Scenario::build(cfg);
-    common::micro("sim 2min standard octopinf", 3, || {
+    rec.micro("sim 2min standard octopinf", 3, || {
         std::hint::black_box(run(&sc, SchedulerKind::OctopInf));
     });
 
     // Batcher push/poll cycle.
     let mut b: DynamicBatcher<u64> = DynamicBatcher::new(8, 20.0);
     let mut i = 0u64;
-    common::micro("batcher push+drain", 1_000_000, || {
+    rec.micro("batcher push+drain", 1_000_000, || {
         i += 1;
         if let Some(v) = b.push(i, i as f64) {
             std::hint::black_box(v);
         }
     });
 
-    // Arrival-window burstiness estimation.
+    // Arrival-window burstiness estimation (O(1) incremental aggregates).
     let mut w = ArrivalWindow::new(60_000.0);
     let mut t = 0.0;
     let mut rng = Rng::new(1);
@@ -38,23 +41,33 @@ fn main() {
         t += rng.exp(0.05);
         w.record(t);
     }
-    common::micro("arrival window rate+cv", 20_000, || {
+    rec.micro("arrival window rate+cv", 20_000, || {
         std::hint::black_box((w.rate_qps(), w.burstiness()));
+    });
+
+    // Arrival-window steady-state record (eviction churn included).
+    let mut wr = ArrivalWindow::new(1_000.0);
+    let mut tr = 0.0;
+    let mut rngr = Rng::new(5);
+    rec.micro("arrival window record", 1_000_000, || {
+        tr += rngr.exp(0.1);
+        wr.record(tr);
     });
 
     // Content generator.
     let mut cd = ContentDynamics::new(ContentProfile::traffic(), Rng::new(2));
     let mut ft = 0.0;
-    common::micro("content objects_in_frame", 1_000_000, || {
+    rec.micro("content objects_in_frame", 1_000_000, || {
         ft += 66.7;
         std::hint::black_box(cd.objects_in_frame(ft));
     });
 
-    // Percentile extraction on a large latency set.
+    // Percentile extraction on a large latency set (streaming sketch —
+    // the type RunMetrics/ServeReport record latencies through).
     let mut rng2 = Rng::new(3);
     let samples: Vec<f64> = (0..500_000).map(|_| rng2.range(0.0, 400.0)).collect();
-    common::micro("percentiles 500k samples", 5, || {
-        let mut p = Percentiles::new();
+    rec.micro("percentiles 500k samples", 5, || {
+        let mut p = QuantileSketch::new();
         for &s in &samples {
             p.push(s);
         }
@@ -72,7 +85,9 @@ fn main() {
             })
             .collect()
     };
-    common::micro("burstiness 100k arrivals", 50, || {
+    rec.micro("burstiness 100k arrivals", 50, || {
         std::hint::black_box(burstiness(&arrivals));
     });
+
+    rec.write();
 }

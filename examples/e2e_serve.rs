@@ -12,12 +12,14 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use octopinf::ensure;
 use octopinf::runtime::default_artifacts_dir;
 use octopinf::serving::{serve, ModelServeCfg, Request, Response};
+use octopinf::util::error::Result;
 use octopinf::util::table::{fnum, Table};
 use octopinf::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let seconds: f64 = std::env::var("E2E_SECONDS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -29,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let slo_ms = 200.0; // traffic pipeline SLO
 
     let dir = default_artifacts_dir();
-    anyhow::ensure!(
+    ensure!(
         dir.join("manifest.tsv").exists(),
         "artifacts missing — run `make artifacts` first"
     );
@@ -93,7 +95,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("serving {} s of {} fps camera traffic through PJRT...", seconds, fps);
-    let mut report = serve(&dir, &cfgs, req_rx, resp_tx)?;
+    let report = serve(&dir, &cfgs, req_rx, resp_tx)?;
     producer.join().unwrap();
     let delivered = drain.join().unwrap();
 

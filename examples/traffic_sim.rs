@@ -32,7 +32,7 @@ fn main() {
         "gpu_util%",
     ]);
     for kind in SchedulerKind::all_main() {
-        let mut m = run(&sc, kind);
+        let m = run(&sc, kind);
         t.row(vec![
             kind.label().to_string(),
             fnum(m.effective_throughput(), 1),

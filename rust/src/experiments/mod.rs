@@ -1,13 +1,19 @@
 //! Figure/table regenerators: one function per evaluation artifact of the
-//! paper (§IV, Fig. 6-11). Each runs the simulator over the relevant
-//! scenario + scheduler set and renders the same rows/series the paper
-//! reports. Shared by `octopinf figure N` and the bench harness.
+//! paper (§IV, Fig. 6-11). Each builds the relevant (scheduler, seed,
+//! scenario) grid, fans it across worker threads via [`runner::run_grid`]
+//! (`jobs = 0` → all hardware threads, `1` → sequential), and renders the
+//! same rows/series the paper reports. Cells are independent and seeded,
+//! so tables are byte-identical at any job count. Shared by
+//! `octopinf figure N [--jobs N]` and the bench harness.
+
+pub mod runner;
+
+pub use runner::{run_grid, run_one, RunSpec};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::SchedulerKind;
-use crate::metrics::RunMetrics;
 use crate::network::TraceKind;
-use crate::sim::{run, Scenario};
+use crate::sim::Scenario;
 use crate::util::table::{fnum, Table};
 
 /// Duration used when `quick` (benches/smoke): 5 simulated minutes.
@@ -15,18 +21,22 @@ fn dur(quick: bool, full_min: f64) -> f64 {
     if quick { 5.0 * 60_000.0 } else { full_min * 60_000.0 }
 }
 
-fn run_kind(cfg: &ExperimentConfig, kind: SchedulerKind) -> RunMetrics {
-    let sc = Scenario::build(cfg.clone());
-    run(&sc, kind)
+/// Grid of all main systems over one shared config.
+fn main_grid(cfg: &ExperimentConfig) -> Vec<RunSpec> {
+    SchedulerKind::all_main()
+        .iter()
+        .map(|&k| RunSpec::new(k.label(), cfg.clone(), k))
+        .collect()
 }
 
 /// Fig. 6a-c: overall comparison — effective vs total throughput, latency
 /// distribution stats, and total memory, per system.
-pub fn fig6_overall(quick: bool) -> Table {
+pub fn fig6_overall(quick: bool, jobs: usize) -> Table {
     let cfg = ExperimentConfig {
         duration_ms: dur(quick, 30.0),
         ..Default::default()
     };
+    let results = run_grid(&main_grid(&cfg), jobs);
     let mut t = Table::new(vec![
         "system",
         "eff_thpt(obj/s)",
@@ -36,8 +46,7 @@ pub fn fig6_overall(quick: bool) -> Table {
         "lat_p95(ms)",
         "memory(MB)",
     ]);
-    for kind in SchedulerKind::all_main() {
-        let mut m = run_kind(&cfg, kind);
+    for (kind, m) in SchedulerKind::all_main().iter().zip(&results) {
         t.row(vec![
             kind.label().to_string(),
             fnum(m.effective_throughput(), 1),
@@ -57,7 +66,7 @@ pub fn fig6_timeline(quick: bool) -> Table {
         duration_ms: dur(quick, 30.0),
         ..Default::default()
     };
-    let m = run_kind(&cfg, SchedulerKind::OctopInf);
+    let m = run_one(&RunSpec::new("fig6d", cfg, SchedulerKind::OctopInf));
     let mut t = Table::new(vec!["minute", "workload(obj/s)", "effective(obj/s)"]);
     for (i, (w, e)) in m.timeline.iter().enumerate() {
         t.row(vec![format!("{}", i + 1), fnum(*w, 1), fnum(*e, 1)]);
@@ -67,20 +76,27 @@ pub fn fig6_timeline(quick: bool) -> Table {
 
 /// Fig. 7: per-source adaptivity under LTE traces — workload, bandwidth,
 /// and throughput per minute for each individual source.
-pub fn fig7_adaptivity(quick: bool) -> Vec<(String, Table)> {
+pub fn fig7_adaptivity(quick: bool, jobs: usize) -> Vec<(String, Table)> {
     let n_sources = if quick { 2 } else { 4 };
+    let specs: Vec<RunSpec> = (0..n_sources)
+        .map(|s| {
+            let cfg = ExperimentConfig {
+                n_sources: 1,
+                trace: TraceKind::Lte,
+                duration_ms: dur(quick, 30.0),
+                seed: 42 + s as u64,
+                ..Default::default()
+            };
+            RunSpec::new(format!("fig7 source {s}"), cfg, SchedulerKind::OctopInf)
+        })
+        .collect();
+    let results = run_grid(&specs, jobs);
     let mut out = Vec::new();
-    for s in 0..n_sources {
-        let cfg = ExperimentConfig {
-            n_sources: 1,
-            trace: TraceKind::Lte,
-            duration_ms: dur(quick, 30.0),
-            seed: 42 + s as u64,
-            ..Default::default()
-        };
-        let sc = Scenario::build(cfg);
+    for (s, (spec, m)) in specs.iter().zip(&results).enumerate() {
+        // Rebuild the (cheap, deterministic) scenario for the trace and
+        // pipeline name; the simulation itself ran on the grid above.
+        let sc = Scenario::build(spec.cfg.clone());
         let label = sc.pipelines[0].name.clone();
-        let m = run(&sc, SchedulerKind::OctopInf);
         let mut t =
             Table::new(vec!["minute", "workload(obj/s)", "throughput(obj/s)", "bw(Mbps)"]);
         for (i, (w, e)) in m.timeline.iter().enumerate() {
@@ -98,12 +114,13 @@ pub fn fig7_adaptivity(quick: bool) -> Vec<(String, Table)> {
 }
 
 /// Fig. 8: doubled per-device workload — effective ratio + hardware usage.
-pub fn fig8_scale(quick: bool) -> Table {
+pub fn fig8_scale(quick: bool, jobs: usize) -> Table {
     let cfg = ExperimentConfig {
         cameras_per_device: 2,
         duration_ms: dur(quick, 30.0),
         ..Default::default()
     };
+    let results = run_grid(&main_grid(&cfg), jobs);
     let mut t = Table::new(vec![
         "system",
         "eff_thpt(obj/s)",
@@ -111,8 +128,7 @@ pub fn fig8_scale(quick: bool) -> Table {
         "completion%",
         "gpu_util%",
     ]);
-    for kind in SchedulerKind::all_main() {
-        let m = run_kind(&cfg, kind);
+    for (kind, m) in SchedulerKind::all_main().iter().zip(&results) {
         t.row(vec![
             kind.label().to_string(),
             fnum(m.effective_throughput(), 1),
@@ -125,7 +141,22 @@ pub fn fig8_scale(quick: bool) -> Table {
 }
 
 /// Fig. 9: stricter SLOs — effective throughput at -0/-50/-100 ms.
-pub fn fig9_slo(quick: bool) -> Table {
+/// The full 3×4 grid runs as one fan-out.
+pub fn fig9_slo(quick: bool, jobs: usize) -> Table {
+    const REDUCTIONS: [f64; 3] = [0.0, 50.0, 100.0];
+    let mut specs = Vec::new();
+    for red in REDUCTIONS {
+        let cfg = ExperimentConfig {
+            slo_reduction_ms: red,
+            duration_ms: dur(quick, 30.0),
+            ..Default::default()
+        };
+        specs.extend(main_grid(&cfg).into_iter().map(|mut s| {
+            s.label = format!("-{red}ms {}", s.label);
+            s
+        }));
+    }
+    let results = run_grid(&specs, jobs);
     let mut t = Table::new(vec![
         "slo_reduction",
         "octopinf",
@@ -133,18 +164,14 @@ pub fn fig9_slo(quick: bool) -> Table {
         "jellyfish",
         "rim",
     ]);
-    for red in [0.0, 50.0, 100.0] {
-        let cfg = ExperimentConfig {
-            slo_reduction_ms: red,
-            duration_ms: dur(quick, 30.0),
-            ..Default::default()
-        };
-        let vals: Vec<String> = SchedulerKind::all_main()
-            .iter()
-            .map(|&k| fnum(run_kind(&cfg, k).effective_throughput(), 1))
-            .collect();
+    let width = SchedulerKind::all_main().len();
+    for (i, red) in REDUCTIONS.iter().enumerate() {
         let mut row = vec![format!("-{red}ms")];
-        row.extend(vals);
+        row.extend(
+            results[i * width..(i + 1) * width]
+                .iter()
+                .map(|m| fnum(m.effective_throughput(), 1)),
+        );
         t.row(row);
     }
     t
@@ -152,7 +179,7 @@ pub fn fig9_slo(quick: bool) -> Table {
 
 /// Fig. 10: ablation — full OctopInf vs w/o CORAL vs static batch vs
 /// server-only, plus the two relevant baselines.
-pub fn fig10_ablation(quick: bool) -> Table {
+pub fn fig10_ablation(quick: bool, jobs: usize) -> Table {
     let cfg = ExperimentConfig {
         duration_ms: dur(quick, 30.0),
         ..Default::default()
@@ -165,14 +192,18 @@ pub fn fig10_ablation(quick: bool) -> Table {
         SchedulerKind::Distream,
         SchedulerKind::Jellyfish,
     ];
+    let specs: Vec<RunSpec> = kinds
+        .iter()
+        .map(|&k| RunSpec::new(k.label(), cfg.clone(), k))
+        .collect();
+    let results = run_grid(&specs, jobs);
     let mut t = Table::new(vec![
         "variant",
         "eff_thpt(obj/s)",
         "lat_p50(ms)",
         "lat_p95(ms)",
     ]);
-    for kind in kinds {
-        let mut m = run_kind(&cfg, kind);
+    for (kind, m) in kinds.iter().zip(&results) {
         t.row(vec![
             kind.label().to_string(),
             fnum(m.effective_throughput(), 1),
@@ -196,7 +227,7 @@ pub fn fig11_longterm(quick: bool) -> Table {
         n_sources: if quick { 3 } else { 9 },
         ..Default::default()
     };
-    let m = run_kind(&cfg, SchedulerKind::OctopInf);
+    let m = run_one(&RunSpec::new("fig11", cfg, SchedulerKind::OctopInf));
     let mut t = Table::new(vec!["half_hour", "workload(obj/s)", "effective(obj/s)"]);
     // Aggregate the per-minute timeline into 30-minute buckets.
     for (i, chunk) in m.timeline.chunks(30).enumerate() {

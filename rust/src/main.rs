@@ -9,7 +9,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use octopinf::anyhow;
+use octopinf::util::error::Result;
 
 use octopinf::config::ExperimentConfig;
 use octopinf::coordinator::SchedulerKind;
@@ -25,7 +26,7 @@ const USAGE: &str = "usage: octopinf <profile|simulate|figure|serve> [options]
   simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
            [--seed 42] [--duration-min N]
-  figure   <1|6|7|8|9|10|11> [--quick]
+  figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
   serve    [--duration-s 10] [--fps 30] [--slo-ms 200]";
 
 fn main() {
@@ -90,7 +91,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let kind = SchedulerKind::parse(args.get_or("scheduler", "octopinf"))
         .ok_or_else(|| anyhow!("unknown scheduler"))?;
     let sc = Scenario::build(cfg);
-    let mut m = sim_run(&sc, kind);
+    let m = sim_run(&sc, kind);
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["scheduler".to_string(), kind.label().to_string()]);
     t.row(vec!["effective_thpt(obj/s)".into(), fnum(m.effective_throughput(), 2)]);
@@ -113,22 +114,27 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow!("figure number required (1, 6..11)"))?;
     let quick = args.flag("quick");
+    // Grid cells fan out across `jobs` workers (0 = all hardware
+    // threads); tables are byte-identical at any job count.
+    let jobs = args.jobs();
     match which.as_str() {
         "1" => println!("{}", experiments::table1().to_markdown()),
         "6" => {
             println!("## Fig. 6a-c: overall comparison\n");
-            println!("{}", experiments::fig6_overall(quick).to_markdown());
+            println!("{}", experiments::fig6_overall(quick, jobs).to_markdown());
             println!("\n## Fig. 6d: OctopInf workload tracking\n");
             println!("{}", experiments::fig6_timeline(quick).to_markdown());
         }
         "7" => {
-            for (name, t) in experiments::fig7_adaptivity(quick) {
+            for (name, t) in experiments::fig7_adaptivity(quick, jobs) {
                 println!("## Fig. 7: {name}\n\n{}\n", t.to_markdown());
             }
         }
-        "8" => println!("{}", experiments::fig8_scale(quick).to_markdown()),
-        "9" => println!("{}", experiments::fig9_slo(quick).to_markdown()),
-        "10" => println!("{}", experiments::fig10_ablation(quick).to_markdown()),
+        "8" => println!("{}", experiments::fig8_scale(quick, jobs).to_markdown()),
+        "9" => println!("{}", experiments::fig9_slo(quick, jobs).to_markdown()),
+        "10" => {
+            println!("{}", experiments::fig10_ablation(quick, jobs).to_markdown())
+        }
         "11" => println!("{}", experiments::fig11_longterm(quick).to_markdown()),
         other => return Err(anyhow!("unknown figure {other:?}")),
     }
@@ -199,7 +205,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n
     });
 
-    let mut report = serve(&dir, &cfgs, req_rx, resp_tx)?;
+    let report = serve(&dir, &cfgs, req_rx, resp_tx)?;
     gen.join().unwrap();
     let delivered = drain.join().unwrap();
 

@@ -2,7 +2,7 @@
 //! per second), end-to-end latency distributions, and total GPU memory
 //! allocation — plus the per-minute timelines behind Fig. 6d/7/11.
 
-use crate::util::stats::{Histogram, Percentiles};
+use crate::util::stats::{Histogram, QuantileSketch};
 use crate::Ms;
 
 /// Outcome of one query at the sink.
@@ -20,8 +20,9 @@ pub struct RunMetrics {
     pub on_time: u64,
     pub late: u64,
     pub dropped: u64,
-    /// Latency samples of completed (on-time + late) queries.
-    pub latency: Percentiles,
+    /// Latency distribution of completed (on-time + late) queries —
+    /// a streaming sketch, so recording stays O(1) and allocation-free.
+    pub latency: QuantileSketch,
     pub latency_hist: Histogram,
     /// Peak total GPU memory allocated, MB.
     pub peak_memory_mb: f64,
@@ -38,7 +39,7 @@ impl RunMetrics {
             on_time: 0,
             late: 0,
             dropped: 0,
-            latency: Percentiles::new(),
+            latency: QuantileSketch::new(),
             latency_hist: Histogram::new(0.0, 1000.0, 50),
             peak_memory_mb: 0.0,
             timeline: Vec::new(),
@@ -47,16 +48,25 @@ impl RunMetrics {
     }
 
     pub fn record(&mut self, outcome: Outcome, latency_ms: Ms) {
+        self.record_n(outcome, latency_ms, 1);
+    }
+
+    /// Bulk path: record `n` queries sharing one outcome/latency in O(1)
+    /// (lazy-drop sweeps, per-object sink fanout).
+    pub fn record_n(&mut self, outcome: Outcome, latency_ms: Ms, n: u64) {
+        if n == 0 {
+            return;
+        }
         match outcome {
-            Outcome::OnTime => self.on_time += 1,
-            Outcome::Late => self.late += 1,
+            Outcome::OnTime => self.on_time += n,
+            Outcome::Late => self.late += n,
             Outcome::Dropped => {
-                self.dropped += 1;
+                self.dropped += n;
                 return;
             }
         }
-        self.latency.push(latency_ms);
-        self.latency_hist.push(latency_ms);
+        self.latency.push_n(latency_ms, n);
+        self.latency_hist.push_n(latency_ms, n);
     }
 
     /// Effective throughput: on-time completions per second (objects/s).
@@ -130,6 +140,24 @@ mod tests {
         m.record(Outcome::Dropped, 123.0);
         assert!(m.latency.is_empty());
         assert_eq!(m.dropped, 1);
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let mut a = RunMetrics::new(10_000.0);
+        let mut b = RunMetrics::new(10_000.0);
+        for _ in 0..9 {
+            a.record(Outcome::OnTime, 42.0);
+        }
+        a.record(Outcome::Dropped, 0.0);
+        b.record_n(Outcome::OnTime, 42.0, 9);
+        b.record_n(Outcome::Dropped, 0.0, 1);
+        b.record_n(Outcome::Late, 1.0, 0); // no-op
+        assert_eq!(a.on_time, b.on_time);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.late, b.late);
+        assert_eq!(a.latency.p50(), b.latency.p50());
+        assert_eq!(a.latency_hist.total(), b.latency_hist.total());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 /// Metadata of one compiled (model, batch) artifact.
 #[derive(Clone, Debug)]

@@ -1,0 +1,144 @@
+//! XLA/PJRT-backed runtime (the `pjrt` feature). Requires the `xla` crate
+//! from the offline registry; see Cargo.toml.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (jax >= 0.5 emits 64-bit-id protos that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::anyhow;
+use crate::runtime::{ArtifactMeta, Manifest};
+use crate::util::error::{Context, Result};
+
+/// A compiled executable for one (model, batch).
+pub struct Engine {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Run one batch. `input` must contain exactly
+    /// `batch * prod(input_shape)` f32s (pad partial batches first).
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want: usize =
+            self.meta.batch * self.meta.input_shape.iter().product::<usize>();
+        if input.len() != want {
+            return Err(anyhow!(
+                "{}_b{}: input len {} != expected {}",
+                self.meta.model,
+                self.meta.batch,
+                input.len(),
+                want
+            ));
+        }
+        let mut dims: Vec<i64> = vec![self.meta.batch as i64];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Output element count per batch.
+    pub fn output_len(&self) -> usize {
+        self.meta.batch * self.meta.output_shape.iter().product::<usize>()
+    }
+}
+
+/// Loads and caches engines for every artifact in a directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    engines: HashMap<(String, usize), Engine>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.tsv"))
+            .with_context(|| {
+                format!(
+                    "loading manifest from {} (run `make artifacts` first)",
+                    artifacts_dir.display()
+                )
+            })?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            engines: HashMap::new(),
+        })
+    }
+
+    /// Compile (and cache) the engine for (model, batch).
+    pub fn engine(&mut self, model: &str, batch: usize) -> Result<&Engine> {
+        let key = (model.to_string(), batch);
+        if !self.engines.contains_key(&key) {
+            let meta = self
+                .manifest
+                .get(model, batch)
+                .ok_or_else(|| anyhow!("no artifact {model}_b{batch}"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.engines.insert(key.clone(), Engine { meta, exe });
+        }
+        Ok(&self.engines[&key])
+    }
+
+    /// Execute with automatic padding of a partial batch: `n` real samples
+    /// in `input` (row-major); returns only the real samples' outputs.
+    pub fn execute_padded(
+        &mut self,
+        model: &str,
+        batch: usize,
+        n: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>> {
+        let engine = self.engine(model, batch)?;
+        let per_in: usize = engine.meta.input_shape.iter().product();
+        let per_out: usize = engine.meta.output_shape.iter().product();
+        if n > batch || input.len() != n * per_in {
+            return Err(anyhow!(
+                "execute_padded: n={n} batch={batch} input={}",
+                input.len()
+            ));
+        }
+        let mut padded = input.to_vec();
+        padded.resize(batch * per_in, 0.0);
+        let out = engine.execute(&padded)?;
+        Ok(out[..n * per_out].to_vec())
+    }
+
+    /// Wall-clock profile: run (model, batch) `reps` times, return the
+    /// median batch latency in ms. Feeds `ProfileStore::load_tsv`.
+    pub fn profile(&mut self, model: &str, batch: usize, reps: usize) -> Result<f64> {
+        let engine = self.engine(model, batch)?;
+        let per_in: usize = engine.meta.input_shape.iter().product();
+        let input = vec![0.5f32; batch * per_in];
+        // Warmup.
+        engine.execute(&input)?;
+        let mut times: Vec<f64> = (0..reps.max(1))
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                engine.execute(&input).map(|_| t0.elapsed().as_secs_f64() * 1e3)
+            })
+            .collect::<Result<_>>()?;
+        times.sort_by(|a, b| a.total_cmp(b));
+        Ok(times[times.len() / 2])
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.manifest.models()
+    }
+}

@@ -1,0 +1,75 @@
+//! Build-time stand-in for the PJRT runtime when the `pjrt` feature is
+//! off: the same API surface, with every entry point failing cleanly so
+//! callers (CLI `profile`/`serve`, the e2e example) report a clear error
+//! instead of the crate failing to build without the `xla` dependency.
+//! The simulator/scheduler stack never touches this module.
+
+use std::path::Path;
+
+use crate::anyhow;
+use crate::runtime::{ArtifactMeta, Manifest};
+use crate::util::error::Result;
+
+const NO_PJRT: &str = "octopinf was built without the `pjrt` feature; \
+    real PJRT execution is unavailable (rebuild with `--features pjrt` \
+    and the `xla` dependency — simulation paths are unaffected)";
+
+/// A compiled executable for one (model, batch) — stub.
+pub struct Engine {
+    pub meta: ArtifactMeta,
+}
+
+impl Engine {
+    pub fn execute(&self, _input: &[f32]) -> Result<Vec<f32>> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    /// Output element count per batch.
+    pub fn output_len(&self) -> usize {
+        self.meta.batch * self.meta.output_shape.iter().product::<usize>()
+    }
+}
+
+/// Loads and caches engines for every artifact in a directory — stub.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(_artifacts_dir: &Path) -> Result<Runtime> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn engine(&mut self, model: &str, batch: usize) -> Result<&Engine> {
+        Err(anyhow!("{NO_PJRT} (requested {model}_b{batch})"))
+    }
+
+    pub fn execute_padded(
+        &mut self,
+        model: &str,
+        batch: usize,
+        _n: usize,
+        _input: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(anyhow!("{NO_PJRT} (requested {model}_b{batch})"))
+    }
+
+    pub fn profile(&mut self, model: &str, batch: usize, _reps: usize) -> Result<f64> {
+        Err(anyhow!("{NO_PJRT} (requested {model}_b{batch})"))
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.manifest.models()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_cleanly() {
+        let err = Runtime::new(Path::new("artifacts")).err().unwrap();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

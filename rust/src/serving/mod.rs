@@ -17,10 +17,9 @@ use std::path::Path;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
-use anyhow::Result;
-
 use crate::runtime::Runtime;
-use crate::util::stats::Percentiles;
+use crate::util::error::Result;
+use crate::util::stats::QuantileSketch;
 
 /// One inference request (a frame or a crop, row-major f32).
 pub struct Request {
@@ -55,7 +54,8 @@ pub struct ServeReport {
     pub served: u64,
     pub on_time: u64,
     pub per_model: HashMap<String, u64>,
-    pub latency: Percentiles,
+    /// Streaming latency sketch: O(1) recording on the executor thread.
+    pub latency: QuantileSketch,
     pub batch_hist: HashMap<usize, u64>,
     pub wall_ms: f64,
 }

@@ -69,6 +69,9 @@ struct Query {
 
 /// Instance-group runtime state for one (pipeline, model).
 struct Group {
+    /// Own coordinates in the deployment grid (group-local lookups).
+    pipeline: usize,
+    model: usize,
     cfg: StageCfg,
     bindings: Vec<crate::coordinator::GpuBinding>,
     busy: Vec<bool>,
@@ -82,8 +85,8 @@ impl Group {
     /// Sustainable rate of the group: reserved instances chain full
     /// batches through stream gaps (0.8 × curve); contended instances are
     /// curve-bound.
-    fn capacity_qps(&self, sc: &ScenarioData, p: usize, m: usize) -> f64 {
-        let spec = &sc.pipelines[p].models[m].spec;
+    fn capacity_qps(&self, sc: &ScenarioData) -> f64 {
+        let spec = &sc.pipelines[self.pipeline].models[self.model].spec;
         let class = sc.cluster.device(self.cfg.device).class;
         let curve_cap = sc.profiles.curve(spec, class).throughput(self.cfg.batch);
         self.bindings
@@ -114,7 +117,7 @@ struct TimedEvent {
 
 impl PartialEq for TimedEvent {
     fn eq(&self, o: &Self) -> bool {
-        self.t == o.t && self.seq == o.seq
+        self.cmp(o) == Ordering::Equal
     }
 }
 impl Eq for TimedEvent {}
@@ -125,10 +128,10 @@ impl PartialOrd for TimedEvent {
 }
 impl Ord for TimedEvent {
     fn cmp(&self, o: &Self) -> Ordering {
-        // Reversed for a min-heap on (t, seq).
-        o.t.partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(o.seq.cmp(&self.seq))
+        // Reversed for a min-heap on (t, seq). total_cmp gives NaN
+        // timestamps a fixed (last) position instead of silently
+        // comparing Equal and corrupting event order.
+        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
     }
 }
 
@@ -137,6 +140,71 @@ impl Ord for TimedEvent {
 struct GpuRun {
     end_ms: Ms,
     width: f64,
+}
+
+impl PartialEq for GpuRun {
+    fn eq(&self, o: &Self) -> bool {
+        self.end_ms.total_cmp(&o.end_ms) == Ordering::Equal
+    }
+}
+impl Eq for GpuRun {}
+impl PartialOrd for GpuRun {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for GpuRun {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reversed: BinaryHeap becomes a min-heap on end time.
+        o.end_ms.total_cmp(&self.end_ms)
+    }
+}
+
+/// Active executions on one GPU with O(1) aggregate queries.
+///
+/// Replaces the per-dispatch `Vec::retain` scan: finished runs are popped
+/// lazily from a min-heap on end time (amortized O(log n) per run over its
+/// lifetime), while the total active width is maintained incrementally so
+/// the interference multiplier needs no iteration at all.
+struct GpuRuns {
+    /// Min-heap on `end_ms` (reverse-ordered entries).
+    heap: BinaryHeap<GpuRun>,
+    /// Σ width of entries still in the heap.
+    width_sum: f64,
+}
+
+impl GpuRuns {
+    fn new() -> GpuRuns {
+        GpuRuns { heap: BinaryHeap::new(), width_sum: 0.0 }
+    }
+
+    /// Lazily drop runs that ended at or before `now` (same boundary as
+    /// the old `retain(|r| r.end_ms > now)`).
+    fn expire(&mut self, now: Ms) {
+        while let Some(top) = self.heap.peek() {
+            if top.end_ms > now {
+                break;
+            }
+            let run = self.heap.pop().unwrap();
+            self.width_sum -= run.width;
+        }
+        if self.heap.is_empty() {
+            self.width_sum = 0.0; // kill fp residue from the subtractions
+        }
+    }
+
+    fn push(&mut self, end_ms: Ms, width: f64) {
+        self.width_sum += width;
+        self.heap.push(GpuRun { end_ms, width });
+    }
+
+    fn active_count(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn active_width(&self) -> f64 {
+        self.width_sum
+    }
 }
 
 /// First occurrence of a duty-cycle slot at or after `now`.
@@ -167,8 +235,11 @@ pub struct Simulator {
     plan: Plan,
     /// Flat per-GPU state; `gpu_offset[device] + gpu` indexes both.
     gpu_offset: Vec<usize>,
-    gpu_runs: Vec<Vec<GpuRun>>,
+    gpu_runs: Vec<GpuRuns>,
     gpu_busy_width_ms: Vec<f64>,
+    /// Free-list of batch buffers recycled across `ExecDone` events so the
+    /// dispatch hot path never heap-allocates in steady state.
+    buf_pool: Vec<Vec<Query>>,
     // Metrics.
     metrics: RunMetrics,
     rng: Rng,
@@ -224,8 +295,9 @@ impl Simulator {
             groups: Vec::new(),
             plan: Plan::default(),
             gpu_offset,
-            gpu_runs: vec![Vec::new(); n_gpus],
+            gpu_runs: (0..n_gpus).map(|_| GpuRuns::new()).collect(),
             gpu_busy_width_ms: vec![0.0; n_gpus],
+            buf_pool: Vec::new(),
             metrics: RunMetrics::new(duration),
             rng: Rng::new(scenario.cfg.seed ^ 0x51A7ED),
             minute_workload: 0.0,
@@ -297,9 +369,12 @@ impl Simulator {
                 .sc
                 .pipelines
                 .iter()
-                .map(|dag| {
+                .enumerate()
+                .map(|(p, dag)| {
                     (0..dag.len())
-                        .map(|_| Group {
+                        .map(|m| Group {
+                            pipeline: p,
+                            model: m,
                             cfg: StageCfg { device: 0, batch: 1, instances: 0 },
                             bindings: Vec::new(),
                             busy: Vec::new(),
@@ -354,7 +429,7 @@ impl Simulator {
             return; // previous batch overran its cycle
         }
         // Lazy-drop late queries, then take up to one batch.
-        let mut dropped = 0u32;
+        let mut dropped = 0u64;
         while let Some(q) = g.queue.front() {
             if q.deadline_ms < now {
                 g.queue.pop_front();
@@ -364,17 +439,16 @@ impl Simulator {
             }
         }
         let take = g.cfg.batch.min(g.queue.len() as u32) as usize;
-        let batch: Vec<Query> = g.queue.drain(..take).collect();
         if take > 0 {
             g.busy[binding] = true;
         }
         let cfg = g.cfg;
-        for _ in 0..dropped {
-            self.metrics.record(Outcome::Dropped, 0.0);
-        }
+        self.metrics.record_n(Outcome::Dropped, 0.0, dropped);
         if take == 0 {
             return; // idle cycle: GPU time returned (temporal sharing win)
         }
+        let mut batch = self.buf_pool.pop().unwrap_or_default();
+        batch.extend(self.groups[pipeline][model].queue.drain(..take));
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
         let class = self.sc.cluster.device(cfg.device).class;
         let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch);
@@ -401,11 +475,7 @@ impl Simulator {
         for key in keys {
             let (rate, cap, instances) = {
                 let g = &self.groups[key.0][key.1];
-                (
-                    g.window.rate_qps(),
-                    g.capacity_qps(&self.sc, key.0, key.1),
-                    g.cfg.instances,
-                )
+                (g.window.rate_qps(), g.capacity_qps(&self.sc), g.cfg.instances)
             };
             use crate::coordinator::autoscaler::ScaleAction;
             // Reuse the Controller's autoscaler thresholds inline.
@@ -520,7 +590,7 @@ impl Simulator {
                 return; // all eligible instances busy (or all reserved)
             };
             // Lazy dropping: discard queries already past their deadline.
-            let mut dropped = 0u32;
+            let mut dropped = 0u64;
             while let Some(q) = g.queue.front() {
                 if q.deadline_ms < now {
                     g.queue.pop_front();
@@ -530,9 +600,7 @@ impl Simulator {
                 }
             }
             let empty = g.queue.is_empty();
-            for _ in 0..dropped {
-                self.metrics.record(Outcome::Dropped, 0.0);
-            }
+            self.metrics.record_n(Outcome::Dropped, 0.0, dropped);
             if empty {
                 return;
             }
@@ -546,7 +614,9 @@ impl Simulator {
                     }
                 }
             }
-            let batch: Vec<Query> = g.queue.drain(..take).collect();
+            let mut batch = self.buf_pool.pop().unwrap_or_default();
+            let g = &mut self.groups[pipeline][model];
+            batch.extend(g.queue.drain(..take));
             g.flush_at = None;
             g.busy[binding_idx] = true;
             let binding = g.bindings[binding_idx];
@@ -557,18 +627,15 @@ impl Simulator {
             let class = self.sc.cluster.device(cfg.device).class;
             let base_lat = self.sc.profiles.batch_latency(spec, class, cfg.batch);
             let cap = 1.0; // util_cap of every GPU in this build
-            let (start, mult) = {
-                let runs = &mut self.gpu_runs[self.gpu_offset[binding.gpu.device] + binding.gpu.gpu];
-                runs.retain(|r| r.end_ms > now);
-                let total: f64 =
-                    runs.iter().map(|r| r.width).sum::<f64>() + binding.width;
-                let m = self.interference.multiplier(total, cap, runs.len());
-                (now, m)
-            };
-            let dur = base_lat * mult;
-            let end = start + dur;
             let gi = self.gpu_idx(binding.gpu);
-            self.gpu_runs[gi].push(GpuRun { end_ms: end, width: binding.width });
+            let runs = &mut self.gpu_runs[gi];
+            runs.expire(now);
+            let total = runs.active_width() + binding.width;
+            let mult =
+                self.interference.multiplier(total, cap, runs.active_count());
+            let dur = base_lat * mult;
+            let end = now + dur;
+            runs.push(end, binding.width);
             self.gpu_busy_width_ms[gi] += dur * binding.width;
             self.push(
                 end,
@@ -592,7 +659,9 @@ impl Simulator {
             return;
         }
         let take = g.cfg.batch as usize;
-        let batch: Vec<Query> = g.queue.drain(..take).collect();
+        let mut batch = self.buf_pool.pop().unwrap_or_default();
+        let g = &mut self.groups[pipeline][model];
+        batch.extend(g.queue.drain(..take));
         g.busy[binding] = true;
         let cfg = g.cfg;
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
@@ -609,7 +678,7 @@ impl Simulator {
         pipeline: usize,
         model: usize,
         binding: usize,
-        queries: Vec<Query>,
+        mut queries: Vec<Query>,
     ) {
         let now = self.now;
         {
@@ -626,19 +695,18 @@ impl Simulator {
             self.groups[pipeline][model].cfg.device;
 
         if downstream.is_empty() {
-            // Sink: account one completion per carried object.
+            // Sink: account one completion per carried object (bulk — one
+            // metrics update per query, not per object).
             for q in &queries {
                 let latency = now - q.created_ms;
                 let n = q.objects.max(1) as u64;
-                for _ in 0..n {
-                    let outcome = if latency <= slo {
-                        self.minute_effective += 1.0;
-                        Outcome::OnTime
-                    } else {
-                        Outcome::Late
-                    };
-                    self.metrics.record(outcome, latency);
-                }
+                let outcome = if latency <= slo {
+                    self.minute_effective += n as f64;
+                    Outcome::OnTime
+                } else {
+                    Outcome::Late
+                };
+                self.metrics.record_n(outcome, latency, n);
             }
         } else {
             // Route objects to downstream stages.
@@ -675,6 +743,12 @@ impl Simulator {
                     }
                 }
             }
+        }
+        // Recycle the batch buffer into the free-list (bounded so a burst
+        // of in-flight batches can't pin memory forever).
+        if self.buf_pool.len() < 64 {
+            queries.clear();
+            self.buf_pool.push(queries);
         }
         // Free instance may pick up queued work: reserved instances chain
         // full batches into stream gaps; contended ones dispatch normally.
@@ -791,7 +865,7 @@ impl Simulator {
                     g.cfg.instances,
                     g.queue.len(),
                     g.window.rate_qps(),
-                    g.capacity_qps(&self.sc, p, m),
+                    g.capacity_qps(&self.sc),
                     g.bindings.iter().filter(|b| b.temporal.is_some()).count(),
                     g.busy,
                     g.flush_at,
@@ -845,6 +919,9 @@ mod tests {
 
     #[test]
     fn deterministic_runs() {
+        // Buffer pooling, the lazily-compacted GPU-run tracking, and the
+        // streaming latency sketch must not perturb determinism: repeated
+        // runs agree on every exported metric.
         let sc1 = Scenario::build(smoke_cfg());
         let sc2 = Scenario::build(smoke_cfg());
         let a = crate::sim::run(&sc1, SchedulerKind::OctopInf);
@@ -852,12 +929,18 @@ mod tests {
         assert_eq!(a.on_time, b.on_time);
         assert_eq!(a.late, b.late);
         assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.peak_memory_mb, b.peak_memory_mb);
+        assert_eq!(a.mean_gpu_util, b.mean_gpu_util);
+        assert_eq!(a.timeline, b.timeline);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(a.latency.quantile(q), b.latency.quantile(q), "q={q}");
+        }
     }
 
     #[test]
     fn latencies_within_sanity() {
         let sc = Scenario::build(smoke_cfg());
-        let mut m = crate::sim::run(&sc, SchedulerKind::OctopInf);
+        let m = crate::sim::run(&sc, SchedulerKind::OctopInf);
         let p99 = m.latency.p99();
         assert!(p99 > 0.0 && p99 < 5_000.0, "p99 {p99}");
     }

@@ -66,6 +66,14 @@ impl Args {
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Worker count for parallel experiment grids (`--jobs N`).
+    ///
+    /// Defaults to 0, which the runner resolves to one worker per
+    /// hardware thread; `--jobs 1` forces the sequential path.
+    pub fn jobs(&self) -> usize {
+        self.get_usize("jobs", 0)
+    }
 }
 
 #[cfg(test)]
@@ -104,5 +112,12 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_or("mode", "sim"), "sim");
         assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn jobs_flag_parses_with_auto_default() {
+        assert_eq!(parse("figure 6 --jobs 4").jobs(), 4);
+        assert_eq!(parse("figure 6 --jobs=2").jobs(), 2);
+        assert_eq!(parse("figure 6").jobs(), 0); // auto
     }
 }

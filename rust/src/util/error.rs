@@ -1,0 +1,166 @@
+//! Minimal `anyhow`-flavoured error type (the offline registry carries no
+//! general error crate): a message plus a stack of context strings.
+//!
+//! Supports the subset the runtime/serving paths use: the [`anyhow!`] and
+//! [`ensure!`](crate::ensure) macros, a [`Context`] extension trait with
+//! `.context(..)` / `.with_context(..)`, a `From` blanket over
+//! `std::error::Error` so `?` works on io/parse/XLA errors, and an
+//! alternate `{:#}` display that prints the whole context chain.
+//!
+//! [`anyhow!`]: crate::anyhow
+
+use std::fmt;
+
+/// An error with optional layered context (outermost last).
+pub struct Error {
+    msg: String,
+    /// Context strings, innermost first (pushed as the error propagates).
+    context: Vec<String>,
+}
+
+/// Crate-wide result type, defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a plain message (what the `anyhow!` macro expands to).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), context: Vec::new() }
+    }
+
+    fn add_context(mut self, ctx: String) -> Error {
+        self.context.push(ctx);
+        self
+    }
+
+    /// All layers, outermost first, ending at the root message.
+    fn chain(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, anyhow-style.
+            let mut first = true;
+            for layer in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{layer}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            // `{}` — outermost layer only.
+            write!(f, "{}", self.chain().next().unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `.unwrap()` / `fn main() -> Result<..>` show the full chain.
+        write!(f, "{self:#}")
+    }
+}
+
+// Mirrors anyhow's blanket conversion. `Error` itself deliberately does
+// NOT implement `std::error::Error`, which keeps this impl coherent next
+// to the reflexive `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Extension trait adding context to any compatible `Result`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<S, F>(self, f: F) -> Result<T>
+    where
+        S: Into<String>,
+        F: FnOnce() -> S;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().add_context(msg.into()))
+    }
+
+    fn with_context<S, F>(self, f: F) -> Result<T>
+    where
+        S: Into<String>,
+        F: FnOnce() -> S,
+    {
+        self.map_err(|e| e.into().add_context(f().into()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error) unless the
+/// condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_number(s: &str) -> Result<u32> {
+        s.parse::<u32>().context("parsing number")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = parse_number("nope").unwrap_err();
+        assert_eq!(format!("{err}"), "parsing number");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("parsing number: "), "{full}");
+    }
+
+    #[test]
+    fn context_layers_stack_outermost_first() {
+        let e: Result<()> = Err(Error::msg("root"));
+        let e = e.context("inner").with_context(|| format!("outer {}", 7));
+        let err = e.unwrap_err();
+        assert_eq!(format!("{err}"), "outer 7");
+        assert_eq!(format!("{err:#}"), "outer 7: inner: root");
+        assert_eq!(format!("{err:?}"), "outer 7: inner: root");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn check(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            Err(crate::anyhow!("fell through with {x}"))
+        }
+        assert_eq!(format!("{}", check(42).unwrap_err()), "x too big: 42");
+        assert_eq!(format!("{}", check(1).unwrap_err()), "fell through with 1");
+    }
+}

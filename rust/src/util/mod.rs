@@ -1,13 +1,15 @@
 //! In-tree substrates for functionality that would normally come from
 //! crates.io (the offline registry only carries the `xla` closure):
 //! deterministic RNG, descriptive statistics, ASCII/markdown tables, a tiny
-//! CLI argument parser, and a property-testing mini-framework.
+//! CLI argument parser, an anyhow-style error type, and a property-testing
+//! mini-framework.
 
 pub mod cli;
+pub mod error;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
 pub use rng::Rng;
-pub use stats::{Histogram, Summary};
+pub use stats::{Histogram, QuantileSketch, Summary};

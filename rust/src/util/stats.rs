@@ -56,7 +56,9 @@ impl Summary {
     }
 }
 
-/// Exact percentiles over a retained sample (fine for experiment scale).
+/// Exact percentiles over a retained sample — the reference implementation
+/// the [`QuantileSketch`] is property-tested against. O(n log n) per
+/// quantile refresh; use the sketch on hot paths.
 #[derive(Clone, Debug, Default)]
 pub struct Percentiles {
     xs: Vec<f64>,
@@ -87,7 +89,8 @@ impl Percentiles {
             return 0.0;
         }
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN samples sort to the end instead of panicking.
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
         let pos = q.clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
@@ -117,6 +120,182 @@ impl Percentiles {
     }
 }
 
+/// Streaming quantile sketch: a fixed-resolution log-bucket histogram
+/// (HDR-histogram style) with O(1) push and bounded relative error.
+///
+/// Buckets subdivide each power-of-two octave into 128 linear sub-buckets
+/// (top 7 mantissa bits), giving ≤ ~0.4 % relative error per quantile —
+/// far below run-to-run simulation noise — while `push` costs a couple of
+/// integer ops instead of the sort-per-quantile of [`Percentiles`].
+/// Covered range: [2⁻²⁰, 2⁴⁰) ≈ [1 µs, 34 years] in ms; values outside
+/// are clamped (non-positive/NaN samples land in an underflow bucket).
+/// Min/max/sum are tracked exactly, so `quantile(0.0)`/`quantile(1.0)`
+/// and `mean()` are exact. Everything is deterministic: identical push
+/// sequences yield identical quantiles.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    /// Lazily allocated on first push (`NBUCKETS` entries).
+    counts: Vec<u64>,
+    /// Samples below the covered range (incl. zero/negative/NaN).
+    low: u64,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Sub-buckets per octave (top `SUB_BITS` mantissa bits).
+const SUB_BITS: u32 = 7;
+const SUB: usize = 1 << SUB_BITS;
+/// Lowest covered biased exponent: 2^-20.
+const EXP_LO: u64 = 1023 - 20;
+/// Number of covered octaves: [2^-20, 2^40).
+const OCTAVES: usize = 60;
+const NBUCKETS: usize = OCTAVES * SUB;
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> Self {
+        QuantileSketch {
+            counts: Vec::new(),
+            low: 0,
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a positive in-range value, `None` for underflow.
+    #[inline]
+    fn index(x: f64) -> Option<usize> {
+        if !(x > 0.0) {
+            return None; // non-positive or NaN
+        }
+        let bits = x.to_bits();
+        let eb = bits >> 52; // biased exponent (sign bit is 0 here)
+        if eb < EXP_LO {
+            return None; // subnormal or below 2^-20
+        }
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        let idx = (eb - EXP_LO) as usize * SUB + sub;
+        Some(idx.min(NBUCKETS - 1))
+    }
+
+    /// Midpoint of bucket `idx`'s value range.
+    #[inline]
+    fn bucket_value(idx: usize) -> f64 {
+        let octave = (idx / SUB) as i32 - 20;
+        let sub = (idx % SUB) as f64;
+        2f64.powi(octave) * (1.0 + (sub + 0.5) / SUB as f64)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.push_n(x, 1);
+    }
+
+    /// Record `k` samples of value `x` in O(1).
+    pub fn push_n(&mut self, x: f64, k: u64) {
+        if k == 0 {
+            return;
+        }
+        self.n += k;
+        self.sum += x * k as f64;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        match Self::index(x) {
+            Some(idx) => {
+                if self.counts.is_empty() {
+                    self.counts = vec![0; NBUCKETS];
+                }
+                self.counts[idx] += k;
+            }
+            None => self.low += k,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile, `q` in [0, 1]; endpoints are exact.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if !self.min.is_finite() {
+            return 0.0; // only NaN samples recorded
+        }
+        let target = (q.clamp(0.0, 1.0) * (self.n - 1) as f64).round() as u64;
+        if target == 0 {
+            return self.min;
+        }
+        if target == self.n - 1 {
+            return self.max;
+        }
+        let mut cum = self.low;
+        if target < cum {
+            return self.min;
+        }
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > target {
+                return Self::bucket_value(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
 /// Fixed-width bucket histogram for latency distributions (Fig. 6b/10b).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -140,15 +319,20 @@ impl Histogram {
     }
 
     pub fn push(&mut self, x: f64) {
+        self.push_n(x, 1);
+    }
+
+    /// Record `k` samples of value `x` in O(1) (bulk drop/fanout paths).
+    pub fn push_n(&mut self, x: f64, k: u64) {
         if x < self.lo {
-            self.underflow += 1;
+            self.underflow += k;
             return;
         }
         let idx = ((x - self.lo) / self.width) as usize;
         if idx >= self.buckets.len() {
-            self.overflow += 1;
+            self.overflow += k;
         } else {
-            self.buckets[idx] += 1;
+            self.buckets[idx] += k;
         }
     }
 
@@ -221,6 +405,102 @@ mod tests {
         assert!((p.quantile(0.0) - 1.0).abs() < 1e-9);
         assert!((p.quantile(1.0) - 100.0).abs() < 1e-9);
         assert!(p.p95() > p.p50());
+    }
+
+    #[test]
+    fn sketch_matches_exact_on_uniform() {
+        let mut rng = crate::util::Rng::new(7);
+        let mut sketch = QuantileSketch::new();
+        let mut exact = Percentiles::new();
+        for _ in 0..50_000 {
+            let x = rng.range(0.5, 400.0);
+            sketch.push(x);
+            exact.push(x);
+        }
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            let (s, e) = (sketch.quantile(q), exact.quantile(q));
+            assert!((s - e).abs() <= 0.01 * e, "q={q}: sketch {s} exact {e}");
+        }
+    }
+
+    #[test]
+    fn sketch_endpoints_and_mean_are_exact() {
+        let mut s = QuantileSketch::new();
+        for x in [3.0, 1.5, 9.0, 4.5] {
+            s.push(x);
+        }
+        assert_eq!(s.quantile(0.0), 1.5);
+        assert_eq!(s.quantile(1.0), 9.0);
+        assert_eq!(s.min(), 1.5);
+        assert_eq!(s.max(), 9.0);
+        assert!((s.mean() - 4.5).abs() < 1e-12);
+        assert_eq!(s.count(), 4);
+    }
+
+    #[test]
+    fn sketch_handles_degenerate_inputs_without_panicking() {
+        let mut s = QuantileSketch::new();
+        assert_eq!(s.quantile(0.5), 0.0);
+        s.push(0.0);
+        s.push(-5.0);
+        s.push(f64::NAN);
+        s.push(1e30); // beyond the covered range: clamped, not lost
+        assert_eq!(s.len(), 4);
+        let p50 = s.quantile(0.5);
+        assert!(p50 >= -5.0, "p50 {p50}");
+        assert_eq!(s.quantile(1.0), 1e30);
+    }
+
+    #[test]
+    fn sketch_push_n_equals_repeated_push() {
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        for _ in 0..7 {
+            a.push(42.0);
+        }
+        b.push_n(42.0, 7);
+        assert_eq!(a.count(), b.count());
+        for q in [0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(a.quantile(q), b.quantile(q));
+        }
+    }
+
+    #[test]
+    fn sketch_relative_error_is_bounded() {
+        // Every representable value must round-trip within half a bucket.
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..2000 {
+            let x = rng.range(1e-3, 1e6);
+            let mut s = QuantileSketch::new();
+            s.push(x * 0.5);
+            s.push(x);
+            s.push(x * 2.0);
+            let mid = s.quantile(0.5);
+            assert!(
+                (mid - x).abs() <= x * (1.0 / 128.0),
+                "x {x} -> {mid}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentiles_survive_nan_samples() {
+        let mut p = Percentiles::new();
+        p.push(1.0);
+        p.push(f64::NAN);
+        p.push(3.0);
+        // total_cmp sorts NaN last; quantile(0.5) stays finite.
+        assert!(p.quantile(0.0).is_finite());
+    }
+
+    #[test]
+    fn histogram_push_n_bulk() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push_n(1.5, 5);
+        h.push_n(-1.0, 2);
+        h.push_n(20.0, 3);
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.buckets()[1], 5);
     }
 
     #[test]

@@ -8,30 +8,91 @@ mod content;
 
 pub use content::{ContentDynamics, ContentProfile, DiurnalShape};
 
-use crate::util::stats::burstiness;
-
 /// Sliding window of arrival timestamps used to estimate per-model request
 /// rate and burstiness (CV of inter-arrival gaps) — CWD's Insight 1 inputs.
+///
+/// `rate_qps()` and `burstiness()` are O(1): alongside the timestamp ring
+/// the window maintains eviction-aware running aggregates (Σgap, Σgap²)
+/// over the inter-arrival gaps of the retained arrivals. Both queries run
+/// per instance-group on every autoscaler tick, arrival, and reschedule,
+/// so they must cost ~nothing at high frame rates. Gap aggregates are
+/// rebuilt exactly every [`REBUILD_EVICTIONS`] evictions to keep
+/// floating-point drift from the incremental subtractions bounded (O(n)
+/// then, O(1) amortized).
 #[derive(Clone, Debug)]
 pub struct ArrivalWindow {
     window_ms: f64,
     arrivals: std::collections::VecDeque<f64>,
+    /// Σ of the `len-1` inter-arrival gaps between retained arrivals.
+    gap_sum: f64,
+    /// Σ of squared gaps.
+    gap_sq: f64,
+    /// Evictions since the aggregates were last rebuilt exactly.
+    evictions: u32,
 }
+
+/// Rebuild the gap aggregates exactly after this many incremental
+/// evictions (amortized O(1), bounds fp drift to ~4096 subtractions).
+const REBUILD_EVICTIONS: u32 = 4096;
 
 impl ArrivalWindow {
     pub fn new(window_ms: f64) -> Self {
-        ArrivalWindow { window_ms, arrivals: Default::default() }
-    }
-
-    pub fn record(&mut self, t_ms: f64) {
-        self.arrivals.push_back(t_ms);
-        let cutoff = t_ms - self.window_ms;
-        while self.arrivals.front().is_some_and(|&f| f < cutoff) {
-            self.arrivals.pop_front();
+        ArrivalWindow {
+            window_ms,
+            arrivals: Default::default(),
+            gap_sum: 0.0,
+            gap_sq: 0.0,
+            evictions: 0,
         }
     }
 
-    /// Arrivals per second over the window.
+    pub fn record(&mut self, t_ms: f64) {
+        if let Some(&back) = self.arrivals.back() {
+            let g = (t_ms - back).max(0.0);
+            self.gap_sum += g;
+            self.gap_sq += g * g;
+        }
+        self.arrivals.push_back(t_ms);
+        let cutoff = t_ms - self.window_ms;
+        while self.arrivals.front().is_some_and(|&f| f < cutoff) {
+            let f = self.arrivals.pop_front().unwrap();
+            // Subtract exactly the gap that was added when the (now new)
+            // front arrival was recorded after `f`.
+            if let Some(&nf) = self.arrivals.front() {
+                let g = (nf - f).max(0.0);
+                self.gap_sum -= g;
+                self.gap_sq -= g * g;
+            }
+            self.evictions += 1;
+        }
+        if self.arrivals.len() <= 1 {
+            // No gaps left: reset aggregates exactly.
+            self.gap_sum = 0.0;
+            self.gap_sq = 0.0;
+            self.evictions = 0;
+        } else if self.evictions >= REBUILD_EVICTIONS {
+            self.rebuild();
+        }
+    }
+
+    /// Recompute the gap aggregates exactly from the retained arrivals.
+    fn rebuild(&mut self) {
+        let (mut sum, mut sq) = (0.0, 0.0);
+        let mut prev: Option<f64> = None;
+        for &t in &self.arrivals {
+            if let Some(p) = prev {
+                let g = (t - p).max(0.0);
+                sum += g;
+                sq += g * g;
+            }
+            prev = Some(t);
+        }
+        self.gap_sum = sum;
+        self.gap_sq = sq;
+        self.evictions = 0;
+    }
+
+    /// Arrivals per second over the window. O(1).
     pub fn rate_qps(&self) -> f64 {
         if self.arrivals.len() < 2 {
             return 0.0;
@@ -44,23 +105,20 @@ impl ArrivalWindow {
         (self.arrivals.len() - 1) as f64 * 1000.0 / span
     }
 
-    /// Coefficient of variation of inter-arrival gaps.
-    ///
-    /// Computed directly over the ring buffer (no allocation): this runs
-    /// per instance-group on every autoscaler tick and scheduler round.
+    /// Coefficient of variation of inter-arrival gaps. O(1), from the
+    /// running aggregates (sample variance, matching `Summary::cv`).
     pub fn burstiness(&self) -> f64 {
         if self.arrivals.len() < 3 {
             return 0.0;
         }
-        let mut s = crate::util::stats::Summary::new();
-        let mut prev: Option<f64> = None;
-        for &t in &self.arrivals {
-            if let Some(p) = prev {
-                s.push((t - p).max(0.0));
-            }
-            prev = Some(t);
+        let k = (self.arrivals.len() - 1) as f64;
+        let mean = self.gap_sum / k;
+        if mean.abs() < 1e-12 {
+            return 0.0;
         }
-        s.cv()
+        let var =
+            ((self.gap_sq - self.gap_sum * self.gap_sum / k) / (k - 1.0)).max(0.0);
+        var.sqrt() / mean
     }
 
     pub fn len(&self) -> usize {
@@ -101,5 +159,67 @@ mod tests {
             w.record(i as f64 * 100.0);
         }
         assert!(w.burstiness() < 1e-9);
+    }
+
+    /// Exact batch references over the retained arrivals.
+    fn reference(kept: &[f64]) -> (f64, f64) {
+        let rate = if kept.len() < 2 {
+            0.0
+        } else {
+            let span = kept[kept.len() - 1] - kept[0];
+            if span <= 0.0 {
+                0.0
+            } else {
+                (kept.len() - 1) as f64 * 1000.0 / span
+            }
+        };
+        (rate, crate::util::stats::burstiness(kept))
+    }
+
+    #[test]
+    fn incremental_matches_batch_under_heavy_eviction() {
+        // Poisson arrivals across >> window span: every record evicts,
+        // crossing several exact-rebuild boundaries.
+        let mut rng = crate::util::Rng::new(99);
+        let mut w = ArrivalWindow::new(500.0);
+        let mut all = Vec::new();
+        let mut t = 0.0;
+        for i in 0..30_000 {
+            t += rng.exp(0.2); // ~5 ms mean gap, ~100 retained
+            all.push(t);
+            w.record(t);
+            if i % 5000 == 0 {
+                let cutoff = t - 500.0;
+                let kept: Vec<f64> =
+                    all.iter().copied().filter(|&x| x >= cutoff).collect();
+                assert_eq!(w.len(), kept.len());
+                let (rr, rb) = reference(&kept);
+                assert!((w.rate_qps() - rr).abs() <= 1e-6 * rr.max(1.0));
+                assert!(
+                    (w.burstiness() - rb).abs() <= 1e-6 * rb.max(1.0),
+                    "incremental {} batch {}",
+                    w.burstiness(),
+                    rb
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aggregates_reset_when_window_drains_to_one() {
+        let mut w = ArrivalWindow::new(100.0);
+        for i in 0..10 {
+            w.record(i as f64 * 10.0);
+        }
+        // A far-future arrival evicts everything else.
+        w.record(1e7);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.rate_qps(), 0.0);
+        assert_eq!(w.burstiness(), 0.0);
+        // Window keeps working after the drain.
+        w.record(1e7 + 10.0);
+        w.record(1e7 + 20.0);
+        assert!(w.burstiness() < 1e-9);
+        assert!((w.rate_qps() - 100.0).abs() < 1e-6);
     }
 }

@@ -149,14 +149,57 @@ fn timeline_tracks_workload() {
 }
 
 // ---------------------------------------------------------------------------
+// Parallel experiment runner: parallelism must never change results.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_runner_reproduces_sequential_metrics() {
+    use octopinf::experiments::{run_grid, RunSpec};
+    let cfg = preset("smoke").unwrap();
+    let specs: Vec<RunSpec> = SchedulerKind::all_main()
+        .iter()
+        .map(|&k| RunSpec::new(k.label(), cfg.clone(), k))
+        .collect();
+    let seq = run_grid(&specs, 1);
+    let par = run_grid(&specs, specs.len());
+    for (spec, (a, b)) in specs.iter().zip(seq.iter().zip(&par)) {
+        assert_eq!(a.on_time, b.on_time, "{}", spec.label);
+        assert_eq!(a.late, b.late, "{}", spec.label);
+        assert_eq!(a.dropped, b.dropped, "{}", spec.label);
+        assert_eq!(a.peak_memory_mb, b.peak_memory_mb, "{}", spec.label);
+        assert_eq!(a.mean_gpu_util, b.mean_gpu_util, "{}", spec.label);
+        assert_eq!(a.timeline, b.timeline, "{}", spec.label);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(
+                a.latency.quantile(q),
+                b.latency.quantile(q),
+                "{} q={q}",
+                spec.label
+            );
+        }
+    }
+}
+
+#[test]
+fn figure_tables_are_byte_identical_across_job_counts() {
+    // The acceptance bar for the parallel runner: regenerated tables with
+    // --jobs N must match --jobs 1 byte for byte.
+    let seq = octopinf::experiments::fig6_overall(true, 1).to_markdown();
+    let par = octopinf::experiments::fig6_overall(true, 4).to_markdown();
+    assert_eq!(seq, par);
+}
+
+// ---------------------------------------------------------------------------
 // Real PJRT runtime over the AOT artifacts (skipped when absent).
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = octopinf::runtime::default_artifacts_dir();
     dir.join("manifest.tsv").exists().then_some(dir)
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_loads_and_executes_all_model_families() {
     let Some(dir) = artifacts_dir() else {
@@ -177,6 +220,7 @@ fn runtime_loads_and_executes_all_model_families() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_padding_preserves_real_rows() {
     let Some(dir) = artifacts_dir() else {
@@ -197,6 +241,7 @@ fn runtime_padding_preserves_real_rows() {
     assert_eq!(&padded[..], &direct[..2 * per_out]);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn detector_outputs_decoded_boxes() {
     let Some(dir) = artifacts_dir() else {

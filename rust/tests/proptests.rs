@@ -12,7 +12,9 @@ use octopinf::pipeline::{standard_pipelines, PipelineDag};
 use octopinf::profiles::{ProfileStore, BATCH_SIZES};
 use octopinf::serving::DynamicBatcher;
 use octopinf::util::prop::{check, forall};
+use octopinf::util::stats::{burstiness, Percentiles, QuantileSketch};
 use octopinf::util::Rng;
+use octopinf::workload::ArrivalWindow;
 
 /// Random scheduling environment: pipelines, rates, bandwidths.
 struct EnvInput {
@@ -309,6 +311,109 @@ fn prop_bw_traces_nonnegative_and_deterministic() {
                 check(
                     a.bandwidth_mbps(t) == b.bandwidth_mbps(t),
                     "trace not deterministic",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_arrival_window_matches_batch_reference() {
+    // The incremental (eviction-aware running-aggregate) ArrivalWindow
+    // must agree with an exact batch recomputation over the retained
+    // arrivals, across window sizes and arrival processes that force
+    // heavy eviction churn.
+    forall(
+        808,
+        60,
+        |r| {
+            let window_ms = r.range(50.0, 5_000.0);
+            let rate = r.range(0.01, 0.5); // mean gap 2..100 ms
+            let n = 3 + r.below(800);
+            let mut t = r.range(0.0, 1_000.0);
+            let arrivals: Vec<f64> = (0..n)
+                .map(|_| {
+                    t += r.exp(rate);
+                    t
+                })
+                .collect();
+            (window_ms, arrivals)
+        },
+        |(window_ms, arrivals)| {
+            let mut w = ArrivalWindow::new(*window_ms);
+            for &t in arrivals {
+                w.record(t);
+            }
+            let cutoff = arrivals[arrivals.len() - 1] - window_ms;
+            let kept: Vec<f64> =
+                arrivals.iter().copied().filter(|&x| x >= cutoff).collect();
+            check(w.len() == kept.len(), "retained count mismatch")?;
+            let ref_rate = if kept.len() < 2 {
+                0.0
+            } else {
+                let span = kept[kept.len() - 1] - kept[0];
+                if span <= 0.0 {
+                    0.0
+                } else {
+                    (kept.len() - 1) as f64 * 1000.0 / span
+                }
+            };
+            let ref_cv = burstiness(&kept);
+            check(
+                (w.rate_qps() - ref_rate).abs() <= 1e-6 * ref_rate.max(1.0),
+                format!("rate {} vs {}", w.rate_qps(), ref_rate),
+            )?;
+            check(
+                (w.burstiness() - ref_cv).abs() <= 1e-6 * ref_cv.max(1.0),
+                format!("cv {} vs {}", w.burstiness(), ref_cv),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_quantile_sketch_brackets_exact_quantiles() {
+    // The streaming log-bucket sketch must land within the exact order
+    // statistics bracketing the target rank, expanded by its bucket
+    // resolution (< 1 % relative).
+    forall(
+        909,
+        80,
+        |r| {
+            let n = 2 + r.below(3_000);
+            // Mix of scales: uniform, exponential, or heavy-tailed.
+            let mode = r.below(3);
+            (0..n)
+                .map(|_| match mode {
+                    0 => r.range(0.1, 500.0),
+                    1 => r.exp(0.02),
+                    _ => r.exp(0.02) * r.exp(0.02),
+                })
+                .collect::<Vec<f64>>()
+        },
+        |samples| {
+            let mut sketch = QuantileSketch::new();
+            let mut exact = Percentiles::new();
+            for &x in samples {
+                sketch.push(x);
+                exact.push(x);
+            }
+            check(
+                (sketch.mean() - exact.mean()).abs()
+                    <= 1e-9 * exact.mean().abs().max(1.0),
+                "mean mismatch",
+            )?;
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let s = sketch.quantile(q);
+                let pos = q * (samples.len() - 1) as f64;
+                let lo = sorted[pos.floor() as usize];
+                let hi = sorted[pos.ceil() as usize];
+                check(
+                    s >= lo * (1.0 - 0.01) - 1e-9 && s <= hi * (1.0 + 0.01) + 1e-9,
+                    format!("q={q}: sketch {s} outside [{lo}, {hi}]"),
                 )?;
             }
             Ok(())
