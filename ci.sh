@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI gate for the octopinf reproduction.
+#
+#   tier-1:     cargo build --release && cargo test -q
+#               (cargo test includes the 50-scenario x 5-scheduler
+#               differential conformance sweep, rust/tests/conformance.rs)
+#   fuzz smoke: ~30 s extra sweep through the CLI path; fixed default
+#               seed (override with FUZZ_SEED0 to rotate the corpus)
+#   perf:       cargo bench --bench hotpath -> BENCH_hotpath.json; the
+#               first run captures BENCH_hotpath.baseline.json (commit it),
+#               later runs gate >25 % per-entry regressions
+#               (rust/tests/perf_regression.rs). SKIP_BENCH=1 to skip.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+
+# Fuzz smoke: a dozen scenarios through all five schedulers, CLI path
+# (also exercises the repro-string plumbing end to end).
+cargo run --release --quiet -- fuzz --scenarios 12 --seed0 "${FUZZ_SEED0:-12648430}"
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+  cargo bench --bench hotpath
+  if [ ! -f BENCH_hotpath.baseline.json ]; then
+    cp BENCH_hotpath.json BENCH_hotpath.baseline.json
+    echo "captured new hot-path baseline: BENCH_hotpath.baseline.json (commit it)"
+  fi
+  cargo test -q --test perf_regression -- --ignored
+fi
+
+echo "ci.sh: all green"

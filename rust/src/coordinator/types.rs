@@ -234,6 +234,20 @@ impl SchedulerKind {
             SchedulerKind::Rim,
         ]
     }
+
+    /// The five-system differential conformance set: CWD+CORAL (full
+    /// OctopInf), CWD over the spatial best-fit spreader (the no-CORAL
+    /// ablation), and the three baselines. Every fuzzed scenario runs
+    /// through all five under the invariant engine.
+    pub fn conformance_set() -> [SchedulerKind; 5] {
+        [
+            SchedulerKind::OctopInf,
+            SchedulerKind::OctopInfNoCoral,
+            SchedulerKind::Distream,
+            SchedulerKind::Jellyfish,
+            SchedulerKind::Rim,
+        ]
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,151 @@
+//! Differential scheduler conformance over fuzzed scenarios.
+//!
+//! One *round* takes a [`FuzzSpec`], rebuilds its scenario independently
+//! for every scheduler in [`SchedulerKind::conformance_set`], runs each
+//! under the invariant engine ([`crate::sim::invariants`]), and then
+//! cross-checks the scheduler-independent quantities — source frames,
+//! content-process object totals, and the uplink traces' bandwidth
+//! integrals — bit-for-bit across the five runs. Any violation or
+//! divergence is reported with the spec's one-line repro string, so
+//! `octopinf fuzz --repro fuzz:v1:seed=N` replays it deterministically.
+//!
+//! Rounds are independent, so sweeps fan out across scoped worker threads
+//! via [`super::runner::par_map`] (results merged in seed order;
+//! `jobs = 0` means one worker per hardware thread).
+
+use crate::coordinator::SchedulerKind;
+use crate::sim::{run_checked, FuzzSpec, Scenario, ScenarioGen};
+
+use super::runner::par_map;
+
+/// Everything one conformance round learned about one fuzzed scenario.
+#[derive(Clone, Debug)]
+pub struct ConformanceOutcome {
+    pub spec: FuzzSpec,
+    /// Invariant violations, tagged with the scheduler that produced them.
+    pub violations: Vec<(SchedulerKind, String)>,
+    /// Cross-scheduler divergences in scheduler-independent quantities.
+    pub divergences: Vec<String>,
+    /// Total completed queries across all runs (sanity: the round did work).
+    pub total_completions: u64,
+    pub runs: usize,
+}
+
+impl ConformanceOutcome {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty() && self.divergences.is_empty()
+    }
+
+    /// Multi-line failure description headed by the repro string.
+    pub fn describe_failures(&self) -> String {
+        let mut out = format!("{}", self.spec);
+        for (kind, v) in &self.violations {
+            out.push_str(&format!("\n  [{}] {v}", kind.label()));
+        }
+        for d in &self.divergences {
+            out.push_str(&format!("\n  [differential] {d}"));
+        }
+        out
+    }
+}
+
+/// Bit-exact fingerprint of the scenario's uplink traces: XOR of the
+/// per-trace bandwidth integrals' IEEE-754 bit patterns, position-salted.
+fn trace_fingerprint(sc: &Scenario) -> u64 {
+    sc.traces.iter().enumerate().fold(0u64, |acc, (i, t)| {
+        acc ^ t.integral_mbps_s().to_bits().rotate_left((i % 63) as u32)
+    })
+}
+
+/// Run every conformance scheduler over `spec`'s scenario and collect
+/// violations plus differential mismatches.
+pub fn conformance_round(spec: &FuzzSpec) -> ConformanceOutcome {
+    let mut outcome = ConformanceOutcome {
+        spec: spec.clone(),
+        violations: Vec::new(),
+        divergences: Vec::new(),
+        total_completions: 0,
+        runs: 0,
+    };
+    // (kind, frames, objects, trace bits) per run; each run rebuilds the
+    // scenario from the spec so generator determinism is itself under test.
+    let mut prints: Vec<(SchedulerKind, u64, u64, u64)> = Vec::new();
+    for kind in SchedulerKind::conformance_set() {
+        let sc = spec.build();
+        let bits = trace_fingerprint(&sc);
+        let (_metrics, report) = run_checked(&sc, kind);
+        outcome.runs += 1;
+        outcome.total_completions += report.completed_queries;
+        for v in &report.violations {
+            outcome.violations.push((kind, v.clone()));
+        }
+        if report.suppressed > 0 {
+            outcome
+                .violations
+                .push((kind, format!("+{} suppressed violations", report.suppressed)));
+        }
+        let (frames, objects) = report.workload_fingerprint();
+        prints.push((kind, frames, objects, bits));
+    }
+    if let Some(&(k0, f0, o0, b0)) = prints.first() {
+        for &(k, f, o, b) in &prints[1..] {
+            if f != f0 {
+                outcome.divergences.push(format!(
+                    "frames diverge: {}={f0} vs {}={f}",
+                    k0.label(),
+                    k.label()
+                ));
+            }
+            if o != o0 {
+                outcome.divergences.push(format!(
+                    "content objects diverge: {}={o0} vs {}={o}",
+                    k0.label(),
+                    k.label()
+                ));
+            }
+            if b != b0 {
+                outcome.divergences.push(format!(
+                    "trace integrals diverge: {}={b0:#x} vs {}={b:#x}",
+                    k0.label(),
+                    k.label()
+                ));
+            }
+        }
+    }
+    outcome
+}
+
+/// Sweep `n` fuzzed scenarios (seeds `seed0..seed0+n`) across `jobs`
+/// workers; outcomes return in seed order regardless of completion order.
+pub fn run_conformance(seed0: u64, n: usize, jobs: usize) -> Vec<ConformanceOutcome> {
+    let specs: Vec<FuzzSpec> = ScenarioGen::new(seed0).take(n).collect();
+    par_map(specs.len(), jobs, |i| conformance_round(&specs[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_round_is_clean_and_deterministic() {
+        let spec = FuzzSpec::sample(11);
+        let a = conformance_round(&spec);
+        assert!(a.ok(), "{}", a.describe_failures());
+        assert_eq!(a.runs, 5);
+        assert!(a.total_completions > 0, "round did no work");
+        let b = conformance_round(&spec);
+        assert_eq!(a.total_completions, b.total_completions);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        let seq = run_conformance(400, 4, 1);
+        let par = run_conformance(400, 4, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.spec.seed, b.spec.seed);
+            assert_eq!(a.total_completions, b.total_completions);
+            assert_eq!(a.ok(), b.ok());
+        }
+    }
+}

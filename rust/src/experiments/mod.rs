@@ -6,8 +6,10 @@
 //! so tables are byte-identical at any job count. Shared by
 //! `octopinf figure N [--jobs N]` and the bench harness.
 
+pub mod fuzz;
 pub mod runner;
 
+pub use fuzz::{conformance_round, run_conformance, ConformanceOutcome};
 pub use runner::{run_grid, run_one, RunSpec};
 
 use crate::config::ExperimentConfig;

@@ -50,48 +50,59 @@ pub fn effective_jobs(jobs: usize, n_cells: usize) -> usize {
     j.clamp(1, n_cells.max(1))
 }
 
-/// Execute every cell, `jobs` at a time (`0` = all hardware threads), and
-/// return metrics **in input order** regardless of completion order.
-pub fn run_grid(specs: &[RunSpec], jobs: usize) -> Vec<RunMetrics> {
-    let jobs = effective_jobs(jobs, specs.len());
-    if jobs <= 1 || specs.len() <= 1 {
-        return specs.iter().map(run_one).collect();
+/// Map `f` over `0..n` across `jobs` scoped worker threads (`0` = one per
+/// hardware thread), returning results **in index order** regardless of
+/// completion order. Work-stealing over an atomic cursor: long items
+/// (e.g. the 13-hour diurnal run) don't leave siblings idle behind a
+/// static partition. Shared by the experiment grids and the conformance
+/// fuzzer.
+pub fn par_map<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = effective_jobs(jobs, n);
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
     }
-    // Work-stealing over an atomic cursor: long cells (e.g. the 13-hour
-    // diurnal run) don't leave siblings idle behind a static partition.
     let next = AtomicUsize::new(0);
-    let mut slots: Vec<Option<RunMetrics>> = Vec::new();
-    slots.resize_with(specs.len(), || None);
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(n, || None);
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..jobs)
             .map(|_| {
                 let next = &next;
+                let f = &f;
                 scope.spawn(move || {
                     let mut done = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= specs.len() {
+                        if i >= n {
                             break;
                         }
-                        done.push((i, run_one(&specs[i])));
+                        done.push((i, f(i)));
                     }
                     done
                 })
             })
             .collect();
         for h in handles {
-            for (i, m) in h.join().expect("experiment worker panicked") {
-                slots[i] = Some(m);
+            for (i, v) in h.join().expect("parallel worker panicked") {
+                slots[i] = Some(v);
             }
         }
     });
     slots
         .into_iter()
         .enumerate()
-        .map(|(i, s)| {
-            s.unwrap_or_else(|| panic!("cell {} ({}) never ran", i, specs[i].label))
-        })
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("cell {i} never ran")))
         .collect()
+}
+
+/// Execute every cell, `jobs` at a time (`0` = all hardware threads), and
+/// return metrics **in input order** regardless of completion order.
+pub fn run_grid(specs: &[RunSpec], jobs: usize) -> Vec<RunMetrics> {
+    par_map(specs.len(), jobs, |i| run_one(&specs[i]))
 }
 
 #[cfg(test)]
@@ -105,6 +116,15 @@ mod tests {
             .iter()
             .map(|&k| RunSpec::new(k.label(), cfg.clone(), k))
             .collect()
+    }
+
+    #[test]
+    fn par_map_preserves_index_order() {
+        for jobs in [1, 3, 8] {
+            let out = par_map(17, jobs, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+        assert!(par_map(0, 4, |i| i).is_empty());
     }
 
     #[test]

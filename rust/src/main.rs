@@ -21,12 +21,14 @@ use octopinf::sim::{run as sim_run, Scenario};
 use octopinf::util::cli::Args;
 use octopinf::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: octopinf <profile|simulate|figure|serve> [options]
+const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|serve> [options]
   profile  [--reps 5] [--out artifacts/profiles.tsv]
   simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
            [--seed 42] [--duration-min N]
   figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
+  fuzz     [--scenarios 50] [--seed0 3735928559] [--jobs N]
+           [--repro fuzz:v1:seed=N]   (replay one scenario verbosely)
   serve    [--duration-s 10] [--fps 30] [--slo-ms 200]";
 
 fn main() {
@@ -36,6 +38,7 @@ fn main() {
         "profile" => cmd_profile(&args),
         "simulate" => cmd_simulate(&args),
         "figure" => cmd_figure(&args),
+        "fuzz" => cmd_fuzz(&args),
         "serve" => cmd_serve(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -137,6 +140,68 @@ fn cmd_figure(args: &Args) -> Result<()> {
         }
         "11" => println!("{}", experiments::fig11_longterm(quick).to_markdown()),
         other => return Err(anyhow!("unknown figure {other:?}")),
+    }
+    Ok(())
+}
+
+/// Differential conformance fuzzing: randomized adversarial scenarios
+/// through every scheduler under the invariant engine. Exits non-zero on
+/// any violation; each row carries its one-line repro string.
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use octopinf::experiments::fuzz::{conformance_round, run_conformance};
+    use octopinf::sim::FuzzSpec;
+
+    if let Some(r) = args.get("repro") {
+        let spec = FuzzSpec::from_repro(r).ok_or_else(|| {
+            anyhow!("bad repro string {r:?} (expected fuzz:v1:seed=N)")
+        })?;
+        println!("replaying {spec}\n");
+        let out = conformance_round(&spec);
+        if out.ok() {
+            println!(
+                "OK: {} schedulers, {} completions, no violations",
+                out.runs, out.total_completions
+            );
+            return Ok(());
+        }
+        return Err(anyhow!("conformance failed:\n{}", out.describe_failures()));
+    }
+
+    let n = args.get_usize("scenarios", 50);
+    let seed0 = args.get_u64("seed0", 0xDEAD_BEEF);
+    let outcomes = run_conformance(seed0, n, args.jobs());
+    let mut t = Table::new(vec!["repro", "class", "completions", "result"]);
+    let mut failures = Vec::new();
+    for o in &outcomes {
+        let result = if o.ok() {
+            "ok".to_string()
+        } else {
+            failures.push(o.describe_failures());
+            format!(
+                "{} violations, {} divergences",
+                o.violations.len(),
+                o.divergences.len()
+            )
+        };
+        t.row(vec![
+            o.spec.repro(),
+            o.spec.class.label().to_string(),
+            o.total_completions.to_string(),
+            result,
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "\n{} scenarios x {} schedulers: {} failed",
+        outcomes.len(),
+        octopinf::coordinator::SchedulerKind::conformance_set().len(),
+        failures.len()
+    );
+    if !failures.is_empty() {
+        return Err(anyhow!(
+            "conformance failures (replay with `octopinf fuzz --repro <string>`):\n{}",
+            failures.join("\n")
+        ));
     }
     Ok(())
 }

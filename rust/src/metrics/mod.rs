@@ -69,6 +69,12 @@ impl RunMetrics {
         self.latency_hist.push_n(latency_ms, n);
     }
 
+    /// Completed queries (on-time + late) — the conservation-side
+    /// complement of `dropped`, cross-checked by the invariant engine.
+    pub fn completed(&self) -> u64 {
+        self.on_time + self.late
+    }
+
     /// Effective throughput: on-time completions per second (objects/s).
     pub fn effective_throughput(&self) -> f64 {
         self.on_time as f64 * 1000.0 / self.duration_ms

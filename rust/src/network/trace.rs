@@ -128,6 +128,32 @@ impl BwTrace {
         Ok(BwTrace { step_ms: 1000.0, samples_mbps: samples, kind: TraceKind::Constant })
     }
 
+    /// Construct directly from 1-second samples (fuzzer, property tests).
+    /// Negative samples are clamped to 0 (outage).
+    pub fn from_samples(samples: Vec<f64>) -> BwTrace {
+        assert!(!samples.is_empty(), "empty trace");
+        BwTrace {
+            step_ms: 1000.0,
+            samples_mbps: samples.into_iter().map(|s| s.max(0.0)).collect(),
+            kind: TraceKind::Constant,
+        }
+    }
+
+    /// Force an outage over seconds `[from_s, to_s)` (clamped to the trace
+    /// length) — the fuzzer's blackout/churn mutation.
+    pub fn zero_window(&mut self, from_s: usize, to_s: usize) {
+        let n = self.samples_mbps.len();
+        for s in self.samples_mbps[from_s.min(n)..to_s.min(n)].iter_mut() {
+            *s = 0.0;
+        }
+    }
+
+    /// Σ samples (Mbit/s · s over the trace) — a scheduler-independent
+    /// quantity the conformance harness cross-checks bit-for-bit.
+    pub fn integral_mbps_s(&self) -> f64 {
+        self.samples_mbps.iter().sum()
+    }
+
     pub fn bandwidth_mbps(&self, t_ms: Ms) -> f64 {
         let idx = (t_ms / self.step_ms).max(0.0) as usize;
         // Loop the trace if simulation outlives it (13 h runs on 30 min
@@ -198,6 +224,19 @@ mod tests {
     fn trace_loops_beyond_end() {
         let t = BwTrace::constant(50.0);
         assert_eq!(t.bandwidth_mbps(10_000_000.0), 50.0);
+    }
+
+    #[test]
+    fn from_samples_and_zero_window() {
+        let mut t = BwTrace::from_samples(vec![10.0, 20.0, -5.0, 30.0]);
+        assert_eq!(t.bandwidth_mbps(2_500.0), 0.0); // negative clamped
+        assert_eq!(t.integral_mbps_s(), 60.0);
+        t.zero_window(1, 99); // clamped past the end
+        assert_eq!(t.bandwidth_mbps(500.0), 10.0);
+        assert_eq!(t.bandwidth_mbps(1_500.0), 0.0);
+        assert_eq!(t.bandwidth_mbps(3_500.0), 0.0);
+        assert_eq!(t.integral_mbps_s(), 10.0);
+        assert!(t.outage_fraction() > 0.7);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::coordinator::{
     GpuId, ModelObs, Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg,
 };
 use crate::metrics::{Outcome, RunMetrics};
+use crate::sim::invariants::{InvariantChecker, InvariantReport};
 use crate::sim::link::FifoLink;
 use crate::sim::scenario::Scenario;
 use crate::util::Rng;
@@ -248,6 +249,10 @@ pub struct Simulator {
     interference: InterferenceModel,
     /// Plan generation; stale Portion events are ignored after reschedule.
     epoch: u64,
+    /// Invariant engine (conformance runs only). `None` in normal runs, so
+    /// every hook site is a single never-taken branch — see
+    /// [`crate::sim::invariants`].
+    checker: Option<Box<InvariantChecker>>,
 }
 
 /// Owned subset of `Scenario` the engine needs (the borrow-free core).
@@ -304,8 +309,39 @@ impl Simulator {
             minute_effective: 0.0,
             interference: InterferenceModel::default(),
             epoch: 0,
+            checker: None,
             sc,
         }
+    }
+
+    /// Arm the invariant engine before `run` (conformance/fuzz harness).
+    pub fn enable_invariants(&mut self) {
+        self.checker = Some(Box::new(InvariantChecker::new()));
+    }
+
+    /// Take the invariant report after `run` (None unless enabled).
+    pub fn take_invariant_report(&mut self) -> Option<InvariantReport> {
+        self.checker.take().map(|c| c.into_report())
+    }
+
+    /// Queries still queued, inside a running batch, or in transit —
+    /// everything the conservation invariant counts as in flight when the
+    /// horizon cuts the run. Walks the remaining event heap once.
+    fn in_flight_census(&self) -> u64 {
+        let mut n: u64 = self
+            .groups
+            .iter()
+            .flatten()
+            .map(|g| g.queue.len() as u64)
+            .sum();
+        for te in self.heap.iter() {
+            match &te.ev {
+                Ev::Arrive { .. } => n += 1,
+                Ev::ExecDone { queries, .. } => n += queries.len() as u64,
+                _ => {}
+            }
+        }
+        n
     }
 
     #[inline]
@@ -361,6 +397,9 @@ impl Simulator {
     }
 
     fn install_plan(&mut self, plan: Plan) {
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_plan(&plan, &self.sc.cluster, &self.sc.pipelines);
+        }
         let mem = plan.total_memory_mb(&self.sc.pipelines);
         self.metrics.peak_memory_mb = self.metrics.peak_memory_mb.max(mem);
         self.epoch += 1;
@@ -444,8 +483,14 @@ impl Simulator {
         }
         let cfg = g.cfg;
         self.metrics.record_n(Outcome::Dropped, 0.0, dropped);
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_drop(dropped);
+        }
         if take == 0 {
             return; // idle cycle: GPU time returned (temporal sharing win)
+        }
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_batch(take, cfg.batch);
         }
         let mut batch = self.buf_pool.pop().unwrap_or_default();
         batch.extend(self.groups[pipeline][model].queue.drain(..take));
@@ -501,13 +546,22 @@ impl Simulator {
                     }
                 }
                 ScaleAction::Down => {
-                    // Remove an idle instance if any (reclaim portion).
-                    if let Some(idx) =
-                        g.busy.iter().rposition(|&b| !b).filter(|_| g.busy.len() > 1)
+                    // Scale-in must not shift binding indices: pending
+                    // Portion events address reserved instances by index,
+                    // so removing from the middle re-aims their duty-cycle
+                    // clocks at the wrong binding (or none, starving the
+                    // queue). Up appends contended clones at the tail, so
+                    // Down only pops the tail — and only when it is idle
+                    // and unreserved.
+                    let last = g.bindings.len().wrapping_sub(1);
+                    if g.bindings.len() > 1
+                        && g.cfg.instances > 1
+                        && !g.busy[last]
+                        && g.bindings[last].temporal.is_none()
                     {
                         g.cfg.instances -= 1;
-                        g.bindings.remove(idx);
-                        g.busy.remove(idx);
+                        g.bindings.pop();
+                        g.busy.pop();
                     }
                 }
                 ScaleAction::Hold => {}
@@ -542,13 +596,21 @@ impl Simulator {
         let max_wait = self.max_wait_ms(pipeline, model);
         let g = &mut self.groups[pipeline][model];
         g.window.record(now);
-        if g.queue.len() >= QUEUE_CAP {
+        let overflow = g.queue.len() >= QUEUE_CAP;
+        if overflow {
             g.queue.pop_front();
             self.metrics.record(Outcome::Dropped, 0.0);
         }
         g.queue.push_back(query);
         let full = g.queue.len() >= g.cfg.batch as usize;
         let need_timer = g.flush_at.is_none();
+        let depth = g.queue.len();
+        if let Some(c) = self.checker.as_deref_mut() {
+            if overflow {
+                c.on_drop(1);
+            }
+            c.on_queue_depth(depth, QUEUE_CAP);
+        }
         if full {
             // Full batches get immediate service: contended instances
             // dispatch normally; reserved ones stack an extra portion into
@@ -601,6 +663,9 @@ impl Simulator {
             }
             let empty = g.queue.is_empty();
             self.metrics.record_n(Outcome::Dropped, 0.0, dropped);
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_drop(dropped);
+            }
             if empty {
                 return;
             }
@@ -621,6 +686,9 @@ impl Simulator {
             g.busy[binding_idx] = true;
             let binding = g.bindings[binding_idx];
             let cfg = g.cfg;
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_batch(batch.len(), cfg.batch);
+            }
 
             // Execution timing.
             let spec = &self.sc.pipelines[pipeline].models[model].spec;
@@ -664,6 +732,9 @@ impl Simulator {
         batch.extend(g.queue.drain(..take));
         g.busy[binding] = true;
         let cfg = g.cfg;
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_batch(batch.len(), cfg.batch);
+        }
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
         let class = self.sc.cluster.device(cfg.device).class;
         let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch);
@@ -700,17 +771,24 @@ impl Simulator {
             for q in &queries {
                 let latency = now - q.created_ms;
                 let n = q.objects.max(1) as u64;
-                let outcome = if latency <= slo {
+                let on_time = latency <= slo;
+                if on_time {
                     self.minute_effective += n as f64;
-                    Outcome::OnTime
-                } else {
-                    Outcome::Late
-                };
+                }
+                let outcome = if on_time { Outcome::OnTime } else { Outcome::Late };
                 self.metrics.record_n(outcome, latency, n);
+                if let Some(c) = self.checker.as_deref_mut() {
+                    c.on_sink(latency, n, on_time, slo);
+                }
             }
         } else {
-            // Route objects to downstream stages.
+            // Route objects to downstream stages. The parent query
+            // terminates here (consumed by the router); each routed
+            // object becomes a freshly-created child query.
             for q in &queries {
+                if let Some(c) = self.checker.as_deref_mut() {
+                    c.on_routed();
+                }
                 let n_objects = q.objects as usize;
                 for _ in 0..n_objects {
                     // Choose downstream by routing fraction.
@@ -724,7 +802,16 @@ impl Simulator {
                             break;
                         }
                     }
-                    let Some(d) = chosen else { continue }; // unrouted residue
+                    let Some(d) = chosen else {
+                        // Unrouted residue (routing fractions sum < 1).
+                        if let Some(c) = self.checker.as_deref_mut() {
+                            c.on_vanish();
+                        }
+                        continue;
+                    };
+                    if let Some(c) = self.checker.as_deref_mut() {
+                        c.on_spawn();
+                    }
                     let next = Query {
                         created_ms: q.created_ms,
                         deadline_ms: q.deadline_ms,
@@ -740,6 +827,9 @@ impl Simulator {
                         self.push(arrive_t, Ev::Arrive { pipeline, model: d, query: next });
                     } else {
                         self.metrics.record(Outcome::Dropped, 0.0);
+                        if let Some(c) = self.checker.as_deref_mut() {
+                            c.on_drop(1);
+                        }
                     }
                 }
             }
@@ -774,6 +864,9 @@ impl Simulator {
         let det_bytes = dag.models[0].spec.input_bytes;
         let objects = self.content[pipeline].objects_in_frame(now);
         self.minute_workload += objects as f64;
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_frame(objects);
+        }
         let q = Query {
             created_ms: now,
             deadline_ms: now + slo,
@@ -786,6 +879,9 @@ impl Simulator {
             self.push(arrive_t, Ev::Arrive { pipeline, model: 0, query: q });
         } else {
             self.metrics.record(Outcome::Dropped, 0.0);
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_drop(1);
+            }
         }
         // Next frame.
         self.push(now + 1000.0 / fps, Ev::Frame { pipeline });
@@ -805,11 +901,18 @@ impl Simulator {
         self.push(TICK_MS, Ev::Tick);
 
         let horizon = self.sc.cfg.duration_ms;
-        while let Some(te) = self.heap.pop() {
-            if te.t > horizon {
-                break;
+        loop {
+            // Peek before popping: events beyond the horizon stay queued so
+            // the conservation census still sees their in-flight queries.
+            match self.heap.peek() {
+                Some(te) if te.t <= horizon => {}
+                _ => break,
             }
+            let te = self.heap.pop().unwrap();
             self.now = te.t;
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_event(te.t);
+            }
             match te.ev {
                 Ev::Frame { pipeline } => self.frame(pipeline),
                 Ev::Arrive { pipeline, model, query } => {
@@ -852,6 +955,12 @@ impl Simulator {
         let n_gpus = self.sc.cluster.n_gpus() as f64;
         self.metrics.mean_gpu_util =
             (total_width_ms / (horizon * n_gpus)).min(1.0);
+        if self.checker.is_some() {
+            let in_flight = self.in_flight_census();
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.finish(in_flight, &self.metrics);
+            }
+        }
         if std::env::var("OCTOPINF_SIM_DEBUG").is_ok() {
             let keys: Vec<(usize, usize)> = (0..self.groups.len())
                 .flat_map(|p| (0..self.groups[p].len()).map(move |m| (p, m)))

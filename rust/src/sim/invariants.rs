@@ -1,0 +1,480 @@
+//! Runtime invariant checking for the simulator — the validation substrate
+//! behind the differential conformance suite (`rust/tests/conformance.rs`).
+//!
+//! The checker is carried by the engine as an `Option<Box<InvariantChecker>>`
+//! and every hook site is a single `if let Some(..)` on that flag, so the
+//! disabled (default) configuration costs one never-taken branch per hook —
+//! no counters, no allocation. Enabled, every hook is O(1); only the final
+//! conservation census walks the remaining event heap once.
+//!
+//! Invariants asserted (violations are *collected*, not panicked, so a
+//! fuzzing run can report the seed-based repro string of every failure):
+//!
+//! 1. **Conservation** — every admitted query terminates exactly once:
+//!    completed at a sink, consumed by the router at a non-sink stage
+//!    (fanning out into child queries, themselves created-counted), or
+//!    dropped — or it is still in flight (queued / executing / in
+//!    transit) when the horizon cuts the run.
+//! 2. **Monotone clock** — processed event timestamps are finite and
+//!    non-decreasing. (Causality of link transfers is subsumed: an arrival
+//!    pushed into the past would pop out of order.)
+//! 3. **Batch bound** — no dispatched batch exceeds the stage's configured
+//!    batch size; every dispatched batch is non-empty.
+//! 4. **Queue bound** — no batcher queue ever exceeds its admission cap.
+//! 5. **Plan shape** — each (pipeline, model) is assigned exactly once;
+//!    every instance has a binding on its assigned device with a valid GPU
+//!    index and a width in (0, 1]; batches come from the compiled
+//!    `BATCH_SIZES`; reserved (temporal) slots have positive duty cycles
+//!    that contain their portions.
+//! 6. **GPU memory** — per GPU, reserved weights plus per-stream peak
+//!    intermediates fit in device memory; per (GPU, stream), the peak
+//!    reserved width respects the utilization cap (CORAL Eq. 4/5 budgets;
+//!    spatial-only baselines carry no reservations so the check is
+//!    vacuous for them by design).
+//! 7. **SLO bookkeeping** — sink outcomes agree with `latency <= slo`,
+//!    latencies are finite and non-negative, and the engine-side counts
+//!    reconcile exactly with [`RunMetrics`] (completions, drops, and the
+//!    latency-sketch population).
+
+use crate::cluster::Cluster;
+use crate::coordinator::{GpuId, Plan};
+use crate::metrics::RunMetrics;
+use crate::pipeline::PipelineDag;
+use crate::profiles::BATCH_SIZES;
+use crate::Ms;
+
+/// Violations recorded per run are capped so a systematically broken
+/// scheduler cannot balloon a fuzzing report.
+const MAX_VIOLATIONS: usize = 16;
+
+/// Streaming invariant checker the engine drives through its event loop.
+#[derive(Clone, Debug, Default)]
+pub struct InvariantChecker {
+    last_event_ms: Ms,
+    events: u64,
+    frames: u64,
+    objects_total: u64,
+    created: u64,
+    dropped: u64,
+    routed: u64,
+    vanished: u64,
+    completed_queries: u64,
+    completed_objects: u64,
+    in_flight: u64,
+    plans: u64,
+    suppressed: u64,
+    violations: Vec<String>,
+}
+
+impl InvariantChecker {
+    pub fn new() -> InvariantChecker {
+        InvariantChecker::default()
+    }
+
+    fn violation(&mut self, msg: String) {
+        if self.violations.len() < MAX_VIOLATIONS {
+            self.violations.push(msg);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    /// A timestamped event is about to be processed.
+    #[inline]
+    pub fn on_event(&mut self, t: Ms) {
+        self.events += 1;
+        // `!(t >= last)` also catches NaN timestamps.
+        if !t.is_finite() || !(t >= self.last_event_ms) {
+            self.violation(format!(
+                "clock not monotone: event at t={t} after t={}",
+                self.last_event_ms
+            ));
+        } else {
+            self.last_event_ms = t;
+        }
+    }
+
+    /// A source frame entered the system as one query carrying `objects`.
+    #[inline]
+    pub fn on_frame(&mut self, objects: u32) {
+        self.frames += 1;
+        self.objects_total += objects as u64;
+        self.created += 1;
+    }
+
+    /// A downstream child query was spawned by the router.
+    #[inline]
+    pub fn on_spawn(&mut self) {
+        self.created += 1;
+    }
+
+    /// One query finished execution at a non-sink stage and was consumed
+    /// by the router (its terminal event; children are spawn-counted).
+    #[inline]
+    pub fn on_routed(&mut self) {
+        self.routed += 1;
+    }
+
+    /// An object fell into the unrouted residue (routing fractions < 1) —
+    /// it never became a query, so it is outside query conservation.
+    #[inline]
+    pub fn on_vanish(&mut self) {
+        self.vanished += 1;
+    }
+
+    /// `n` queries were dropped (queue overflow, lazy deadline drop, or a
+    /// permanently dark link).
+    #[inline]
+    pub fn on_drop(&mut self, n: u64) {
+        self.dropped += n;
+    }
+
+    /// A batch of `len` queries was dispatched at configured max `max`.
+    #[inline]
+    pub fn on_batch(&mut self, len: usize, max: u32) {
+        if len == 0 {
+            self.violation("empty batch dispatched".to_string());
+        }
+        if len > max as usize {
+            self.violation(format!("batch {len} exceeds configured max {max}"));
+        }
+    }
+
+    /// A batcher queue holds `len` entries under admission cap `cap`.
+    #[inline]
+    pub fn on_queue_depth(&mut self, len: usize, cap: usize) {
+        if len > cap {
+            self.violation(format!("queue depth {len} exceeds cap {cap}"));
+        }
+    }
+
+    /// One query reached its sink carrying `objects` completions.
+    #[inline]
+    pub fn on_sink(&mut self, latency: Ms, objects: u64, on_time: bool, slo: Ms) {
+        self.completed_queries += 1;
+        self.completed_objects += objects;
+        if !latency.is_finite() || latency < 0.0 {
+            self.violation(format!("completion with bad latency {latency}"));
+        } else if on_time != (latency <= slo) {
+            self.violation(format!(
+                "SLO bookkeeping: latency {latency} vs slo {slo} marked on_time={on_time}"
+            ));
+        }
+    }
+
+    /// A plan was installed; check its structural and budget invariants.
+    pub fn on_plan(&mut self, plan: &Plan, cluster: &Cluster, pipelines: &[PipelineDag]) {
+        self.plans += 1;
+        // Coverage: exactly one assignment per (pipeline, model).
+        let mut seen: Vec<Vec<u32>> =
+            pipelines.iter().map(|p| vec![0u32; p.len()]).collect();
+        // Per-GPU reserved weight memory; per-(GPU, stream) peak reserved
+        // intermediate memory and width — CORAL's Eq. 4/5 budget recompute.
+        use std::collections::HashMap;
+        let mut weight: HashMap<GpuId, f64> = HashMap::new();
+        let mut inter: HashMap<(GpuId, usize), f64> = HashMap::new();
+        let mut width: HashMap<(GpuId, usize), f64> = HashMap::new();
+
+        for a in &plan.assignments {
+            if a.pipeline >= pipelines.len() || a.model >= pipelines[a.pipeline].len() {
+                self.violation(format!(
+                    "assignment for unknown stage {}/{}",
+                    a.pipeline, a.model
+                ));
+                continue;
+            }
+            seen[a.pipeline][a.model] += 1;
+            if a.cfg.device >= cluster.devices.len() {
+                self.violation(format!(
+                    "stage {}/{} assigned to unknown device {}",
+                    a.pipeline, a.model, a.cfg.device
+                ));
+                continue;
+            }
+            if !BATCH_SIZES.contains(&a.cfg.batch) {
+                self.violation(format!(
+                    "stage {}/{} batch {} outside compiled sizes",
+                    a.pipeline, a.model, a.cfg.batch
+                ));
+            }
+            if a.cfg.instances == 0 || a.bindings.len() != a.cfg.instances as usize {
+                self.violation(format!(
+                    "stage {}/{}: {} bindings for {} instances",
+                    a.pipeline,
+                    a.model,
+                    a.bindings.len(),
+                    a.cfg.instances
+                ));
+            }
+            let spec = &pipelines[a.pipeline].models[a.model].spec;
+            for b in &a.bindings {
+                if b.gpu.device != a.cfg.device
+                    || b.gpu.gpu >= cluster.device(a.cfg.device).gpus.len()
+                {
+                    self.violation(format!(
+                        "stage {}/{} binding on {:?} but device {}",
+                        a.pipeline, a.model, b.gpu, a.cfg.device
+                    ));
+                    continue;
+                }
+                if !(b.width > 0.0 && b.width <= 1.0 + 1e-9) {
+                    self.violation(format!(
+                        "stage {}/{} binding width {} outside (0, 1]",
+                        a.pipeline, a.model, b.width
+                    ));
+                }
+                if let Some(t) = b.temporal {
+                    if !(t.duty_cycle_ms > 0.0)
+                        || t.duration_ms < 0.0
+                        || t.start_ms < -1e-9
+                        || t.start_ms + t.duration_ms > t.duty_cycle_ms + 1e-6
+                    {
+                        self.violation(format!(
+                            "stage {}/{} slot [{}, {}+{}] escapes duty cycle {}",
+                            a.pipeline,
+                            a.model,
+                            t.start_ms,
+                            t.start_ms,
+                            t.duration_ms,
+                            t.duty_cycle_ms
+                        ));
+                    }
+                    *weight.entry(b.gpu).or_default() += spec.weight_mem_mb;
+                    let e = inter.entry((b.gpu, t.stream)).or_default();
+                    *e = e.max(spec.inter_mem_mb * a.cfg.batch as f64);
+                    let w = width.entry((b.gpu, t.stream)).or_default();
+                    *w = w.max(b.width);
+                }
+            }
+        }
+        for (p, row) in seen.iter().enumerate() {
+            for (m, &n) in row.iter().enumerate() {
+                if n != 1 {
+                    self.violation(format!("stage {p}/{m} assigned {n} times"));
+                }
+            }
+        }
+        for d in &cluster.devices {
+            for (gi, g) in d.gpus.iter().enumerate() {
+                let id = GpuId { device: d.id, gpu: gi };
+                let wsum = weight.get(&id).copied().unwrap_or(0.0);
+                let isum: f64 = inter
+                    .iter()
+                    .filter(|((g2, _), _)| *g2 == id)
+                    .map(|(_, v)| v)
+                    .sum();
+                if wsum + isum > g.mem_mb + 1e-6 {
+                    self.violation(format!(
+                        "{id:?} reserved memory {wsum:.1}+{isum:.1} exceeds {} MB",
+                        g.mem_mb
+                    ));
+                }
+                let usum: f64 = width
+                    .iter()
+                    .filter(|((g2, _), _)| *g2 == id)
+                    .map(|(_, v)| v)
+                    .sum();
+                if usum > g.util_cap + 1e-6 {
+                    self.violation(format!(
+                        "{id:?} reserved width {usum:.3} exceeds cap {}",
+                        g.util_cap
+                    ));
+                }
+            }
+        }
+    }
+
+    /// End of run: reconcile conservation and the metrics bookkeeping.
+    /// `in_flight` is the engine's census of queries still queued, in a
+    /// running batch, or in transit when the horizon was reached.
+    pub fn finish(&mut self, in_flight: u64, metrics: &RunMetrics) {
+        self.in_flight = in_flight;
+        let accounted =
+            self.completed_queries + self.routed + self.dropped + in_flight;
+        if accounted != self.created {
+            self.violation(format!(
+                "conservation: created {} != completed {} + routed {} + \
+                 dropped {} + in-flight {}",
+                self.created, self.completed_queries, self.routed, self.dropped,
+                in_flight
+            ));
+        }
+        if metrics.dropped != self.dropped {
+            self.violation(format!(
+                "metrics dropped {} != engine dropped {}",
+                metrics.dropped, self.dropped
+            ));
+        }
+        if metrics.completed() != self.completed_objects {
+            self.violation(format!(
+                "metrics completions {} != engine sink objects {}",
+                metrics.completed(),
+                self.completed_objects
+            ));
+        }
+        if metrics.latency.count() != metrics.completed() {
+            self.violation(format!(
+                "latency sketch holds {} samples for {} completions",
+                metrics.latency.count(),
+                metrics.completed()
+            ));
+        }
+    }
+
+    /// Consume the checker into its report.
+    pub fn into_report(self) -> InvariantReport {
+        InvariantReport {
+            events: self.events,
+            frames: self.frames,
+            objects_total: self.objects_total,
+            created: self.created,
+            dropped: self.dropped,
+            routed: self.routed,
+            vanished: self.vanished,
+            completed_queries: self.completed_queries,
+            completed_objects: self.completed_objects,
+            in_flight: self.in_flight,
+            plans: self.plans,
+            suppressed: self.suppressed,
+            violations: self.violations,
+        }
+    }
+}
+
+/// Outcome of one invariant-checked run.
+#[derive(Clone, Debug)]
+pub struct InvariantReport {
+    pub events: u64,
+    /// Source frames emitted — scheduler-independent for a fixed scenario.
+    pub frames: u64,
+    /// Total objects the content processes produced — also
+    /// scheduler-independent (per-pipeline RNG streams are isolated).
+    pub objects_total: u64,
+    pub created: u64,
+    pub dropped: u64,
+    /// Queries consumed by the router at non-sink stages.
+    pub routed: u64,
+    /// Objects lost to the unrouted residue (routing fractions < 1).
+    pub vanished: u64,
+    pub completed_queries: u64,
+    pub completed_objects: u64,
+    pub in_flight: u64,
+    pub plans: u64,
+    /// Violations beyond the reporting cap.
+    pub suppressed: u64,
+    pub violations: Vec<String>,
+}
+
+impl InvariantReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty() && self.suppressed == 0
+    }
+
+    /// Scheduler-independent fingerprint for differential cross-checks:
+    /// exact (frames, objects) counts. Trace integrals are fingerprinted
+    /// scenario-side (see `experiments::fuzz`).
+    pub fn workload_fingerprint(&self) -> (u64, u64) {
+        (self.frames, self.objects_total)
+    }
+
+    /// One-line human summary for fuzz tables.
+    pub fn summary(&self) -> String {
+        format!(
+            "events={} frames={} objects={} created={} done={} routed={} \
+             dropped={} unrouted={} in-flight={} violations={}",
+            self.events,
+            self.frames,
+            self.objects_total,
+            self.created,
+            self.completed_queries,
+            self.routed,
+            self.dropped,
+            self.vanished,
+            self.in_flight,
+            self.violations.len() as u64 + self.suppressed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_run_reports_ok() {
+        let mut c = InvariantChecker::new();
+        c.on_event(0.0);
+        c.on_event(5.0);
+        // One frame with 3 objects: the frame query is routed into two
+        // children (one object unrouted); both children complete at sinks.
+        c.on_frame(3);
+        c.on_routed();
+        c.on_spawn();
+        c.on_spawn();
+        c.on_vanish();
+        c.on_batch(2, 4);
+        c.on_queue_depth(2, 1024);
+        c.on_sink(50.0, 1, true, 200.0);
+        c.on_sink(250.0, 1, false, 200.0);
+        c.on_drop(0);
+        let mut m = RunMetrics::new(1000.0);
+        m.record(crate::metrics::Outcome::OnTime, 50.0);
+        m.record(crate::metrics::Outcome::Late, 250.0);
+        // created 3 = completed 2 + routed 1 + dropped 0 + in-flight 0.
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.workload_fingerprint(), (1, 3));
+    }
+
+    #[test]
+    fn conservation_leak_is_flagged() {
+        let mut c = InvariantChecker::new();
+        c.on_frame(1);
+        c.on_spawn(); // 2 created, nothing terminal
+        let m = RunMetrics::new(1000.0);
+        c.finish(1, &m); // one in flight: one query leaked
+        let r = c.into_report();
+        assert!(!r.ok());
+        assert!(r.violations[0].contains("conservation"), "{}", r.violations[0]);
+    }
+
+    #[test]
+    fn clock_regression_is_flagged() {
+        let mut c = InvariantChecker::new();
+        c.on_event(10.0);
+        c.on_event(9.0);
+        c.on_event(f64::NAN);
+        let r = c.into_report();
+        assert_eq!(r.violations.len(), 2);
+    }
+
+    #[test]
+    fn oversized_batch_and_queue_flagged() {
+        let mut c = InvariantChecker::new();
+        c.on_batch(9, 8);
+        c.on_batch(0, 8);
+        c.on_queue_depth(2000, 1024);
+        assert_eq!(c.clone().into_report().violations.len(), 3);
+    }
+
+    #[test]
+    fn slo_bookkeeping_mismatch_flagged() {
+        let mut c = InvariantChecker::new();
+        c.on_sink(300.0, 1, true, 200.0); // marked on-time but late
+        c.on_sink(f64::INFINITY, 1, false, 200.0);
+        assert_eq!(c.into_report().violations.len(), 2);
+    }
+
+    #[test]
+    fn violation_flood_is_capped_but_counted() {
+        let mut c = InvariantChecker::new();
+        for _ in 0..100 {
+            c.on_batch(0, 8);
+        }
+        let r = c.into_report();
+        assert_eq!(r.violations.len(), MAX_VIOLATIONS);
+        assert_eq!(r.suppressed, 100 - MAX_VIOLATIONS as u64);
+        assert!(!r.ok());
+    }
+}

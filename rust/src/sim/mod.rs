@@ -8,12 +8,16 @@
 //! identical mechanics.
 
 mod engine;
+pub mod invariants;
 mod link;
 pub mod scenario;
 
 pub use engine::{InterferenceModel, Simulator};
+pub use invariants::{InvariantChecker, InvariantReport};
 pub use link::FifoLink;
-pub use scenario::{preset, scenario_env_bw, Scenario};
+pub use scenario::{
+    preset, scenario_env_bw, FuzzClass, FuzzSpec, Scenario, ScenarioGen,
+};
 
 use crate::metrics::RunMetrics;
 use crate::coordinator::SchedulerKind;
@@ -22,4 +26,19 @@ use crate::coordinator::SchedulerKind;
 pub fn run(scenario: &Scenario, kind: SchedulerKind) -> RunMetrics {
     let mut sim = Simulator::new(scenario, kind);
     sim.run()
+}
+
+/// Run one scheduler with the invariant engine armed; returns the metrics
+/// together with the invariant report (conformance/fuzz harness entry).
+pub fn run_checked(
+    scenario: &Scenario,
+    kind: SchedulerKind,
+) -> (RunMetrics, InvariantReport) {
+    let mut sim = Simulator::new(scenario, kind);
+    sim.enable_invariants();
+    let metrics = sim.run();
+    let report = sim
+        .take_invariant_report()
+        .expect("invariants were enabled before run");
+    (metrics, report)
 }

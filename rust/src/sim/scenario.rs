@@ -95,6 +95,294 @@ pub fn scenario_env_bw(sc: &Scenario, t_ms: f64) -> Vec<f64> {
     sc.traces.iter().map(|tr| tr.bandwidth_mbps(t_ms)).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Scenario fuzzer: adversarial edge dynamics beyond the paper's presets.
+// ---------------------------------------------------------------------------
+
+/// Adversarial scenario family sampled by the fuzzer. Each family stresses
+/// one regime the paper claims robustness in (EdgeVision and the adaptive
+/// edge-serving literature stress the same axes): workload spikes, diurnal
+/// drift, bandwidth collapse, device churn, SLO pressure, and skewed
+/// camera fan-out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuzzClass {
+    /// Flat content with frequent strong burst episodes (crowd events).
+    FlashCrowd,
+    /// Diurnal intensity curve entered at a random time of day.
+    DiurnalShift,
+    /// Forced zero-bandwidth windows punched into uplink traces.
+    Blackout,
+    /// Devices dark for long alternating stretches (hot-join / departure).
+    DeviceChurn,
+    /// Tightened and heterogeneous per-pipeline SLOs + fps jitter.
+    TightSlo,
+    /// Few devices hosting many cameras with cranked detector fan-out.
+    SkewedFanout,
+    /// Two or more of the above composed.
+    Mixed,
+}
+
+impl FuzzClass {
+    pub const ALL: [FuzzClass; 7] = [
+        FuzzClass::FlashCrowd,
+        FuzzClass::DiurnalShift,
+        FuzzClass::Blackout,
+        FuzzClass::DeviceChurn,
+        FuzzClass::TightSlo,
+        FuzzClass::SkewedFanout,
+        FuzzClass::Mixed,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FuzzClass::FlashCrowd => "flash_crowd",
+            FuzzClass::DiurnalShift => "diurnal_shift",
+            FuzzClass::Blackout => "blackout",
+            FuzzClass::DeviceChurn => "device_churn",
+            FuzzClass::TightSlo => "tight_slo",
+            FuzzClass::SkewedFanout => "skewed_fanout",
+            FuzzClass::Mixed => "mixed",
+        }
+    }
+}
+
+/// Deterministic description of one fuzzed experiment. Every field derives
+/// from `seed` alone, so the one-line repro string (`fuzz:v1:seed=N`)
+/// reconstructs the exact scenario — generator, traces, content, SLOs.
+#[derive(Clone, Debug)]
+pub struct FuzzSpec {
+    pub seed: u64,
+    pub class: FuzzClass,
+    pub cfg: ExperimentConfig,
+}
+
+/// Stream tag separating spec sampling from scenario mutation draws.
+const FUZZ_SAMPLE_TAG: u64 = 0xFAB1_0FF5;
+const FUZZ_MUTATE_TAG: u64 = 0x5EED_CAFE;
+
+impl FuzzSpec {
+    /// Sample a structurally-valid spec from `seed` (total function: every
+    /// u64 yields a runnable scenario).
+    pub fn sample(seed: u64) -> FuzzSpec {
+        let mut rng = Rng::new(seed ^ FUZZ_SAMPLE_TAG);
+        let class = FuzzClass::ALL[rng.below(FuzzClass::ALL.len())];
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = seed;
+        // Short horizons keep a 50-scenario x 5-scheduler sweep in CI
+        // budget while still crossing many batching/autoscale periods.
+        cfg.duration_ms = rng.range(12_000.0, 30_000.0).floor();
+        cfg.n_sources = 1 + rng.below(4);
+        cfg.cameras_per_device = 1;
+        cfg.trace = if rng.chance(0.5) { TraceKind::Lte } else { TraceKind::FiveG };
+        match class {
+            FuzzClass::DiurnalShift => cfg.diurnal = true,
+            FuzzClass::TightSlo => {
+                cfg.slo_reduction_ms = rng.range(40.0, 145.0).floor();
+            }
+            FuzzClass::SkewedFanout => {
+                cfg.n_sources = 1 + rng.below(2);
+                cfg.cameras_per_device = 2 + rng.below(3);
+            }
+            FuzzClass::Mixed => {
+                cfg.slo_reduction_ms = rng.range(0.0, 100.0).floor();
+                if rng.chance(0.5) {
+                    cfg.cameras_per_device = 2;
+                }
+            }
+            _ => {}
+        }
+        debug_assert!(cfg.validate().is_ok());
+        FuzzSpec { seed, class, cfg }
+    }
+
+    /// One-line repro string; feed back through [`FuzzSpec::from_repro`]
+    /// (or `octopinf fuzz --repro <string>`) to replay deterministically.
+    pub fn repro(&self) -> String {
+        format!("fuzz:v1:seed={}", self.seed)
+    }
+
+    /// Parse a repro string back into the identical spec.
+    pub fn from_repro(s: &str) -> Option<FuzzSpec> {
+        let rest = s.trim().strip_prefix("fuzz:v1:seed=")?;
+        rest.parse::<u64>().ok().map(FuzzSpec::sample)
+    }
+
+    /// Instantiate the scenario: the standard deployment for `cfg`, then
+    /// the class-specific adversarial mutation.
+    pub fn build(&self) -> Scenario {
+        let mut sc = Scenario::build(self.cfg.clone());
+        let mut rng = Rng::new(self.seed ^ FUZZ_MUTATE_TAG);
+        match self.class {
+            FuzzClass::FlashCrowd => flash_crowd(&mut sc, &mut rng),
+            FuzzClass::DiurnalShift => diurnal_shift(&mut sc, &mut rng),
+            FuzzClass::Blackout => blackout(&mut sc, &mut rng, false),
+            FuzzClass::DeviceChurn => device_churn(&mut sc, &mut rng),
+            FuzzClass::TightSlo => tight_slo(&mut sc, &mut rng),
+            FuzzClass::SkewedFanout => skewed_fanout(&mut sc, &mut rng),
+            FuzzClass::Mixed => {
+                flash_crowd(&mut sc, &mut rng);
+                blackout(&mut sc, &mut rng, true);
+                if rng.chance(0.5) {
+                    tight_slo(&mut sc, &mut rng);
+                }
+            }
+        }
+        for p in &sc.pipelines {
+            debug_assert!(p.validate().is_ok(), "{}", p.name);
+        }
+        sc
+    }
+}
+
+impl std::fmt::Display for FuzzSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}: {}src x {}cam, {:.0}s, {:?}, slo-{:.0}ms{}]",
+            self.repro(),
+            self.class.label(),
+            self.cfg.n_sources,
+            self.cfg.cameras_per_device,
+            self.cfg.duration_ms / 1000.0,
+            self.cfg.trace,
+            self.cfg.slo_reduction_ms,
+            if self.cfg.diurnal { ", diurnal" } else { "" },
+        )
+    }
+}
+
+/// Workload spike: flat base intensity, strong frequent bursts.
+fn flash_crowd(sc: &mut Scenario, rng: &mut Rng) {
+    for (i, slot) in sc.content.iter_mut().enumerate() {
+        let mut pr = ContentProfile::flash_crowd(
+            rng.range(3.0, 10.0),
+            rng.range(3.0, 7.0),
+        );
+        pr.calm_dwell_ms = rng.range(8_000.0, 25_000.0);
+        pr.burst_dwell_ms = rng.range(3_000.0, 12_000.0);
+        *slot = ContentDynamics::new(pr, rng.fork(7000 + i as u64));
+    }
+}
+
+/// Enter the diurnal curve at a random time of day (night, rush hour...).
+fn diurnal_shift(sc: &mut Scenario, rng: &mut Rng) {
+    let offset = rng.range(0.0, 24.0 * 3_600_000.0);
+    for (i, (slot, p)) in
+        sc.content.iter_mut().zip(&sc.pipelines).enumerate()
+    {
+        let mut pr = if p.name.starts_with("traffic") {
+            ContentProfile::traffic()
+        } else {
+            ContentProfile::surveillance()
+        };
+        pr.day_offset_ms = offset;
+        *slot = ContentDynamics::new(pr, rng.fork(8000 + i as u64));
+    }
+}
+
+/// Seconds of the trace the simulation actually plays (traces are
+/// generated with a 60 s floor, so windows must be sampled against the
+/// sim horizon or they land beyond everything the run observes).
+fn horizon_s(sc: &Scenario) -> usize {
+    ((sc.cfg.duration_ms / 1000.0).ceil() as usize).max(2)
+}
+
+/// Punch zero-bandwidth windows into camera-hosting uplinks (devices
+/// `1..=n_sources` — the only links the run observes), inside the sim
+/// horizon. `light` softens the dose for composition inside
+/// [`FuzzClass::Mixed`].
+fn blackout(sc: &mut Scenario, rng: &mut Rng, light: bool) {
+    let p_hit = if light { 0.35 } else { 0.7 };
+    let len_s = horizon_s(sc);
+    let n = sc.cfg.n_sources;
+    for (d, tr) in sc.traces.iter_mut().enumerate().skip(1).take(n) {
+        // Guarantee at least one active uplink is hit per scenario: the
+        // first camera device is always mutated, the rest by chance.
+        if d > 1 && !rng.chance(p_hit) {
+            continue;
+        }
+        let windows = 1 + rng.below(3);
+        for _ in 0..windows {
+            let start = rng.below(len_s);
+            let dark = 3 + rng.below(25);
+            tr.zero_window(start, start + dark);
+        }
+    }
+}
+
+/// Long dark stretches with the join/departure transition *inside* the
+/// sim horizon: a camera device joining late (dark, then alive) or
+/// departing (alive, then dark) — churn as the link layer sees it.
+fn device_churn(sc: &mut Scenario, rng: &mut Rng) {
+    let len_s = horizon_s(sc);
+    let n = sc.cfg.n_sources;
+    for (d, tr) in sc.traces.iter_mut().enumerate().skip(1).take(n) {
+        if d > 1 && !rng.chance(0.8) {
+            continue;
+        }
+        // Transition somewhere in the middle 60 % of the run.
+        let cut = (len_s / 5 + rng.below((3 * len_s / 5).max(1))).clamp(1, len_s - 1);
+        if rng.chance(0.5) {
+            tr.zero_window(0, cut); // hot-join: dark until `cut`
+        } else {
+            tr.zero_window(cut, len_s); // departure: dark after `cut`
+        }
+    }
+}
+
+/// Heterogeneous SLO pressure and frame-rate jitter.
+fn tight_slo(sc: &mut Scenario, rng: &mut Rng) {
+    for p in sc.pipelines.iter_mut() {
+        p.slo_ms = (p.slo_ms * rng.range(0.5, 1.2)).max(25.0);
+        p.source_fps = rng.range(8.0, 24.0);
+    }
+}
+
+/// Dense scenes (high real per-frame fan-out), misestimated scheduler
+/// fan-out, and under-routed residue (routing fractions summing < 1
+/// exercise the conservation path for vanished objects).
+fn skewed_fanout(sc: &mut Scenario, rng: &mut Rng) {
+    for p in sc.pipelines.iter_mut() {
+        p.models[0].spec.fanout_mean = rng.range(4.0, 9.0);
+        if rng.chance(0.5) {
+            let scale = rng.range(0.55, 0.95);
+            for frac in p.models[0].routing.iter_mut() {
+                *frac *= scale;
+            }
+        }
+    }
+    // The engine's *real* fan-out comes from the content process (objects
+    // per frame), not `fanout_mean` (which only feeds the schedulers' rate
+    // estimates and is deliberately desynchronized above so planners also
+    // face misestimation): crank the scenes dense.
+    for (i, slot) in sc.content.iter_mut().enumerate() {
+        let pr = ContentProfile::flat(rng.range(8.0, 16.0));
+        *slot = ContentDynamics::new(pr, rng.fork(9000 + i as u64));
+    }
+}
+
+/// Deterministic enumerator over fuzz seeds: `seed0, seed0+1, ...` so any
+/// scenario in a sweep is reproducible from its position alone.
+pub struct ScenarioGen {
+    next_seed: u64,
+}
+
+impl ScenarioGen {
+    pub fn new(seed0: u64) -> ScenarioGen {
+        ScenarioGen { next_seed: seed0 }
+    }
+}
+
+impl Iterator for ScenarioGen {
+    type Item = FuzzSpec;
+
+    fn next(&mut self) -> Option<FuzzSpec> {
+        let spec = FuzzSpec::sample(self.next_seed);
+        self.next_seed = self.next_seed.wrapping_add(1);
+        Some(spec)
+    }
+}
+
 /// Convenience preset mapping for benches/CLI.
 pub fn preset(name: &str) -> Option<ExperimentConfig> {
     let mut cfg = ExperimentConfig::default();
@@ -164,5 +452,99 @@ mod tests {
             scenario_env_bw(&a, 12_345.0),
             scenario_env_bw(&b, 12_345.0)
         );
+    }
+
+    #[test]
+    fn fuzz_specs_valid_and_repro_roundtrips() {
+        for seed in 0..40u64 {
+            let a = FuzzSpec::sample(seed);
+            assert!(a.cfg.validate().is_ok(), "seed {seed}: {:?}", a.cfg);
+            let b = FuzzSpec::from_repro(&a.repro()).expect("repro parses");
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.class, b.class);
+            let (sa, sb) = (a.build(), b.build());
+            assert_eq!(sa.pipelines.len(), sb.pipelines.len());
+            for (pa, pb) in sa.pipelines.iter().zip(&sb.pipelines) {
+                assert!(pa.validate().is_ok(), "seed {seed} {}", pa.name);
+                assert_eq!(pa.slo_ms, pb.slo_ms, "seed {seed}");
+                assert_eq!(pa.source_fps, pb.source_fps, "seed {seed}");
+            }
+            assert_eq!(
+                scenario_env_bw(&sa, 5_000.0),
+                scenario_env_bw(&sb, 5_000.0),
+                "seed {seed}: traces diverge between identical specs"
+            );
+        }
+        assert!(FuzzSpec::from_repro("fuzz:v2:seed=1").is_none());
+        assert!(FuzzSpec::from_repro("garbage").is_none());
+    }
+
+    #[test]
+    fn scenario_gen_covers_many_classes() {
+        use std::collections::HashSet;
+        let classes: HashSet<&'static str> = ScenarioGen::new(0)
+            .take(60)
+            .map(|s| s.class.label())
+            .collect();
+        assert!(classes.len() >= 5, "only {classes:?}");
+    }
+
+    /// Per-second link state over the *sim horizon* (not the 60 s trace
+    /// floor): (dark seconds, bright seconds).
+    fn in_horizon_profile(sc: &Scenario, device: usize) -> (usize, usize) {
+        let secs = (sc.cfg.duration_ms / 1000.0).ceil() as usize;
+        let mut dark = 0;
+        let mut bright = 0;
+        for s in 0..secs {
+            if sc.traces[device].bandwidth_mbps(s as f64 * 1000.0) <= 0.0 {
+                dark += 1;
+            } else {
+                bright += 1;
+            }
+        }
+        (dark, bright)
+    }
+
+    #[test]
+    fn blackout_scenarios_darken_links_inside_the_horizon() {
+        // Deterministically find blackout-class seeds and confirm the
+        // mutation darkens at least one uplink *within the run*.
+        let mut found = 0;
+        for spec in ScenarioGen::new(0).take(200) {
+            if spec.class != FuzzClass::Blackout {
+                continue;
+            }
+            let sc = spec.build();
+            let hit = (1..=sc.cfg.n_sources)
+                .any(|d| in_horizon_profile(&sc, d).0 >= 3);
+            if hit {
+                found += 1;
+            }
+            if found >= 3 {
+                return;
+            }
+        }
+        panic!("no blackout scenario darkened a link inside the horizon");
+    }
+
+    #[test]
+    fn device_churn_transitions_inside_the_horizon() {
+        // The churn family must produce an actual join/departure edge the
+        // run can observe: a device that is both dark and alive for
+        // meaningful stretches of the simulated window.
+        for spec in ScenarioGen::new(0).take(300) {
+            if spec.class != FuzzClass::DeviceChurn {
+                continue;
+            }
+            let sc = spec.build();
+            let secs = (sc.cfg.duration_ms / 1000.0).ceil() as usize;
+            if (1..=sc.cfg.n_sources).any(|d| {
+                let (dark, bright) = in_horizon_profile(&sc, d);
+                dark * 5 >= secs && bright * 5 >= secs
+            }) {
+                return; // dark >= 20% and alive >= 20% of the run
+            }
+        }
+        panic!("no churn scenario produced an in-horizon transition");
     }
 }

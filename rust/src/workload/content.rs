@@ -71,6 +71,20 @@ impl ContentProfile {
             day_offset_ms: 0.0,
         }
     }
+
+    /// Flash-crowd stress profile: flat base intensity with frequent,
+    /// strong burst episodes — the fuzzer's workload-spike class (a crowd
+    /// entering the scene, rush-hour onset).
+    pub fn flash_crowd(mean_objects: f64, burst_factor: f64) -> ContentProfile {
+        ContentProfile {
+            shape: DiurnalShape::Flat,
+            peak_objects: mean_objects,
+            burst_factor,
+            calm_dwell_ms: 15_000.0,
+            burst_dwell_ms: 8_000.0,
+            day_offset_ms: 0.0,
+        }
+    }
 }
 
 /// Stateful per-camera object-count process.

@@ -1,0 +1,99 @@
+//! Hot-path bench regression gate (ROADMAP open perf item).
+//!
+//! `cargo bench --bench hotpath` writes `BENCH_hotpath.json`; the committed
+//! baseline lives in `BENCH_hotpath.baseline.json` (first toolchain run of
+//! `./ci.sh` captures it). The gate test is `#[ignore]` by default — timing
+//! is meaningless under `cargo test`'s load — and is run explicitly by
+//! `ci.sh` after the bench:
+//!
+//! ```sh
+//! cargo bench --bench hotpath
+//! cargo test -q --test perf_regression -- --ignored
+//! ```
+//!
+//! It fails if any entry regresses more than 25 % in ns/iter vs the
+//! baseline. Entries present on one side only are reported but don't fail
+//! (benches get added/renamed); refresh the baseline by deleting it and
+//! re-running `ci.sh`.
+
+use std::collections::HashMap;
+
+/// Allowed slowdown before the gate trips.
+const REGRESSION_FACTOR: f64 = 1.25;
+
+/// Parse the `common::Recorder` JSON (one result object per line) without
+/// serde: extract (name, ns_per_iter) pairs.
+fn parse_bench_json(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(npos) = line.find("\"name\": \"") else { continue };
+        let rest = &line[npos + 9..];
+        let Some(endq) = rest.find('"') else { continue };
+        let name = rest[..endq].to_string();
+        let Some(vpos) = line.find("\"ns_per_iter\": ") else { continue };
+        let tail = &line[vpos + 15..];
+        let num: String = tail
+            .chars()
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+            .collect();
+        if let Ok(v) = num.parse::<f64>() {
+            out.push((name, v));
+        }
+    }
+    out
+}
+
+#[test]
+fn bench_json_parser_reads_recorder_format() {
+    let text = r#"{
+  "bench": "hotpath",
+  "results": [
+    {"name": "arrival window rate+cv", "iters": 20000, "ns_per_iter": 41.5},
+    {"name": "percentiles 500k samples", "iters": 5, "ns_per_iter": 2500000.0}
+  ]
+}
+"#;
+    let parsed = parse_bench_json(text);
+    assert_eq!(parsed.len(), 2);
+    assert_eq!(parsed[0].0, "arrival window rate+cv");
+    assert!((parsed[0].1 - 41.5).abs() < 1e-9);
+    assert!((parsed[1].1 - 2_500_000.0).abs() < 1e-6);
+}
+
+#[test]
+#[ignore = "perf gate: run `cargo bench --bench hotpath` first (ci.sh does)"]
+fn hotpath_no_entry_regresses_beyond_25_percent() {
+    let baseline = match std::fs::read_to_string("BENCH_hotpath.baseline.json") {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!(
+                "no committed baseline (BENCH_hotpath.baseline.json); \
+                 ci.sh captures one from the first bench run — skipping gate"
+            );
+            return;
+        }
+    };
+    let fresh = std::fs::read_to_string("BENCH_hotpath.json").expect(
+        "BENCH_hotpath.json missing — run `cargo bench --bench hotpath` first",
+    );
+    let base = parse_bench_json(&baseline);
+    assert!(!base.is_empty(), "baseline parsed to zero entries");
+    let cur: HashMap<String, f64> = parse_bench_json(&fresh).into_iter().collect();
+    let mut regressions = Vec::new();
+    for (name, b) in base {
+        match cur.get(&name) {
+            Some(&c) if c > b * REGRESSION_FACTOR => regressions.push(format!(
+                "{name}: {b:.0} -> {c:.0} ns/iter (+{:.0}%)",
+                (c / b - 1.0) * 100.0
+            )),
+            Some(_) => {}
+            None => eprintln!("note: baseline entry {name:?} not in fresh run"),
+        }
+    }
+    assert!(
+        regressions.is_empty(),
+        "hot paths regressed >{:.0}% vs BENCH_hotpath.baseline.json:\n{}",
+        (REGRESSION_FACTOR - 1.0) * 100.0,
+        regressions.join("\n")
+    );
+}

@@ -11,6 +11,7 @@ use octopinf::network::BwTrace;
 use octopinf::pipeline::{standard_pipelines, PipelineDag};
 use octopinf::profiles::{ProfileStore, BATCH_SIZES};
 use octopinf::serving::DynamicBatcher;
+use octopinf::sim::FifoLink;
 use octopinf::util::prop::{check, forall};
 use octopinf::util::stats::{burstiness, Percentiles, QuantileSketch};
 use octopinf::util::Rng;
@@ -414,6 +415,130 @@ fn prop_quantile_sketch_brackets_exact_quantiles() {
                 check(
                     s >= lo * (1.0 - 0.01) - 1e-9 && s <= hi * (1.0 + 0.01) + 1e-9,
                     format!("q={q}: sketch {s} outside [{lo}, {hi}]"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random 1-second bandwidth trace with occasional forced blackout
+/// windows — the regime `FifoLink::send` must survive (Obs. 2: unstable
+/// networks become the bottleneck). Length is kept under the link's
+/// 600-second outage scan so "some second has bandwidth" implies
+/// "every transfer is eventually delivered".
+fn gen_blackout_samples(r: &mut Rng) -> Vec<f64> {
+    let n = 20 + r.below(180);
+    let mut s: Vec<f64> = (0..n)
+        .map(|_| if r.chance(0.15) { 0.0 } else { r.range(0.5, 120.0) })
+        .collect();
+    if r.chance(0.7) {
+        let a = r.below(n);
+        let len = 1 + r.below(12);
+        for x in s[a..(a + len).min(n)].iter_mut() {
+            *x = 0.0;
+        }
+    }
+    s
+}
+
+#[test]
+fn prop_fifo_link_ordering_and_no_loss() {
+    forall(
+        910,
+        150,
+        |r| {
+            let samples = gen_blackout_samples(r);
+            let rtt = r.range(0.0, 40.0);
+            let n_sends = 1 + r.below(60);
+            let mut t = 0.0;
+            let sends: Vec<(f64, f64)> = (0..n_sends)
+                .map(|_| {
+                    t += r.exp(0.01); // mean 100 ms between sends
+                    (t, r.range(100.0, 500_000.0))
+                })
+                .collect();
+            (samples, rtt, sends)
+        },
+        |(samples, rtt, sends)| {
+            let any_bw = samples.iter().any(|&b| b > 0.0);
+            let mut link = FifoLink::new(BwTrace::from_samples(samples.clone()), *rtt);
+            let mut prev = f64::NEG_INFINITY;
+            for &(now, bytes) in sends {
+                let a = link.send(now, bytes);
+                if any_bw {
+                    check(a.is_finite(), format!("transfer lost at t={now}"))?;
+                    check(a >= now, format!("arrival {a} before send {now}"))?;
+                    check(
+                        a >= prev,
+                        format!("FIFO order violated: {a} < previous {prev}"),
+                    )?;
+                    prev = a;
+                } else {
+                    check(a.is_infinite(), "all-dark link delivered a transfer")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fifo_link_blackout_defers_to_reopen() {
+    forall(
+        911,
+        150,
+        |r| {
+            (
+                1 + r.below(5),            // good seconds before the blackout
+                1 + r.below(8),            // blackout length, seconds
+                r.range(1.0, 100.0),       // bandwidth while up
+                r.range(10.0, 100_000.0),  // payload bytes
+            )
+        },
+        |&(pre, dark, bw, bytes)| {
+            let mut samples = vec![bw; pre];
+            samples.extend(std::iter::repeat(0.0).take(dark));
+            samples.push(bw);
+            let mut link = FifoLink::new(BwTrace::from_samples(samples), 0.0);
+            // Send mid-blackout on an idle link: delivery must wait for the
+            // first second with bandwidth, not drop or deliver early.
+            let t0 = (pre as f64 + 0.5) * 1000.0;
+            let a = link.send(t0, bytes);
+            let reopen = (pre + dark) as f64 * 1000.0;
+            check(a.is_finite(), "transfer lost across blackout")?;
+            check(
+                a >= reopen,
+                format!("arrival {a} before the link reopened at {reopen}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_fifo_link_serialization_conserved() {
+    // Back-to-back sends on a constant link: total serialization time must
+    // equal sum(bytes)*8/bw exactly (FIFO backlog accounting loses
+    // nothing), and each arrival is spaced by its own serialization time.
+    forall(
+        912,
+        100,
+        |r| {
+            let bw = r.range(1.0, 500.0);
+            let n = 1 + r.below(30);
+            let sizes: Vec<f64> =
+                (0..n).map(|_| r.range(1_000.0, 200_000.0)).collect();
+            (bw, sizes)
+        },
+        |(bw, sizes)| {
+            let mut link = FifoLink::new(BwTrace::constant(*bw), 0.0);
+            let mut expect = 0.0;
+            for &bytes in sizes {
+                let a = link.send(0.0, bytes);
+                expect += bytes * 8.0 / (bw * 1000.0);
+                check(
+                    (a - expect).abs() <= 1e-6 * expect.max(1.0),
+                    format!("arrival {a} != cumulative serialization {expect}"),
                 )?;
             }
             Ok(())
