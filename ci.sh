@@ -20,6 +20,11 @@ cargo test -q
 # (also exercises the repro-string plumbing end to end).
 cargo run --release --quiet -- fuzz --scenarios 12 --seed0 "${FUZZ_SEED0:-12648430}"
 
+# Drift smoke: the same CLI path with drift-triggered incremental
+# replanning, so mid-run plan migrations run under the invariant engine
+# on every CI pass (conservation across each swap is a hard failure).
+cargo run --release --quiet -- fuzz --scenarios 8 --replan drift --seed0 "${FUZZ_SEED0:-12648430}"
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   cargo bench --bench hotpath
   if [ ! -f BENCH_hotpath.baseline.json ]; then

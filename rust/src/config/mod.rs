@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use crate::coordinator::SchedulerKind;
+use crate::coordinator::{ReplanMode, SchedulerKind};
 use crate::network::TraceKind;
 
 /// Raw parsed config: section -> key -> value.
@@ -83,6 +83,9 @@ pub struct ExperimentConfig {
     /// Use the 13-hour diurnal content profile (Fig. 11) instead of the
     /// 30-min segment profile.
     pub diurnal: bool,
+    /// Replanning policy: fixed 6-min rounds only, or rounds plus
+    /// drift-triggered incremental replans (`--replan drift`).
+    pub replan: ReplanMode,
 }
 
 impl Default for ExperimentConfig {
@@ -96,6 +99,7 @@ impl Default for ExperimentConfig {
             scheduler: SchedulerKind::OctopInf,
             seed: 42,
             diurnal: false,
+            replan: ReplanMode::Periodic,
         }
     }
 }
@@ -134,6 +138,10 @@ impl ExperimentConfig {
         }
         if let Some(v) = raw.get_bool("experiment", "diurnal") {
             cfg.diurnal = v;
+        }
+        if let Some(v) = raw.get("experiment", "replan") {
+            cfg.replan = ReplanMode::parse(v)
+                .ok_or_else(|| format!("unknown replan mode {v:?}"))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -205,6 +213,16 @@ mod tests {
     #[test]
     fn unknown_scheduler_is_error() {
         assert!(ExperimentConfig::from_text("[experiment]\nscheduler = foo\n")
+            .is_err());
+    }
+
+    #[test]
+    fn replan_mode_parses_and_defaults_to_periodic() {
+        assert_eq!(ExperimentConfig::default().replan, ReplanMode::Periodic);
+        let cfg =
+            ExperimentConfig::from_text("[experiment]\nreplan = drift\n").unwrap();
+        assert_eq!(cfg.replan, ReplanMode::Drift);
+        assert!(ExperimentConfig::from_text("[experiment]\nreplan = bogus\n")
             .is_err());
     }
 }

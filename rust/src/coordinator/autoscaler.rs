@@ -27,7 +27,10 @@ pub struct AutoScalerParams {
 
 impl Default for AutoScalerParams {
     fn default() -> Self {
-        AutoScalerParams { surge_frac: 0.85, dip_frac: 0.35, cooldown_ms: 10_000.0 }
+        // The cooldown must exceed the 10 s autoscale tick or it is
+        // vacuous (every decision would land exactly at the cooldown
+        // boundary): 25 s = hold for two ticks after acting, then react.
+        AutoScalerParams { surge_frac: 0.85, dip_frac: 0.35, cooldown_ms: 25_000.0 }
     }
 }
 
@@ -69,6 +72,14 @@ impl AutoScaler {
             self.last_action.insert(key, now_ms);
         }
         action
+    }
+
+    /// The caller could not apply the action `decide` just returned (e.g.
+    /// the only removable instance is busy or holds a reservation): give
+    /// the cooldown back so a phantom action cannot suppress a legitimate
+    /// scale-up for the next `cooldown_ms`.
+    pub fn cancel(&mut self, key: (usize, usize)) {
+        self.last_action.remove(&key);
     }
 
     /// Apply scaling over a whole plan in place; returns (#up, #down).
@@ -147,12 +158,27 @@ mod tests {
         let mut s = scaler();
         assert_eq!(s.decide((0, 0), 0.0, 95.0, 100.0, 1), ScaleAction::Up);
         assert_eq!(s.decide((0, 0), 1000.0, 95.0, 100.0, 2), ScaleAction::Hold);
-        assert_eq!(s.decide((0, 0), 20_000.0, 95.0, 100.0, 2), ScaleAction::Up);
+        // Two 10 s ticks later: still inside the 25 s cooldown.
+        assert_eq!(s.decide((0, 0), 20_000.0, 95.0, 100.0, 2), ScaleAction::Hold);
+        assert_eq!(s.decide((0, 0), 30_000.0, 95.0, 100.0, 2), ScaleAction::Up);
     }
 
     #[test]
     fn mid_band_holds() {
         let mut s = scaler();
         assert_eq!(s.decide((0, 0), 0.0, 60.0, 100.0, 2), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn cancel_returns_the_cooldown() {
+        let mut s = scaler();
+        // A Down the caller could not apply must not block the surge that
+        // follows it.
+        assert_eq!(s.decide((0, 0), 0.0, 10.0, 100.0, 2), ScaleAction::Down);
+        s.cancel((0, 0));
+        assert_eq!(s.decide((0, 0), 10_000.0, 95.0, 100.0, 2), ScaleAction::Up);
+        // Without the cancel the same sequence holds.
+        assert_eq!(s.decide((0, 1), 0.0, 10.0, 100.0, 2), ScaleAction::Down);
+        assert_eq!(s.decide((0, 1), 10_000.0, 95.0, 100.0, 2), ScaleAction::Hold);
     }
 }

@@ -9,9 +9,9 @@
 
 use super::autoscaler::{AutoScaler, AutoScalerParams};
 use super::baselines::bestfit::spread;
-use super::coral::coral;
-use super::cwd::{cwd, CwdParams};
-use super::types::{Plan, SchedEnv, Scheduler, SchedulerKind};
+use super::coral::{coral, coral_repair};
+use super::cwd::{cwd, cwd_subset, CwdParams};
+use super::types::{Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg};
 use crate::Ms;
 
 /// Scheduling period between full CWD+CORAL rounds (paper §IV-A5: 6 min).
@@ -87,6 +87,61 @@ impl Scheduler for Controller {
         }
         plan
     }
+
+    /// Incremental replan for drift triggers: re-run CWD only for the
+    /// drifted pipelines (with the kept pipelines' configs as committed
+    /// load) and repair the plan through CORAL so untouched bindings —
+    /// and with them the engine's portion clocks and queues — survive
+    /// verbatim. Falls back to a full round when the repair cannot do at
+    /// least as well as the old plan on reservations, or when the old
+    /// plan is missing assignments to keep.
+    fn replan(&mut self, env: &SchedEnv, old: &Plan, drifted: &[usize]) -> Plan {
+        if drifted.is_empty() {
+            return old.clone();
+        }
+        if !self.use_coral() {
+            return self.plan(env); // spatial-only ablation: rounds are cheap
+        }
+        let mut targets: Vec<usize> = drifted.to_vec();
+        targets.sort_unstable();
+        targets.dedup();
+        let mut kept: Vec<(usize, Vec<StageCfg>)> = Vec::new();
+        for p in 0..env.pipelines.len() {
+            if targets.contains(&p) {
+                continue;
+            }
+            let mut cfg = Vec::with_capacity(env.pipelines[p].len());
+            for m in 0..env.pipelines[p].len() {
+                match old.assignment(p, m) {
+                    Some(a) => cfg.push(a.cfg),
+                    None => return self.plan(env), // stale/partial old plan
+                }
+            }
+            kept.push((p, cfg));
+        }
+        let mut new_cfgs = cwd_subset(env, &self.cwd_params(), &targets, &kept);
+        // Capacity ratchet: between full rounds an incremental replan
+        // never shrinks a stage that keeps its device and batch. Drift
+        // checks sample the arrival window mid-burst-cycle; sizing down to
+        // a calm reading would trade away exactly the headroom the next
+        // burst needs (the autoscaler's dip path and the 6-min round do
+        // the deliberate right-sizing).
+        for (p, cfg) in new_cfgs.iter_mut() {
+            for (m, c) in cfg.iter_mut().enumerate() {
+                if let Some(a) = old.assignment(*p, m) {
+                    if a.cfg.device == c.device && a.cfg.batch == c.batch {
+                        c.instances = c.instances.max(a.cfg.instances);
+                    }
+                }
+            }
+        }
+        let repaired = coral_repair(env, old, &new_cfgs);
+        if repaired.unplaced > old.unplaced {
+            self.plan(env)
+        } else {
+            repaired
+        }
+    }
 }
 
 /// Factory covering OctopInf variants and all baselines.
@@ -149,6 +204,36 @@ mod tests {
         let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
         let plan = Controller::new(SchedulerKind::OctopInfServerOnly).plan(&env);
         assert!(plan.assignments.iter().all(|a| a.cfg.device == 0));
+    }
+
+    #[test]
+    fn incremental_replan_keeps_undrifted_pipelines() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let mut ctl = Controller::new(SchedulerKind::OctopInf);
+        let old = ctl.plan(&env);
+        // Pipeline 2's workload triples; replan just that pipeline.
+        let mut surged = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        for o in surged.obs[2].iter_mut() {
+            o.rate_qps *= 3.0;
+        }
+        let new = ctl.replan(&surged, &old, &[2]);
+        // Coverage is intact and the kept pipelines' configs are identical.
+        for p in [0usize, 1] {
+            for m in 0..pl[p].len() {
+                assert_eq!(
+                    old.assignment(p, m).unwrap().cfg,
+                    new.assignment(p, m).unwrap().cfg,
+                    "kept {p}/{m} changed"
+                );
+            }
+        }
+        for m in 0..pl[2].len() {
+            assert!(new.assignment(2, m).is_some(), "drifted 2/{m} missing");
+        }
+        // Empty drift set is the identity.
+        let same = ctl.replan(&env, &old, &[]);
+        assert_eq!(same.assignments.len(), old.assignments.len());
     }
 
     #[test]

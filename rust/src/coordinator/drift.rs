@@ -1,0 +1,400 @@
+//! Drift detection for incremental replanning.
+//!
+//! The paper's control plane replans on a fixed clock (§IV-A5: 6 min),
+//! which leaves a stale plan in place for up to a full period when the
+//! workload or the network moves — exactly the regimes the scenario
+//! fuzzer stresses (flash crowds, bandwidth blackouts, device churn).
+//! The adaptive edge-serving literature (arXiv 2304.09961, EdgeVision
+//! arXiv 2211.03102) reacts to such drift at the *scheduling* layer, not
+//! just the scaling layer; this module supplies the trigger.
+//!
+//! At plan-install time the engine captures a [`PlanEnvelope`]: the
+//! per-(pipeline, model) request rates the plan was sized for, the
+//! per-link bandwidth snapshot it assumed, and the transfer budget its
+//! cross-device hops require (ToEdge's traffic commitment). A
+//! [`DriftDetector`] then compares live observations against that
+//! envelope on a short cadence and names the pipelines whose assumptions
+//! broke; the controller replans *only those* (CWD subset + CORAL
+//! repair) while untouched pipelines keep their reservations and clocks.
+
+use super::types::{ModelObs, Plan};
+use crate::pipeline::PipelineDag;
+use crate::Ms;
+
+/// When the control plane replans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplanMode {
+    /// Full CWD+CORAL rounds on the fixed scheduling period only.
+    Periodic,
+    /// Periodic rounds *plus* drift-triggered incremental replans of the
+    /// drifted pipelines between rounds.
+    Drift,
+}
+
+impl Default for ReplanMode {
+    fn default() -> Self {
+        ReplanMode::Periodic
+    }
+}
+
+impl ReplanMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplanMode::Periodic => "periodic",
+            ReplanMode::Drift => "drift",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReplanMode> {
+        Some(match s {
+            "periodic" | "fixed" => ReplanMode::Periodic,
+            "drift" => ReplanMode::Drift,
+            _ => return None,
+        })
+    }
+}
+
+/// The envelope a plan is considered valid within (the drift knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct DriftParams {
+    /// Relative band around the planned rate: |observed - planned| beyond
+    /// `rate_band * planned` flags the stage as drifted.
+    pub rate_band: f64,
+    /// Rates below this floor (both planned and observed) are noise and
+    /// never trigger.
+    pub min_rate_qps: f64,
+    /// A watched link whose bandwidth moved by more than this factor in
+    /// either direction (vs the plan-time snapshot) is drifted. Must sit
+    /// well above the traces' natural per-second jitter.
+    pub bw_change_ratio: f64,
+    /// A link that drops below this fraction of the plan's transfer
+    /// budget (min of required and plan-time bandwidth) is drifted.
+    pub bw_budget_frac: f64,
+    /// Cadence of `Ev::DriftCheck` in the engine.
+    pub check_period_ms: Ms,
+    /// Minimum spacing between drift-triggered replans (hysteresis).
+    pub cooldown_ms: Ms,
+}
+
+impl Default for DriftParams {
+    fn default() -> Self {
+        DriftParams {
+            rate_band: 0.35,
+            min_rate_qps: 1.0,
+            bw_change_ratio: 4.0,
+            bw_budget_frac: 0.6,
+            check_period_ms: 5_000.0,
+            cooldown_ms: 15_000.0,
+        }
+    }
+}
+
+/// Why a pipeline was flagged (reporting / debug).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftKind {
+    /// A stage's observed rate left the planned-rate band.
+    Rate,
+    /// A watched link collapsed below the plan's transfer budget or moved
+    /// by more than the change ratio.
+    Bandwidth,
+}
+
+/// One drifted pipeline and the dominant reason.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftEvent {
+    pub pipeline: usize,
+    pub kind: DriftKind,
+}
+
+/// Workload/network assumptions captured when a plan is installed.
+#[derive(Clone, Debug, Default)]
+pub struct PlanEnvelope {
+    /// Rate (qps) each (pipeline, model) was planned for.
+    planned_rate: Vec<Vec<f64>>,
+    /// Bandwidth snapshot (Mbit/s per device) at plan time.
+    planned_bw: Vec<f64>,
+    /// Mbit/s the plan's cross-device hops commit per device (ToEdge's
+    /// transfer budget; 0 for links the plan never crosses).
+    required_bw: Vec<f64>,
+    /// Devices each pipeline's health depends on: its source device plus
+    /// every device its plan crosses a link of. Recovery of a dark source
+    /// link is drift too — the pipeline may deserve a better placement.
+    watched: Vec<Vec<usize>>,
+}
+
+impl PlanEnvelope {
+    /// Capture the envelope of `plan` given the observations and the
+    /// bandwidth snapshot the scheduler planned against.
+    pub fn capture(
+        plan: &Plan,
+        pipelines: &[PipelineDag],
+        obs: &[Vec<ModelObs>],
+        bw: &[f64],
+    ) -> PlanEnvelope {
+        let planned_rate: Vec<Vec<f64>> = obs
+            .iter()
+            .map(|row| row.iter().map(|o| o.rate_qps).collect())
+            .collect();
+        let mut required_bw = vec![0.0; bw.len()];
+        let mut watched: Vec<Vec<usize>> = Vec::with_capacity(pipelines.len());
+        for (p, dag) in pipelines.iter().enumerate() {
+            let device_of = |m: usize| {
+                plan.assignment(p, m).map(|a| a.cfg.device).unwrap_or(0)
+            };
+            let mut links = Vec::new();
+            if dag.source_device != 0 {
+                links.push(dag.source_device);
+            }
+            // Source -> detector hop.
+            let mut hops: Vec<(usize, usize, usize)> = Vec::new(); // (from, to, model)
+            hops.push((dag.source_device, device_of(0), 0));
+            for m in 0..dag.len() {
+                if let Some(u) = dag.upstream(m) {
+                    hops.push((device_of(u), device_of(m), m));
+                }
+            }
+            for (from, to, m) in hops {
+                if from == to {
+                    continue;
+                }
+                // Star topology: cross-device traffic rides the edge
+                // endpoint's uplink (see `estimator::transfer_latency`).
+                let edge = if from == 0 { to } else { from };
+                let rate = obs
+                    .get(p)
+                    .and_then(|row| row.get(m))
+                    .map(|o| o.rate_qps)
+                    .unwrap_or(0.0);
+                let bytes = dag.models[m].spec.input_bytes;
+                if let Some(slot) = required_bw.get_mut(edge) {
+                    *slot += rate * bytes * 8.0 / 1e6;
+                }
+                if !links.contains(&edge) {
+                    links.push(edge);
+                }
+            }
+            links.sort_unstable();
+            watched.push(links);
+        }
+        PlanEnvelope {
+            planned_rate,
+            planned_bw: bw.to_vec(),
+            required_bw,
+            watched,
+        }
+    }
+
+    /// Pipelines whose live observations left the envelope, sorted and
+    /// deduplicated (at most one event per pipeline; rate drift wins the
+    /// label when both fire).
+    pub fn drifted(
+        &self,
+        obs: &[Vec<ModelObs>],
+        bw: &[f64],
+        params: &DriftParams,
+    ) -> Vec<DriftEvent> {
+        let mut out: Vec<DriftEvent> = Vec::new();
+        for (p, planned_row) in self.planned_rate.iter().enumerate() {
+            let Some(obs_row) = obs.get(p) else { continue };
+            let rate_drift = planned_row.iter().zip(obs_row).any(|(&planned, o)| {
+                let seen = o.rate_qps;
+                planned.max(seen) >= params.min_rate_qps
+                    && (seen - planned).abs()
+                        > params.rate_band * planned.max(params.min_rate_qps)
+            });
+            let bw_drift = !rate_drift
+                && self.watched.get(p).is_some_and(|links| {
+                    links.iter().any(|&d| {
+                        let now = bw.get(d).copied().unwrap_or(0.0);
+                        let planned = self.planned_bw.get(d).copied().unwrap_or(0.0);
+                        // Budget breach: the link can no longer carry what
+                        // the plan routes over it (and could at plan time).
+                        let required =
+                            self.required_bw.get(d).copied().unwrap_or(0.0);
+                        let budget = required.min(planned).max(0.0);
+                        let breached =
+                            budget > 0.5 && now < params.bw_budget_frac * budget;
+                        // Regime change: collapse or recovery beyond the
+                        // change ratio (dark links use a 0.5 Mbit/s floor
+                        // so recovery from zero still registers).
+                        let base = planned.max(0.5);
+                        let moved = now > base * params.bw_change_ratio
+                            || now < base / params.bw_change_ratio;
+                        breached || moved
+                    })
+                });
+            if rate_drift {
+                out.push(DriftEvent { pipeline: p, kind: DriftKind::Rate });
+            } else if bw_drift {
+                out.push(DriftEvent { pipeline: p, kind: DriftKind::Bandwidth });
+            }
+        }
+        out
+    }
+}
+
+/// Stateful detector the engine drives on every `Ev::DriftCheck`.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    pub params: DriftParams,
+    envelope: Option<PlanEnvelope>,
+    last_trigger_ms: Ms,
+}
+
+impl DriftDetector {
+    pub fn new(params: DriftParams) -> DriftDetector {
+        DriftDetector { params, envelope: None, last_trigger_ms: f64::NEG_INFINITY }
+    }
+
+    /// Install the envelope of the plan that just went live.
+    pub fn arm(&mut self, envelope: PlanEnvelope) {
+        self.envelope = Some(envelope);
+    }
+
+    /// Check live observations; returns the sorted drifted pipeline ids
+    /// (empty within the cooldown or while no envelope is armed). A
+    /// non-empty return consumes the cooldown.
+    pub fn check(&mut self, now_ms: Ms, obs: &[Vec<ModelObs>], bw: &[f64]) -> Vec<usize> {
+        if now_ms - self.last_trigger_ms < self.params.cooldown_ms {
+            return Vec::new();
+        }
+        let Some(env) = &self.envelope else { return Vec::new() };
+        let events = env.drifted(obs, bw, &self.params);
+        if events.is_empty() {
+            return Vec::new();
+        }
+        self.last_trigger_ms = now_ms;
+        events.iter().map(|e| e.pipeline).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coordinator::controller::Controller;
+    use crate::coordinator::{Scheduler, SchedEnv, SchedulerKind};
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    fn fixture() -> (Cluster, ProfileStore, Vec<PipelineDag>) {
+        let pipelines = standard_pipelines(3)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        (Cluster::paper_testbed(), ProfileStore::analytic(), pipelines)
+    }
+
+    fn captured() -> (PlanEnvelope, Vec<Vec<ModelObs>>, Vec<f64>) {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let plan = Controller::new(SchedulerKind::OctopInf).plan(&env);
+        let e = PlanEnvelope::capture(&plan, &pl, &env.obs, &env.bw_mbps);
+        (e, env.obs, env.bw_mbps)
+    }
+
+    #[test]
+    fn replan_mode_parses() {
+        assert_eq!(ReplanMode::parse("drift"), Some(ReplanMode::Drift));
+        assert_eq!(ReplanMode::parse("periodic"), Some(ReplanMode::Periodic));
+        assert_eq!(ReplanMode::parse("bogus"), None);
+        assert_eq!(ReplanMode::Drift.label(), "drift");
+    }
+
+    #[test]
+    fn steady_state_does_not_drift() {
+        let (e, obs, bw) = captured();
+        assert!(e.drifted(&obs, &bw, &DriftParams::default()).is_empty());
+    }
+
+    #[test]
+    fn rate_surge_flags_the_surging_pipeline_only() {
+        let (e, mut obs, bw) = captured();
+        for o in obs[1].iter_mut() {
+            o.rate_qps *= 3.0; // flash crowd on pipeline 1
+        }
+        let events = e.drifted(&obs, &bw, &DriftParams::default());
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].pipeline, 1);
+        assert_eq!(events[0].kind, DriftKind::Rate);
+    }
+
+    #[test]
+    fn rate_collapse_also_drifts() {
+        let (e, mut obs, bw) = captured();
+        for o in obs[0].iter_mut() {
+            o.rate_qps *= 0.2;
+        }
+        let events = e.drifted(&obs, &bw, &DriftParams::default());
+        assert!(events.iter().any(|ev| ev.pipeline == 0));
+    }
+
+    #[test]
+    fn blackout_on_source_link_drifts_its_pipeline() {
+        let (e, obs, mut bw) = captured();
+        // Pipeline 0 sources on device 1.
+        bw[1] = 0.0;
+        let events = e.drifted(&obs, &bw, &DriftParams::default());
+        assert!(
+            events
+                .iter()
+                .any(|ev| ev.pipeline == 0 && ev.kind == DriftKind::Bandwidth),
+            "{events:?}"
+        );
+        // Other pipelines (devices 2, 3) stay calm.
+        assert!(events.iter().all(|ev| ev.pipeline == 0));
+    }
+
+    #[test]
+    fn link_recovery_from_dark_drifts() {
+        let (cl, pf, pl) = fixture();
+        // Plan while device 1 is dark; then the link comes alive.
+        let mut bw = vec![80.0; cl.devices.len()];
+        bw[1] = 0.0;
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, bw);
+        let plan = Controller::new(SchedulerKind::OctopInf).plan(&env);
+        let e = PlanEnvelope::capture(&plan, &pl, &env.obs, &env.bw_mbps);
+        let mut live = env.bw_mbps.clone();
+        live[1] = 25.0;
+        let events = e.drifted(&env.obs, &live, &DriftParams::default());
+        assert!(events.iter().any(|ev| ev.pipeline == 0), "{events:?}");
+    }
+
+    #[test]
+    fn ordinary_jitter_stays_inside_the_envelope() {
+        let (e, mut obs, mut bw) = captured();
+        for row in obs.iter_mut() {
+            for o in row.iter_mut() {
+                o.rate_qps *= 1.2; // within the ±35% band
+            }
+        }
+        for b in bw.iter_mut() {
+            *b *= 0.8; // well inside the 4x change ratio
+        }
+        assert!(e.drifted(&obs, &bw, &DriftParams::default()).is_empty());
+    }
+
+    #[test]
+    fn detector_cooldown_suppresses_retriggers() {
+        let (e, mut obs, bw) = captured();
+        for o in obs[0].iter_mut() {
+            o.rate_qps *= 5.0;
+        }
+        let mut d = DriftDetector::new(DriftParams::default());
+        d.arm(e.clone());
+        assert_eq!(d.check(5_000.0, &obs, &bw), vec![0]);
+        // Still drifted, but inside the cooldown window.
+        assert!(d.check(10_000.0, &obs, &bw).is_empty());
+        assert_eq!(d.check(25_000.0, &obs, &bw), vec![0]);
+    }
+
+    #[test]
+    fn unarmed_detector_never_fires() {
+        let (_, obs, bw) = captured();
+        let mut d = DriftDetector::new(DriftParams::default());
+        assert!(d.check(5_000.0, &obs, &bw).is_empty());
+    }
+}

@@ -9,12 +9,14 @@ pub mod baselines;
 pub mod controller;
 pub mod coral;
 pub mod cwd;
+pub mod drift;
 pub mod estimator;
 pub mod ilp;
 pub mod stream;
 pub mod types;
 
 pub use controller::Controller;
+pub use drift::{DriftDetector, DriftParams, PlanEnvelope, ReplanMode};
 pub use types::{
     Assignment, GpuBinding, GpuId, ModelObs, Plan, SchedEnv, Scheduler,
     SchedulerKind, StageCfg, TemporalSlot,

@@ -16,6 +16,10 @@ pub struct Portion {
     pub start_ms: Ms,
     pub end_ms: Ms,
     pub width: f64,
+    /// Intermediate memory the occupying instance needs (MB) — kept per
+    /// portion so stream peaks can be recomputed when portions are
+    /// released (drift repair).
+    pub inter_mb: f64,
     /// (pipeline, model, instance) owning the portion.
     pub owner: (usize, usize, u32),
 }
@@ -109,7 +113,7 @@ impl Stream {
 
     /// Insert a portion; panics if it overlaps an existing one (scheduler
     /// bug — CORAL must only place into free portions).
-    pub fn insert(&mut self, p: Portion, inter_mb: f64) {
+    pub fn insert(&mut self, p: Portion) {
         for q in &self.portions {
             assert!(
                 !p.overlaps(q),
@@ -121,8 +125,30 @@ impl Stream {
             );
         }
         self.max_width = self.max_width.max(p.width);
-        self.max_inter_mb = self.max_inter_mb.max(inter_mb);
+        self.max_inter_mb = self.max_inter_mb.max(p.inter_mb);
         self.portions.push(p);
+    }
+
+    /// Release every portion owned by `pipeline` back into free stream
+    /// time (drift repair: the drifted pipeline's reservations are
+    /// reclaimed before its new configuration is re-placed). Peaks are
+    /// recomputed exactly from the survivors, and an emptied stream
+    /// forgets its duty cycle so a different SLO class may claim it.
+    /// Returns the number of portions released.
+    pub fn release_pipeline(&mut self, pipeline: usize) -> usize {
+        let before = self.portions.len();
+        self.portions.retain(|p| p.owner.0 != pipeline);
+        let released = before - self.portions.len();
+        if released > 0 {
+            self.max_width =
+                self.portions.iter().map(|p| p.width).fold(0.0, f64::max);
+            self.max_inter_mb =
+                self.portions.iter().map(|p| p.inter_mb).fold(0.0, f64::max);
+            if self.portions.is_empty() {
+                self.duty_cycle_ms = 0.0;
+            }
+        }
+        released
     }
 
     /// Total occupied time within the duty cycle.
@@ -180,6 +206,31 @@ impl GpuStreams {
         self.weight_mb + weight_mb + new_inter <= self.mem_mb + 1e-9
             && new_util <= self.util_cap + 1e-9
     }
+
+    /// Release every reservation `pipeline` holds on this GPU: its
+    /// portions leave their streams (freeing that stream time and the
+    /// shared intermediate peaks) and `weight_of(model)` MB of weight
+    /// memory is returned per released portion. Returns the portion count.
+    pub fn release_pipeline(
+        &mut self,
+        pipeline: usize,
+        weight_of: &dyn Fn(usize) -> f64,
+    ) -> usize {
+        let mut released = 0;
+        for s in self.streams.iter_mut() {
+            let owners: Vec<usize> = s
+                .portions
+                .iter()
+                .filter(|p| p.owner.0 == pipeline)
+                .map(|p| p.owner.1)
+                .collect();
+            released += s.release_pipeline(pipeline);
+            for model in owners {
+                self.weight_mb = (self.weight_mb - weight_of(model)).max(0.0);
+            }
+        }
+        released
+    }
 }
 
 #[cfg(test)]
@@ -191,7 +242,17 @@ mod tests {
     }
 
     fn portion(s: f64, e: f64) -> Portion {
-        Portion { start_ms: s, end_ms: e, width: 0.3, owner: (0, 0, 0) }
+        Portion { start_ms: s, end_ms: e, width: 0.3, inter_mb: 0.0, owner: (0, 0, 0) }
+    }
+
+    fn owned(s: f64, e: f64, pipeline: usize, width: f64, inter: f64) -> Portion {
+        Portion {
+            start_ms: s,
+            end_ms: e,
+            width,
+            inter_mb: inter,
+            owner: (pipeline, 0, 0),
+        }
     }
 
     #[test]
@@ -208,8 +269,8 @@ mod tests {
     fn free_portions_between_occupied() {
         let mut s = Stream::new(gpu(), 0);
         s.duty_cycle_ms = 100.0;
-        s.insert(portion(10.0, 30.0), 5.0);
-        s.insert(portion(50.0, 60.0), 8.0);
+        s.insert(Portion { inter_mb: 5.0, ..portion(10.0, 30.0) });
+        s.insert(Portion { inter_mb: 8.0, ..portion(50.0, 60.0) });
         let free = s.free_portions(1000.0);
         assert_eq!(free.len(), 3);
         assert_eq!((free[0].start_ms, free[0].end_ms), (0.0, 10.0));
@@ -223,8 +284,8 @@ mod tests {
     fn overlapping_insert_panics() {
         let mut s = Stream::new(gpu(), 0);
         s.duty_cycle_ms = 100.0;
-        s.insert(portion(10.0, 30.0), 1.0);
-        s.insert(portion(20.0, 40.0), 1.0);
+        s.insert(portion(10.0, 30.0));
+        s.insert(portion(20.0, 40.0));
     }
 
     #[test]
@@ -255,7 +316,53 @@ mod tests {
     fn occupancy_tracks_portions() {
         let mut s = Stream::new(gpu(), 0);
         s.duty_cycle_ms = 100.0;
-        s.insert(portion(0.0, 25.0), 0.0);
+        s.insert(portion(0.0, 25.0));
         assert!((s.occupancy() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn release_frees_stream_time_and_recomputes_peaks() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        s.insert(owned(0.0, 20.0, 0, 0.5, 10.0));
+        s.insert(owned(30.0, 50.0, 1, 0.3, 4.0));
+        s.insert(owned(60.0, 80.0, 0, 0.4, 7.0));
+        assert_eq!(s.release_pipeline(0), 2);
+        // Survivor (pipeline 1) now defines both peaks.
+        assert_eq!(s.portions.len(), 1);
+        assert!((s.max_width - 0.3).abs() < 1e-9);
+        assert!((s.max_inter_mb - 4.0).abs() < 1e-9);
+        // The freed intervals are placeable again.
+        let free = s.free_portions(1000.0);
+        assert_eq!((free[0].start_ms, free[0].end_ms), (0.0, 30.0));
+        assert_eq!((free[1].start_ms, free[1].end_ms), (50.0, 100.0));
+    }
+
+    #[test]
+    fn emptied_stream_forgets_its_duty_cycle() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 150.0;
+        s.insert(owned(0.0, 10.0, 2, 0.2, 1.0));
+        assert_eq!(s.release_pipeline(2), 1);
+        assert_eq!(s.duty_cycle_ms, 0.0);
+        assert_eq!(s.max_width, 0.0);
+        assert_eq!(s.max_inter_mb, 0.0);
+    }
+
+    #[test]
+    fn gpu_release_returns_weight_memory() {
+        let mut g = GpuStreams::new(gpu(), 100.0, 1.0, 2);
+        g.streams[0].duty_cycle_ms = 100.0;
+        g.streams[1].duty_cycle_ms = 100.0;
+        g.weight_mb = 30.0;
+        g.streams[0].insert(owned(0.0, 10.0, 0, 0.2, 5.0));
+        g.streams[1].insert(owned(0.0, 10.0, 1, 0.2, 5.0));
+        let released = g.release_pipeline(0, &|_model| 10.0);
+        assert_eq!(released, 1);
+        assert!((g.weight_mb - 20.0).abs() < 1e-9);
+        assert!((g.inter_mb() - 5.0).abs() < 1e-9);
+        // Releasing a pipeline with no reservations is a no-op.
+        assert_eq!(g.release_pipeline(7, &|_| 10.0), 0);
+        assert!((g.weight_mb - 20.0).abs() < 1e-9);
     }
 }

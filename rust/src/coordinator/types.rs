@@ -36,6 +36,27 @@ pub struct GpuBinding {
     pub temporal: Option<TemporalSlot>,
 }
 
+impl GpuBinding {
+    /// Bit-exact equality (floats compared by bit pattern). Plans are
+    /// deterministic, so an unchanged assignment reproduces identical
+    /// bits — this is what the engine's plan-diff migration and the CORAL
+    /// repair tests mean by "unchanged".
+    pub fn bit_eq(&self, other: &GpuBinding) -> bool {
+        self.gpu == other.gpu
+            && self.width.to_bits() == other.width.to_bits()
+            && match (self.temporal, other.temporal) {
+                (None, None) => true,
+                (Some(x), Some(y)) => {
+                    x.stream == y.stream
+                        && x.start_ms.to_bits() == y.start_ms.to_bits()
+                        && x.duration_ms.to_bits() == y.duration_ms.to_bits()
+                        && x.duty_cycle_ms.to_bits() == y.duty_cycle_ms.to_bits()
+                }
+                _ => false,
+            }
+    }
+}
+
 /// Per-stage configuration chosen by workload distribution.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StageCfg {
@@ -179,6 +200,15 @@ impl<'a> SchedEnv<'a> {
 pub trait Scheduler {
     fn name(&self) -> &'static str;
     fn plan(&mut self, env: &SchedEnv) -> Plan;
+
+    /// Drift-triggered incremental replan: revise `old` for the `drifted`
+    /// pipelines only, leaving the rest in place. The default is a full
+    /// replan (baselines have no incremental path); OctopInf's
+    /// `Controller` overrides this with CWD-subset + CORAL repair.
+    fn replan(&mut self, env: &SchedEnv, old: &Plan, drifted: &[usize]) -> Plan {
+        let _ = (old, drifted);
+        self.plan(env)
+    }
 }
 
 /// Selector used by the CLI / bench harness.

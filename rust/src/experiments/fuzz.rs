@@ -13,7 +13,7 @@
 //! via [`super::runner::par_map`] (results merged in seed order;
 //! `jobs = 0` means one worker per hardware thread).
 
-use crate::coordinator::SchedulerKind;
+use crate::coordinator::{ReplanMode, SchedulerKind};
 use crate::sim::{run_checked, FuzzSpec, Scenario, ScenarioGen};
 
 use super::runner::par_map;
@@ -60,6 +60,19 @@ fn trace_fingerprint(sc: &Scenario) -> u64 {
 /// Run every conformance scheduler over `spec`'s scenario and collect
 /// violations plus differential mismatches.
 pub fn conformance_round(spec: &FuzzSpec) -> ConformanceOutcome {
+    conformance_round_mode(spec, ReplanMode::Periodic)
+}
+
+/// [`conformance_round`] under an explicit replan mode (the `--replan`
+/// axis): drift mode exercises mid-run incremental replans and plan
+/// migrations under the same invariant engine and differential checks.
+pub fn conformance_round_mode(
+    spec: &FuzzSpec,
+    mode: ReplanMode,
+) -> ConformanceOutcome {
+    let mut spec = spec.clone();
+    spec.cfg.replan = mode;
+    let spec = &spec;
     let mut outcome = ConformanceOutcome {
         spec: spec.clone(),
         violations: Vec::new(),
@@ -118,8 +131,18 @@ pub fn conformance_round(spec: &FuzzSpec) -> ConformanceOutcome {
 /// Sweep `n` fuzzed scenarios (seeds `seed0..seed0+n`) across `jobs`
 /// workers; outcomes return in seed order regardless of completion order.
 pub fn run_conformance(seed0: u64, n: usize, jobs: usize) -> Vec<ConformanceOutcome> {
+    run_conformance_mode(seed0, n, jobs, ReplanMode::Periodic)
+}
+
+/// [`run_conformance`] under an explicit replan mode.
+pub fn run_conformance_mode(
+    seed0: u64,
+    n: usize,
+    jobs: usize,
+    mode: ReplanMode,
+) -> Vec<ConformanceOutcome> {
     let specs: Vec<FuzzSpec> = ScenarioGen::new(seed0).take(n).collect();
-    par_map(specs.len(), jobs, |i| conformance_round(&specs[i]))
+    par_map(specs.len(), jobs, |i| conformance_round_mode(&specs[i], mode))
 }
 
 #[cfg(test)]

@@ -6,10 +6,15 @@
 //! so tables are byte-identical at any job count. Shared by
 //! `octopinf figure N [--jobs N]` and the bench harness.
 
+pub mod drift;
 pub mod fuzz;
 pub mod runner;
 
-pub use fuzz::{conformance_round, run_conformance, ConformanceOutcome};
+pub use drift::{drift_comparison, drift_table, FamilyComparison};
+pub use fuzz::{
+    conformance_round, conformance_round_mode, run_conformance,
+    run_conformance_mode, ConformanceOutcome,
+};
 pub use runner::{run_grid, run_one, RunSpec};
 
 use crate::config::ExperimentConfig;

@@ -21,14 +21,17 @@ use octopinf::sim::{run as sim_run, Scenario};
 use octopinf::util::cli::Args;
 use octopinf::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|serve> [options]
+const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|serve> [options]
   profile  [--reps 5] [--out artifacts/profiles.tsv]
   simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
-           [--seed 42] [--duration-min N]
+           [--seed 42] [--duration-min N] [--replan periodic|drift]
   figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
   fuzz     [--scenarios 50] [--seed0 3735928559] [--jobs N]
+           [--replan periodic|drift]
            [--repro fuzz:v1:seed=N]   (replay one scenario verbosely)
+  drift    [--per-family 4] [--seed0 3735928559] [--jobs N]
+           (fixed-period vs drift-triggered OctopInf per fuzz family)
   serve    [--duration-s 10] [--fps 30] [--slo-ms 200]";
 
 fn main() {
@@ -39,6 +42,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "figure" => cmd_figure(&args),
         "fuzz" => cmd_fuzz(&args),
+        "drift" => cmd_drift(&args),
         "serve" => cmd_serve(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -91,12 +95,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if let Some(d) = args.get("duration-min") {
         cfg.duration_ms = d.parse::<f64>()? * 60_000.0;
     }
+    cfg.replan = parse_replan(args)?;
     let kind = SchedulerKind::parse(args.get_or("scheduler", "octopinf"))
         .ok_or_else(|| anyhow!("unknown scheduler"))?;
+    let replan = cfg.replan;
     let sc = Scenario::build(cfg);
     let m = sim_run(&sc, kind);
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["scheduler".to_string(), kind.label().to_string()]);
+    t.row(vec!["replan".into(), replan.label().to_string()]);
     t.row(vec!["effective_thpt(obj/s)".into(), fnum(m.effective_throughput(), 2)]);
     t.row(vec!["total_thpt(obj/s)".into(), fnum(m.total_throughput(), 2)]);
     t.row(vec!["violation_rate".into(), fnum(m.violation_rate(), 3)]);
@@ -148,15 +155,21 @@ fn cmd_figure(args: &Args) -> Result<()> {
 /// through every scheduler under the invariant engine. Exits non-zero on
 /// any violation; each row carries its one-line repro string.
 fn cmd_fuzz(args: &Args) -> Result<()> {
-    use octopinf::experiments::fuzz::{conformance_round, run_conformance};
+    use octopinf::experiments::fuzz::{
+        conformance_round_mode, run_conformance_mode,
+    };
     use octopinf::sim::FuzzSpec;
 
+    let mode = parse_replan(args)?;
     if let Some(r) = args.get("repro") {
         let spec = FuzzSpec::from_repro(r).ok_or_else(|| {
-            anyhow!("bad repro string {r:?} (expected fuzz:v1:seed=N)")
+            anyhow!("bad repro string {r:?} (expected fuzz:v1:seed=N[:replan=drift])")
         })?;
-        println!("replaying {spec}\n");
-        let out = conformance_round(&spec);
+        // A mode embedded in the repro string wins over the --replan flag:
+        // the string must replay exactly the failing configuration.
+        let mode = if r.contains(":replan=") { spec.cfg.replan } else { mode };
+        println!("replaying {spec} [{}]\n", mode.label());
+        let out = conformance_round_mode(&spec, mode);
         if out.ok() {
             println!(
                 "OK: {} schedulers, {} completions, no violations",
@@ -169,7 +182,7 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
 
     let n = args.get_usize("scenarios", 50);
     let seed0 = args.get_u64("seed0", 0xDEAD_BEEF);
-    let outcomes = run_conformance(seed0, n, args.jobs());
+    let outcomes = run_conformance_mode(seed0, n, args.jobs(), mode);
     let mut t = Table::new(vec!["repro", "class", "completions", "result"]);
     let mut failures = Vec::new();
     for o in &outcomes {
@@ -202,6 +215,32 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
             "conformance failures (replay with `octopinf fuzz --repro <string>`):\n{}",
             failures.join("\n")
         ));
+    }
+    Ok(())
+}
+
+/// Shared `--replan` axis parser (default: the paper's periodic clock).
+fn parse_replan(args: &Args) -> Result<octopinf::coordinator::ReplanMode> {
+    let raw = args.get_or("replan", "periodic");
+    octopinf::coordinator::ReplanMode::parse(raw)
+        .ok_or_else(|| anyhow!("unknown replan mode {raw:?} (periodic|drift)"))
+}
+
+/// Fixed-period vs drift-triggered OctopInf across the fuzz families,
+/// same seeds, invariants armed on every run.
+fn cmd_drift(args: &Args) -> Result<()> {
+    let per_family = args.get_usize("per-family", 4);
+    let seed0 = args.get_u64("seed0", 0xDEAD_BEEF);
+    let cmps = experiments::drift_comparison(seed0, per_family, args.jobs());
+    println!("{}", experiments::drift_table(&cmps).to_markdown());
+    let violations: usize = cmps.iter().map(|c| c.violations).sum();
+    println!(
+        "\n{} families x {per_family} scenarios x 2 modes; {} invariant violations",
+        cmps.len(),
+        violations
+    );
+    if violations > 0 {
+        return Err(anyhow!("invariant violations during drift comparison"));
     }
     Ok(())
 }

@@ -45,6 +45,19 @@ impl<T> DynamicBatcher<T> {
         (!self.queue.is_empty()).then(|| self.take(self.queue.len()))
     }
 
+    /// Absolute time (same clock as `push`/`poll`) when the pending queue
+    /// next needs service: immediately for a full batch, at the head's
+    /// wait bound otherwise, `None` when empty. Lets the executor sleep
+    /// until min(deadline, next request) instead of busy-polling.
+    pub fn next_deadline_ms(&self) -> Option<f64> {
+        let &(t0, _) = self.queue.front()?;
+        if self.queue.len() >= self.batch {
+            Some(t0)
+        } else {
+            Some(t0 + self.max_wait_ms)
+        }
+    }
+
     fn take(&mut self, n: usize) -> Vec<T> {
         self.queue.drain(..n).map(|(_, x)| x).collect()
     }
@@ -113,5 +126,19 @@ mod tests {
     fn batch_of_one_is_immediate() {
         let mut b = DynamicBatcher::new(1, 0.0);
         assert_eq!(b.push(7, 0.0).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_the_head_wait_bound() {
+        let mut b = DynamicBatcher::new(4, 50.0);
+        assert_eq!(b.next_deadline_ms(), None);
+        b.push('a', 10.0);
+        b.push('b', 20.0);
+        // Head entered at 10, bound 50: due at 60 regardless of later pushes.
+        assert_eq!(b.next_deadline_ms(), Some(60.0));
+        // The deadline agrees with poll: not ready just before, ready at it.
+        assert!(b.poll(59.9).is_none());
+        assert!(b.poll(60.0).is_some());
+        assert_eq!(b.next_deadline_ms(), None);
     }
 }

@@ -39,6 +39,9 @@ pub struct Response {
     pub latency_ms: f64,
     pub batch_size: usize,
     pub on_time: bool,
+    /// `Some` when the request failed (unknown model, engine error): the
+    /// request is answered and dropped instead of killing the session.
+    pub error: Option<String>,
 }
 
 /// Per-model serving configuration (CWD's chosen batch + wait bound).
@@ -53,9 +56,14 @@ pub struct ModelServeCfg {
 pub struct ServeReport {
     pub served: u64,
     pub on_time: u64,
+    /// Requests answered with an error `Response` (unknown model / engine
+    /// failure) — isolated per batch, never fatal to the session.
+    pub failed: u64,
     pub per_model: HashMap<String, u64>,
     /// Streaming latency sketch: O(1) recording on the executor thread.
     pub latency: QuantileSketch,
+    /// Executed batches by size: one count per *batch*, not per request
+    /// (a batch of 8 adds 1 to bucket 8).
     pub batch_hist: HashMap<usize, u64>,
     pub wall_ms: f64,
 }
@@ -102,16 +110,32 @@ pub fn serve(
     let session_start = Instant::now();
     let mut open = true;
     while open || batchers.values().any(|b| !b.is_empty()) {
-        // Pull with a short timeout so flush timers fire.
-        match rx.recv_timeout(std::time::Duration::from_millis(1)) {
-            Ok(req) => {
-                let b = batchers
-                    .entry(req.model.clone())
-                    .or_insert_with(|| DynamicBatcher::new(1, 5.0));
-                b.push(req, now_ms(session_start));
+        if open {
+            // Sleep until the earliest pending flush deadline (or an idle
+            // cap) instead of busy-spinning a 1 ms poll; an incoming
+            // request or a closed channel wakes the receiver immediately.
+            let now = now_ms(session_start);
+            let wait_ms = batchers
+                .values()
+                .filter_map(|b| b.next_deadline_ms())
+                .min_by(f64::total_cmp)
+                .map(|d| (d - now).max(0.0))
+                .unwrap_or(IDLE_WAIT_MS)
+                .min(IDLE_WAIT_MS);
+            match rx.recv_timeout(std::time::Duration::from_secs_f64(wait_ms / 1e3)) {
+                Ok(req) => {
+                    let model = req.model.clone();
+                    let b = batchers
+                        .entry(model.clone())
+                        .or_insert_with(|| DynamicBatcher::new(1, 5.0));
+                    // A push that fills the batch releases it right here.
+                    if let Some(batch) = b.push(req, now_ms(session_start)) {
+                        run_batch(&mut rt, &model, cfgs, batch, &tx, &mut report);
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open = false,
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open = false,
         }
         // Flush ready batches.
         let now = now_ms(session_start);
@@ -119,17 +143,25 @@ pub fn serve(
             // When the stream closed, force-flush leftovers.
             let ready = if open { b.poll(now) } else { b.flush() };
             let Some(batch) = ready else { continue };
-            run_batch(&mut rt, model, cfgs, batch, &tx, &mut report)?;
+            run_batch(&mut rt, model, cfgs, batch, &tx, &mut report);
         }
     }
     report.wall_ms = session_start.elapsed().as_secs_f64() * 1e3;
     Ok(report)
 }
 
+/// Receive wait when no flush deadline is pending (bounds how long a
+/// disconnect or a misestimated deadline can stall the loop).
+const IDLE_WAIT_MS: f64 = 50.0;
+
 fn now_ms(start: Instant) -> f64 {
     start.elapsed().as_secs_f64() * 1e3
 }
 
+/// Execute one batch. Engine failures (a model absent from the manifest,
+/// a PJRT error) are isolated to this batch: its requests are answered
+/// with error `Response`s and the session keeps serving everyone else —
+/// they used to propagate out of `serve` and kill every client.
 fn run_batch(
     rt: &mut Runtime,
     model: &str,
@@ -137,22 +169,37 @@ fn run_batch(
     batch: Vec<Request>,
     tx: &Sender<Response>,
     report: &mut ServeReport,
-) -> Result<()> {
+) {
     let bz = cfgs.get(model).map(|c| c.batch).unwrap_or(1);
     let n = batch.len();
-    let per_in: usize = rt
-        .engine(model, bz)?
-        .meta
-        .input_shape
-        .iter()
-        .product();
+    let per_in: usize = match rt.engine(model, bz) {
+        Ok(e) => e.meta.input_shape.iter().product(),
+        Err(e) => return fail_batch(batch, &e.to_string(), tx, report),
+    };
     let mut input = Vec::with_capacity(n * per_in);
     for r in &batch {
         debug_assert_eq!(r.data.len(), per_in);
         input.extend_from_slice(&r.data);
     }
-    let out = rt.execute_padded(model, bz, n, &input)?;
+    let out = match rt.execute_padded(model, bz, n, &input) {
+        Ok(o) => o,
+        Err(e) => return fail_batch(batch, &e.to_string(), tx, report),
+    };
+    complete_batch(batch, &out, tx, report);
+}
+
+/// Account one *successful* executed batch and answer its requests.
+fn complete_batch(
+    batch: Vec<Request>,
+    out: &[f32],
+    tx: &Sender<Response>,
+    report: &mut ServeReport,
+) {
+    let n = batch.len();
     let per_out = out.len() / n.max(1);
+    // One histogram entry per executed batch — not per request (the old
+    // per-request increment made a batch of 8 add 8 to bucket 8).
+    *report.batch_hist.entry(n).or_default() += 1;
     for (i, req) in batch.into_iter().enumerate() {
         let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
         let on_time = latency_ms <= req.slo_ms;
@@ -162,7 +209,6 @@ fn run_batch(
         }
         *report.per_model.entry(req.model.clone()).or_default() += 1;
         report.latency.push(latency_ms);
-        *report.batch_hist.entry(n).or_default() += 1;
         // Client may be gone (fire-and-forget benchmarks) — ignore errors.
         let _ = tx.send(Response {
             id: req.id,
@@ -171,7 +217,101 @@ fn run_batch(
             latency_ms,
             batch_size: n,
             on_time,
+            error: None,
         });
     }
-    Ok(())
+}
+
+/// Answer every request of a failed batch with an error `Response`.
+fn fail_batch(
+    batch: Vec<Request>,
+    err: &str,
+    tx: &Sender<Response>,
+    report: &mut ServeReport,
+) {
+    let n = batch.len();
+    for req in batch {
+        let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+        report.failed += 1;
+        let _ = tx.send(Response {
+            id: req.id,
+            model: req.model,
+            output: Vec::new(),
+            latency_ms,
+            batch_size: n,
+            on_time: false,
+            error: Some(err.to_string()),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: &str, slo_ms: f64) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            data: vec![0.0; 4],
+            slo_ms,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batch_hist_counts_batches_not_requests() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        let batch: Vec<Request> =
+            (0..8).map(|i| req(i, "classifier", 1e9)).collect();
+        let out = vec![0.5f32; 8 * 2];
+        complete_batch(batch, &out, &tx, &mut report);
+        assert_eq!(report.batch_hist.get(&8), Some(&1), "one batch, bucket 8");
+        assert_eq!(report.served, 8);
+        assert_eq!(report.on_time, 8);
+        assert_eq!(rx.try_iter().count(), 8);
+
+        let batch: Vec<Request> = (0..3).map(|i| req(i, "embedder", 1e9)).collect();
+        complete_batch(batch, &vec![0.0f32; 3 * 2], &tx, &mut report);
+        assert_eq!(report.batch_hist.get(&3), Some(&1));
+        assert_eq!(report.batch_hist.values().sum::<u64>(), 2, "two batches total");
+        assert_eq!(report.latency.count(), report.served);
+    }
+
+    #[test]
+    fn failed_batch_answers_clients_without_killing_the_session() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        let batch: Vec<Request> = (0..4).map(|i| req(i, "no_such_model", 50.0)).collect();
+        fail_batch(batch, "engine missing", &tx, &mut report);
+        assert_eq!(report.failed, 4);
+        assert_eq!(report.served, 0, "failures are not completions");
+        assert_eq!(report.latency.count(), 0);
+        assert!(report.batch_hist.is_empty(), "failed batches never executed");
+        let responses: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(responses.len(), 4, "every client must still get an answer");
+        for r in &responses {
+            assert!(!r.on_time);
+            assert!(r.output.is_empty());
+            assert_eq!(r.error.as_deref(), Some("engine missing"));
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn run_batch_isolates_unknown_models() {
+        // The stub Runtime errors on every engine lookup — exactly the
+        // unknown-model shape. run_batch must degrade to fail_batch
+        // instead of propagating (the old `?` aborted the whole session).
+        let mut rt = Runtime { manifest: Default::default() };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        let cfgs = HashMap::new();
+        run_batch(&mut rt, "ghost", &cfgs, vec![req(1, "ghost", 10.0)], &tx, &mut report);
+        assert_eq!(report.failed, 1);
+        let r: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].error.is_some());
+    }
 }

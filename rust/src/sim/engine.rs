@@ -13,7 +13,9 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
+use crate::coordinator::autoscaler::{AutoScaler, AutoScalerParams, ScaleAction};
 use crate::coordinator::controller::{make_scheduler, SCHEDULING_PERIOD_MS};
+use crate::coordinator::drift::{DriftDetector, DriftParams, PlanEnvelope, ReplanMode};
 use crate::coordinator::{
     GpuId, ModelObs, Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg,
 };
@@ -80,6 +82,11 @@ struct Group {
     window: ArrivalWindow,
     /// Pending flush-timer deadline (dedup of Flush events).
     flush_at: Option<Ms>,
+    /// Deployment generation of this group. Pending `Portion` clocks carry
+    /// the epoch they were armed under; a plan swap that actually changes
+    /// the group bumps it, invalidating the stale clocks — while groups a
+    /// migration leaves untouched keep theirs running (plan-diff install).
+    epoch: u64,
 }
 
 impl Group {
@@ -107,6 +114,9 @@ enum Ev {
     ExecDone { pipeline: usize, model: usize, binding: usize, queries: Vec<Query> },
     Reschedule,
     AutoScale,
+    /// Drift-mode only: compare live observations against the active
+    /// plan's envelope and incrementally replan the drifted pipelines.
+    DriftCheck,
     Tick,
 }
 
@@ -208,6 +218,24 @@ impl GpuRuns {
     }
 }
 
+/// Does the live group already run this assignment? Exact match keeps the
+/// group untouched; so does the assignment plus trailing contended clones
+/// the autoscaler added since the plan was cut (the autoscaler only ever
+/// appends `temporal: None` tails) — a migration must not silently revert
+/// a mid-surge scale-up of a pipeline the scheduler didn't even touch.
+fn group_matches(g: &Group, a: &crate::coordinator::Assignment) -> bool {
+    let cfg_matches = g.cfg.device == a.cfg.device
+        && g.cfg.batch == a.cfg.batch
+        && g.cfg.instances >= a.cfg.instances;
+    cfg_matches
+        && g.bindings.len() >= a.bindings.len()
+        && g.bindings.len() == g.cfg.instances as usize
+        && g.bindings.iter().zip(&a.bindings).all(|(x, y)| x.bit_eq(y))
+        && g.bindings[a.bindings.len()..]
+            .iter()
+            .all(|b| b.temporal.is_none())
+}
+
 /// First occurrence of a duty-cycle slot at or after `now`.
 fn next_occurrence(now: Ms, start_ms: Ms, duty_ms: Ms) -> Ms {
     let duty = duty_ms.max(1.0);
@@ -247,8 +275,16 @@ pub struct Simulator {
     minute_workload: f64,
     minute_effective: f64,
     interference: InterferenceModel,
-    /// Plan generation; stale Portion events are ignored after reschedule.
-    epoch: u64,
+    /// Monotone source of per-group deployment epochs (see `Group::epoch`).
+    epoch_counter: u64,
+    /// Replan policy: fixed 6-min rounds, or rounds plus drift triggers.
+    mode: ReplanMode,
+    /// Drift detector holding the active plan's envelope (drift mode).
+    drift: DriftDetector,
+    /// Shared autoscaler implementation — the same `decide` (thresholds
+    /// AND cooldown hysteresis) the real `Controller.autoscaler` runs, so
+    /// the sim path cannot silently diverge from it again.
+    autoscaler: AutoScaler,
     /// Invariant engine (conformance runs only). `None` in normal runs, so
     /// every hook site is a single never-taken branch — see
     /// [`crate::sim::invariants`].
@@ -308,7 +344,10 @@ impl Simulator {
             minute_workload: 0.0,
             minute_effective: 0.0,
             interference: InterferenceModel::default(),
-            epoch: 0,
+            epoch_counter: 0,
+            mode: scenario.cfg.replan,
+            drift: DriftDetector::new(DriftParams::default()),
+            autoscaler: AutoScaler::new(AutoScalerParams::default()),
             checker: None,
             sc,
         }
@@ -393,16 +432,54 @@ impl Simulator {
             alpha: 1.2,
         };
         let plan = self.sched.plan(&env);
+        let envelope = (self.mode == ReplanMode::Drift).then(|| {
+            PlanEnvelope::capture(&plan, env.pipelines, &env.obs, &env.bw_mbps)
+        });
         self.install_plan(plan);
+        if let Some(e) = envelope {
+            self.drift.arm(e);
+        }
     }
 
+    /// Drift-mode check: if live rates or link bandwidth left the active
+    /// plan's envelope, incrementally replan just the drifted pipelines.
+    fn drift_check(&mut self) {
+        let (obs, bw) = self.build_env();
+        let drifted = self.drift.check(self.now, &obs, &bw);
+        if drifted.is_empty() {
+            return;
+        }
+        let env = SchedEnv {
+            cluster: &self.sc.cluster,
+            profiles: &self.sc.profiles,
+            pipelines: &self.sc.pipelines,
+            obs,
+            bw_mbps: bw,
+            alpha: 1.2,
+        };
+        let plan = self.sched.replan(&env, &self.plan, &drifted);
+        let envelope =
+            PlanEnvelope::capture(&plan, env.pipelines, &env.obs, &env.bw_mbps);
+        self.install_plan(plan);
+        self.drift.arm(envelope);
+    }
+
+    /// Install a plan by diffing it against the live deployment: groups
+    /// whose configuration and bindings are unchanged keep everything —
+    /// queues, arrival windows, busy flags, and pending `Portion` clocks —
+    /// while changed groups are re-deployed under a fresh epoch. Queues
+    /// and windows always survive (in-flight work continues across a
+    /// swap); the invariant hook asserts the migration neither lost nor
+    /// double-counted a single in-flight query.
     fn install_plan(&mut self, plan: Plan) {
+        let migrating = !self.plan.assignments.is_empty();
+        let census_before = (self.checker.is_some() && migrating)
+            .then(|| self.in_flight_census());
         if let Some(c) = self.checker.as_deref_mut() {
             c.on_plan(&plan, &self.sc.cluster, &self.sc.pipelines);
         }
         let mem = plan.total_memory_mb(&self.sc.pipelines);
         self.metrics.peak_memory_mb = self.metrics.peak_memory_mb.max(mem);
-        self.epoch += 1;
         if self.groups.is_empty() {
             self.groups = self
                 .sc
@@ -420,35 +497,50 @@ impl Simulator {
                             queue: VecDeque::new(),
                             window: ArrivalWindow::new(60_000.0),
                             flush_at: None,
+                            epoch: 0,
                         })
                         .collect()
                 })
                 .collect();
         }
+        let mut ticks = Vec::new();
         for a in &plan.assignments {
+            if group_matches(&self.groups[a.pipeline][a.model], a) {
+                continue; // live migration: nothing to redeploy
+            }
+            self.epoch_counter += 1;
+            let epoch = self.epoch_counter;
             let entry = &mut self.groups[a.pipeline][a.model];
             entry.cfg = a.cfg;
             entry.bindings = a.bindings.clone();
-            entry.busy = vec![false; a.bindings.len()];
             // Queue and window survive rescheduling (containers are
-            // re-deployed, in-flight work continues).
-        }
-        self.plan = plan;
-        // Seed portion clocks for every CORAL-reserved instance.
-        let mut ticks = Vec::new();
-        for (p, row) in self.groups.iter().enumerate() {
-            for (m, g) in row.iter().enumerate() {
-            for (bi, b) in g.bindings.iter().enumerate() {
+            // re-deployed, in-flight work continues) — and so do busy
+            // flags, index-carried: a binding mid-execution keeps its slot
+            // occupied until its ExecDone lands, otherwise every migration
+            // would let one instance run overlapping batches and model
+            // phantom capacity exactly while drift replans fire.
+            let mut busy = std::mem::take(&mut entry.busy);
+            busy.resize(a.bindings.len(), false);
+            entry.busy = busy;
+            entry.epoch = epoch;
+            for (bi, b) in entry.bindings.iter().enumerate() {
                 if let Some(slot) = b.temporal {
-                    let t = next_occurrence(self.now, slot.start_ms, slot.duty_cycle_ms);
-                    ticks.push((t, p, m, bi));
+                    let t =
+                        next_occurrence(self.now, slot.start_ms, slot.duty_cycle_ms);
+                    ticks.push((t, a.pipeline, a.model, bi, epoch));
                 }
             }
-            }
         }
-        let epoch = self.epoch;
-        for (t, p, m, bi) in ticks {
+        self.plan = plan;
+        // Seed portion clocks for the re-deployed reserved instances only.
+        for (t, p, m, bi, epoch) in ticks {
             self.push(t, Ev::Portion { pipeline: p, model: m, binding: bi, epoch });
+        }
+        if let Some(before) = census_before {
+            let after = self.in_flight_census();
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_plan_swap(before, after);
+            }
         }
     }
 
@@ -458,9 +550,9 @@ impl Simulator {
         let g = &mut self.groups[pipeline][model];
         let Some(b) = g.bindings.get(binding).copied() else { return };
         let Some(slot) = b.temporal else { return };
-        // Re-arm the clock first.
+        // Re-arm the clock first (under the group's current epoch).
         let next = now + slot.duty_cycle_ms.max(1.0);
-        let epoch = self.epoch;
+        let epoch = g.epoch;
         self.push(next, Ev::Portion { pipeline, model, binding, epoch });
 
         let g = &mut self.groups[pipeline][model];
@@ -522,17 +614,17 @@ impl Simulator {
                 let g = &self.groups[key.0][key.1];
                 (g.window.rate_qps(), g.capacity_qps(&self.sc), g.cfg.instances)
             };
-            use crate::coordinator::autoscaler::ScaleAction;
-            // Reuse the Controller's autoscaler thresholds inline.
-            let frac = rate / cap.max(1e-9);
-            let action = if frac > 0.85 {
-                ScaleAction::Up
-            } else if frac < 0.35 && instances > 1 {
-                ScaleAction::Down
-            } else {
-                ScaleAction::Hold
-            };
+            // One hysteresis implementation for both worlds: this is the
+            // same `AutoScaler::decide` the real `Controller.autoscaler`
+            // runs — thresholds AND the cooldown (the inline reimplementation
+            // this replaced silently dropped the cooldown, letting the sim
+            // autoscaler flap on every 10 s tick).
+            let action = self.autoscaler.decide(key, self.now, rate, cap, instances);
             let g = &mut self.groups[key.0][key.1];
+            // Track whether the decision was actually applied: a rejected
+            // action must hand its cooldown back (`AutoScaler::cancel`) or
+            // a phantom Down would suppress the next legitimate scale-up.
+            let mut applied = true;
             match action {
                 ScaleAction::Up => {
                     if let Some(last) = g.bindings.last().copied() {
@@ -543,6 +635,8 @@ impl Simulator {
                             ..last
                         });
                         g.busy.push(false);
+                    } else {
+                        applied = false;
                     }
                 }
                 ScaleAction::Down => {
@@ -562,9 +656,14 @@ impl Simulator {
                         g.cfg.instances -= 1;
                         g.bindings.pop();
                         g.busy.pop();
+                    } else {
+                        applied = false;
                     }
                 }
                 ScaleAction::Hold => {}
+            }
+            if !applied {
+                self.autoscaler.cancel(key);
             }
         }
     }
@@ -898,6 +997,9 @@ impl Simulator {
         }
         self.push(SCHEDULING_PERIOD_MS, Ev::Reschedule);
         self.push(AUTOSCALE_PERIOD_MS, Ev::AutoScale);
+        if self.mode == ReplanMode::Drift {
+            self.push(self.drift.params.check_period_ms, Ev::DriftCheck);
+        }
         self.push(TICK_MS, Ev::Tick);
 
         let horizon = self.sc.cfg.duration_ms;
@@ -923,7 +1025,7 @@ impl Simulator {
                     self.try_dispatch(pipeline, model);
                 }
                 Ev::Portion { pipeline, model, binding, epoch } => {
-                    if epoch == self.epoch {
+                    if epoch == self.groups[pipeline][model].epoch {
                         self.portion_tick(pipeline, model, binding);
                     }
                 }
@@ -937,6 +1039,11 @@ impl Simulator {
                 Ev::AutoScale => {
                     self.autoscale();
                     self.push(self.now + AUTOSCALE_PERIOD_MS, Ev::AutoScale);
+                }
+                Ev::DriftCheck => {
+                    self.drift_check();
+                    let period = self.drift.params.check_period_ms;
+                    self.push(self.now + period, Ev::DriftCheck);
                 }
                 Ev::Tick => {
                     self.metrics.timeline.push((
@@ -1052,5 +1159,160 @@ mod tests {
         let m = crate::sim::run(&sc, SchedulerKind::OctopInf);
         let p99 = m.latency.p99();
         assert!(p99 > 0.0 && p99 < 5_000.0, "p99 {p99}");
+    }
+
+    /// Flood group (0, 0)'s arrival window so its observed rate dwarfs any
+    /// plausible capacity (forces a surge verdict regardless of the plan).
+    fn saturate(sim: &mut Simulator, now: Ms) {
+        for i in 0..20_000 {
+            sim.groups[0][0].window.record(now - 2000.0 + i as f64 * 0.1);
+        }
+    }
+
+    #[test]
+    fn sim_autoscaler_shares_controller_cooldown() {
+        // Regression: the sim used to reimplement the scale thresholds
+        // inline and silently drop `AutoScaler`'s cooldown, flapping on
+        // every 10 s tick. Both paths now share `AutoScaler::decide`.
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        sim.reschedule();
+        sim.now = 60_000.0;
+        saturate(&mut sim, sim.now);
+        let base = sim.groups[0][0].cfg.instances;
+        sim.autoscale();
+        assert_eq!(
+            sim.groups[0][0].cfg.instances,
+            base + 1,
+            "saturated group must scale up"
+        );
+        // Next two ticks fall inside the 25 s cooldown: hold.
+        for _ in 0..2 {
+            sim.now += AUTOSCALE_PERIOD_MS;
+            saturate(&mut sim, sim.now);
+            sim.autoscale();
+            assert_eq!(
+                sim.groups[0][0].cfg.instances,
+                base + 1,
+                "cooldown must suppress back-to-back scaling"
+            );
+        }
+        // Past the cooldown the (still saturated) group scales again.
+        sim.now += AUTOSCALE_PERIOD_MS;
+        saturate(&mut sim, sim.now);
+        sim.autoscale();
+        assert_eq!(sim.groups[0][0].cfg.instances, base + 2);
+    }
+
+    #[test]
+    fn plan_diff_migration_keeps_unchanged_groups_live() {
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        sim.reschedule();
+        let epoch0 = sim.groups[0][0].epoch;
+        sim.groups[0][0].queue.push_back(Query {
+            created_ms: 0.0,
+            deadline_ms: 1e9,
+            objects: 1,
+        });
+        // Reinstalling the identical plan is a pure no-op migration: no
+        // epoch bumps (portion clocks keep ticking), queues intact.
+        let plan = sim.plan.clone();
+        sim.install_plan(plan);
+        assert_eq!(sim.groups[0][0].epoch, epoch0, "unchanged group redeployed");
+        assert_eq!(sim.groups[0][0].queue.len(), 1, "queue lost in migration");
+
+        // Changing one group's config re-deploys exactly that group.
+        let mut plan2 = sim.plan.clone();
+        let idx = plan2
+            .assignments
+            .iter()
+            .position(|a| a.pipeline == 0 && a.model == 0)
+            .unwrap();
+        plan2.assignments[idx].cfg.batch =
+            if plan2.assignments[idx].cfg.batch == 1 { 2 } else { 1 };
+        let other = plan2
+            .assignments
+            .iter()
+            .position(|a| a.pipeline == 1 && a.model == 0)
+            .unwrap();
+        let other = (plan2.assignments[other].pipeline, plan2.assignments[other].model);
+        let other_epoch = sim.groups[other.0][other.1].epoch;
+        sim.install_plan(plan2);
+        assert_ne!(sim.groups[0][0].epoch, epoch0, "changed group must redeploy");
+        assert_eq!(
+            sim.groups[other.0][other.1].epoch,
+            other_epoch,
+            "untouched group must not redeploy"
+        );
+        assert_eq!(sim.groups[0][0].queue.len(), 1, "queue lost in redeploy");
+    }
+
+    #[test]
+    fn redeploy_carries_in_flight_busy_flags() {
+        // A binding mid-execution keeps its slot across a redeploy: the
+        // pending ExecDone clears it later. Resetting it would let the
+        // same instance run overlapping batches right after a migration.
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        sim.reschedule();
+        assert!(!sim.groups[0][0].busy.is_empty());
+        sim.groups[0][0].busy[0] = true; // simulate an in-flight batch
+        let mut plan2 = sim.plan.clone();
+        let idx = plan2
+            .assignments
+            .iter()
+            .position(|a| a.pipeline == 0 && a.model == 0)
+            .unwrap();
+        plan2.assignments[idx].cfg.batch =
+            if plan2.assignments[idx].cfg.batch == 1 { 2 } else { 1 };
+        sim.install_plan(plan2);
+        assert!(
+            sim.groups[0][0].busy[0],
+            "redeploy must keep the executing binding occupied"
+        );
+        assert_eq!(
+            sim.groups[0][0].busy.len(),
+            sim.groups[0][0].bindings.len()
+        );
+    }
+
+    #[test]
+    fn migration_preserves_live_autoscaler_clones() {
+        // The autoscaler appends contended clones to live groups without
+        // touching self.plan; a replan that leaves the pipeline's
+        // assignment unchanged must not revert that surge capacity.
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        sim.reschedule();
+        sim.now = 60_000.0;
+        saturate(&mut sim, sim.now);
+        let base = sim.groups[0][0].cfg.instances;
+        sim.autoscale();
+        assert_eq!(sim.groups[0][0].cfg.instances, base + 1);
+        let epoch = sim.groups[0][0].epoch;
+        let plan = sim.plan.clone();
+        sim.install_plan(plan);
+        assert_eq!(
+            sim.groups[0][0].cfg.instances,
+            base + 1,
+            "migration reverted the autoscaled clone"
+        );
+        assert_eq!(sim.groups[0][0].epoch, epoch, "group was redeployed");
+    }
+
+    #[test]
+    fn drift_mode_produces_work_and_is_deterministic() {
+        let mut cfg = smoke_cfg();
+        cfg.replan = ReplanMode::Drift;
+        let sc1 = Scenario::build(cfg.clone());
+        let sc2 = Scenario::build(cfg);
+        let a = crate::sim::run(&sc1, SchedulerKind::OctopInf);
+        let b = crate::sim::run(&sc2, SchedulerKind::OctopInf);
+        assert!(a.on_time > 0, "drift mode completed nothing");
+        assert_eq!(a.on_time, b.on_time);
+        assert_eq!(a.late, b.late);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.timeline, b.timeline);
     }
 }

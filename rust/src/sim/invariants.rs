@@ -62,6 +62,7 @@ pub struct InvariantChecker {
     completed_objects: u64,
     in_flight: u64,
     plans: u64,
+    migrations: u64,
     suppressed: u64,
     violations: Vec<String>,
 }
@@ -158,6 +159,26 @@ impl InvariantChecker {
         } else if on_time != (latency <= slo) {
             self.violation(format!(
                 "SLO bookkeeping: latency {latency} vs slo {slo} marked on_time={on_time}"
+            ));
+        }
+    }
+
+    /// A plan swap migrated the live deployment: the engine's in-flight
+    /// census (queued + executing + in transit) taken immediately before
+    /// and after the install must balance. Today's install path preserves
+    /// queues and the event heap by construction, so this is a regression
+    /// tripwire — any future migration step that flushes, drops, or
+    /// re-admits queued work trips it at the exact swap instead of as an
+    /// unattributable end-of-run conservation failure. (Double-dispatch
+    /// protection is structural: redeploys carry busy flags so in-flight
+    /// batches keep their instance slots.)
+    #[inline]
+    pub fn on_plan_swap(&mut self, in_flight_before: u64, in_flight_after: u64) {
+        self.migrations += 1;
+        if in_flight_before != in_flight_after {
+            self.violation(format!(
+                "plan migration broke conservation: {in_flight_before} queries \
+                 in flight before the swap, {in_flight_after} after"
             ));
         }
     }
@@ -335,6 +356,7 @@ impl InvariantChecker {
             completed_objects: self.completed_objects,
             in_flight: self.in_flight,
             plans: self.plans,
+            migrations: self.migrations,
             suppressed: self.suppressed,
             violations: self.violations,
         }
@@ -360,6 +382,9 @@ pub struct InvariantReport {
     pub completed_objects: u64,
     pub in_flight: u64,
     pub plans: u64,
+    /// Plan swaps that migrated a live deployment (drift replans and
+    /// mid-run periodic rounds; the initial install is not a migration).
+    pub migrations: u64,
     /// Violations beyond the reporting cap.
     pub suppressed: u64,
     pub violations: Vec<String>,
@@ -464,6 +489,26 @@ mod tests {
         c.on_sink(300.0, 1, true, 200.0); // marked on-time but late
         c.on_sink(f64::INFINITY, 1, false, 200.0);
         assert_eq!(c.into_report().violations.len(), 2);
+    }
+
+    #[test]
+    fn balanced_plan_swap_is_clean_but_counted() {
+        let mut c = InvariantChecker::new();
+        c.on_plan_swap(17, 17);
+        c.on_plan_swap(0, 0);
+        let r = c.into_report();
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.migrations, 2);
+    }
+
+    #[test]
+    fn lossy_plan_swap_is_flagged() {
+        let mut c = InvariantChecker::new();
+        c.on_plan_swap(17, 12); // 5 queries vanished in the migration
+        c.on_plan_swap(3, 4); // one double-counted
+        let r = c.into_report();
+        assert_eq!(r.violations.len(), 2);
+        assert!(r.violations[0].contains("migration"), "{}", r.violations[0]);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::cluster::Cluster;
 use crate::config::ExperimentConfig;
+use crate::coordinator::ReplanMode;
 use crate::network::{BwTrace, TraceKind};
 use crate::pipeline::PipelineDag;
 use crate::profiles::ProfileStore;
@@ -197,14 +198,27 @@ impl FuzzSpec {
 
     /// One-line repro string; feed back through [`FuzzSpec::from_repro`]
     /// (or `octopinf fuzz --repro <string>`) to replay deterministically.
+    /// A non-default replan mode is part of the repro (a drift-mode
+    /// failure must not silently replay as periodic).
     pub fn repro(&self) -> String {
-        format!("fuzz:v1:seed={}", self.seed)
+        match self.cfg.replan {
+            ReplanMode::Periodic => format!("fuzz:v1:seed={}", self.seed),
+            mode => format!("fuzz:v1:seed={}:replan={}", self.seed, mode.label()),
+        }
     }
 
     /// Parse a repro string back into the identical spec.
     pub fn from_repro(s: &str) -> Option<FuzzSpec> {
         let rest = s.trim().strip_prefix("fuzz:v1:seed=")?;
-        rest.parse::<u64>().ok().map(FuzzSpec::sample)
+        let (seed, mode) = match rest.split_once(':') {
+            None => (rest, ReplanMode::Periodic),
+            Some((seed, modifier)) => {
+                (seed, ReplanMode::parse(modifier.strip_prefix("replan=")?)?)
+            }
+        };
+        let mut spec = FuzzSpec::sample(seed.parse::<u64>().ok()?);
+        spec.cfg.replan = mode;
+        Some(spec)
     }
 
     /// Instantiate the scenario: the standard deployment for `cfg`, then
@@ -477,6 +491,21 @@ mod tests {
         }
         assert!(FuzzSpec::from_repro("fuzz:v2:seed=1").is_none());
         assert!(FuzzSpec::from_repro("garbage").is_none());
+    }
+
+    #[test]
+    fn repro_string_carries_the_replan_mode() {
+        let mut spec = FuzzSpec::sample(9);
+        assert_eq!(spec.repro(), "fuzz:v1:seed=9");
+        spec.cfg.replan = ReplanMode::Drift;
+        assert_eq!(spec.repro(), "fuzz:v1:seed=9:replan=drift");
+        let back = FuzzSpec::from_repro(&spec.repro()).unwrap();
+        assert_eq!(back.seed, 9);
+        assert_eq!(back.cfg.replan, ReplanMode::Drift);
+        let bare = FuzzSpec::from_repro("fuzz:v1:seed=9").unwrap();
+        assert_eq!(bare.cfg.replan, ReplanMode::Periodic);
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=9:replan=bogus").is_none());
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=9:bogus=drift").is_none());
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Drift-triggered incremental replanning: acceptance tests.
+//!
+//! The control plane used to replan only on the fixed 6-minute clock, so
+//! every reactive fuzz family (flash crowds, blackouts, churn) ran its
+//! whole horizon on the stale initial plan with only the inline
+//! autoscaler reacting. These tests pin the PR's claims: drift mode beats
+//! fixed-period OctopInf on SLO attainment in the reactive families (same
+//! seeds), and every mid-run plan migration conserves in-flight queries
+//! under the invariant engine.
+
+use octopinf::coordinator::{ReplanMode, SchedulerKind};
+use octopinf::experiments::drift::drift_comparison;
+use octopinf::sim::{run_checked, FuzzClass, ScenarioGen};
+
+/// Root seed for the comparison sweeps (distinct from the conformance
+/// corpus so the two suites don't share scenarios).
+const DRIFT_SEED0: u64 = 0x0D21_F7ED;
+
+#[test]
+fn drift_beats_fixed_period_on_reactive_families() {
+    // Same fuzzed seeds, both modes, invariants armed in every run. The
+    // acceptance bar: flash crowds and blackouts — the families whose
+    // whole point is mid-run change — must do better with drift-triggered
+    // replanning, and nothing may violate an invariant anywhere.
+    let cmps = drift_comparison(DRIFT_SEED0, 6, 0);
+    for c in &cmps {
+        assert_eq!(
+            c.violations,
+            0,
+            "{}: invariant violations during the comparison",
+            c.class.label()
+        );
+    }
+    for class in [FuzzClass::FlashCrowd, FuzzClass::Blackout] {
+        let c = cmps.iter().find(|c| c.class == class).unwrap();
+        assert!(c.scenarios > 0, "{}: no scenarios sampled", class.label());
+        assert!(
+            c.drift.attainment() > c.periodic.attainment(),
+            "{}: drift {:.4} must beat periodic {:.4} (on_time {} vs {})",
+            class.label(),
+            c.drift.attainment(),
+            c.periodic.attainment(),
+            c.drift.on_time,
+            c.periodic.on_time,
+        );
+        assert!(
+            c.drift.plans > c.periodic.plans,
+            "{}: drift mode installed no extra plans ({} vs {})",
+            class.label(),
+            c.drift.plans,
+            c.periodic.plans,
+        );
+    }
+}
+
+#[test]
+fn flash_crowd_plan_swaps_conserve_in_flight_queries() {
+    // A flash-crowd scenario must straddle at least one drift-triggered
+    // plan swap, and the checker's before/after census around every swap
+    // must balance (no query lost or double-counted in migration).
+    let mut straddled = false;
+    let mut tried = 0;
+    for spec in ScenarioGen::new(DRIFT_SEED0 ^ 0xF1A5).take(400) {
+        if spec.class != FuzzClass::FlashCrowd {
+            continue;
+        }
+        let mut spec = spec;
+        spec.cfg.replan = ReplanMode::Drift;
+        let (_m, r) = run_checked(&spec.build(), SchedulerKind::OctopInf);
+        assert!(
+            r.ok(),
+            "{}: invariant violations across plan swaps:\n{}",
+            spec.repro(),
+            r.violations.join("\n")
+        );
+        if r.migrations >= 1 {
+            straddled = true;
+        }
+        tried += 1;
+        if tried >= 5 {
+            break;
+        }
+    }
+    assert!(tried > 0, "no flash-crowd specs sampled");
+    assert!(
+        straddled,
+        "no flash-crowd scenario triggered a mid-run plan migration"
+    );
+}
+
+#[test]
+fn drift_mode_holds_invariants_across_all_schedulers() {
+    // The drift axis must not break conformance for any scheduler:
+    // baselines take the default full-replan path, OctopInf the repair
+    // path, and the differential cross-checks still have to agree.
+    use octopinf::experiments::fuzz::run_conformance_mode;
+    let outcomes = run_conformance_mode(DRIFT_SEED0, 8, 0, ReplanMode::Drift);
+    let failures: Vec<String> = outcomes
+        .iter()
+        .filter(|o| !o.ok())
+        .map(|o| o.describe_failures())
+        .collect();
+    assert!(
+        failures.is_empty(),
+        "{} drift-mode scenarios failed:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+    assert!(outcomes.iter().map(|o| o.total_completions).sum::<u64>() > 0);
+}
