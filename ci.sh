@@ -6,6 +6,8 @@
 #               differential conformance sweep, rust/tests/conformance.rs)
 #   fuzz smoke: ~30 s extra sweep through the CLI path; fixed default
 #               seed (override with FUZZ_SEED0 to rotate the corpus)
+#   chaos smoke: fault-storm recovery comparison in both replan modes
+#               (override CHAOS_SEED0 to rotate the storms)
 #   perf:       cargo bench --bench hotpath -> BENCH_hotpath.json; the
 #               first run captures BENCH_hotpath.baseline.json (commit it),
 #               later runs gate >25 % per-entry regressions
@@ -24,6 +26,12 @@ cargo run --release --quiet -- fuzz --scenarios 12 --seed0 "${FUZZ_SEED0:-126484
 # replanning, so mid-run plan migrations run under the invariant engine
 # on every CI pass (conservation across each swap is a hard failure).
 cargo run --release --quiet -- fuzz --scenarios 8 --replan drift --seed0 "${FUZZ_SEED0:-12648430}"
+
+# Chaos smoke: fault-storm comparison (recovery on vs off, invariants
+# armed on every run) in both replan modes; any unaccounted fault loss
+# or conservation violation exits non-zero.
+cargo run --release --quiet -- chaos --storms 3 --seed0 "${CHAOS_SEED0:-3298844397}"
+cargo run --release --quiet -- chaos --storms 3 --replan drift --seed0 "${CHAOS_SEED0:-3298844397}"
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   cargo bench --bench hotpath

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 
 use crate::coordinator::{ReplanMode, SchedulerKind};
 use crate::network::TraceKind;
+use crate::sim::faults::CrashPolicy;
 
 /// Raw parsed config: section -> key -> value.
 #[derive(Clone, Debug, Default)]
@@ -86,6 +87,18 @@ pub struct ExperimentConfig {
     /// Replanning policy: fixed 6-min rounds only, or rounds plus
     /// drift-triggered incremental replans (`--replan drift`).
     pub replan: ReplanMode,
+    /// Number of injected fault windows (0 disarms fault injection;
+    /// repro-string modifier `:faults=M`).
+    pub faults: u32,
+    /// Same-time event permutation seed (0 keeps insertion order;
+    /// repro-string modifier `:order=K`).
+    pub order_seed: u64,
+    /// Failure-aware recovery: replan around crashes via
+    /// `Scheduler::on_fault` and force a fresh round when a controller
+    /// outage ends. Off = the data plane degrades open-loop.
+    pub recovery: bool,
+    /// What happens to a crashed device's queued queries.
+    pub crash_policy: CrashPolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -100,6 +113,10 @@ impl Default for ExperimentConfig {
             seed: 42,
             diurnal: false,
             replan: ReplanMode::Periodic,
+            faults: 0,
+            order_seed: 0,
+            recovery: true,
+            crash_policy: CrashPolicy::Reroute,
         }
     }
 }
@@ -143,6 +160,19 @@ impl ExperimentConfig {
             cfg.replan = ReplanMode::parse(v)
                 .ok_or_else(|| format!("unknown replan mode {v:?}"))?;
         }
+        if let Some(v) = raw.get_u64("experiment", "faults") {
+            cfg.faults = v as u32;
+        }
+        if let Some(v) = raw.get_u64("experiment", "order") {
+            cfg.order_seed = v;
+        }
+        if let Some(v) = raw.get_bool("experiment", "recovery") {
+            cfg.recovery = v;
+        }
+        if let Some(v) = raw.get("experiment", "crash_policy") {
+            cfg.crash_policy = CrashPolicy::parse(v)
+                .ok_or_else(|| format!("unknown crash policy {v:?}"))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -159,6 +189,9 @@ impl ExperimentConfig {
         }
         if self.slo_reduction_ms < 0.0 || self.slo_reduction_ms >= 150.0 {
             return Err("slo_reduction_ms must be in [0, 150)".into());
+        }
+        if self.faults > 64 {
+            return Err(format!("faults {} not in 0..=64", self.faults));
         }
         Ok(())
     }
@@ -214,6 +247,28 @@ mod tests {
     fn unknown_scheduler_is_error() {
         assert!(ExperimentConfig::from_text("[experiment]\nscheduler = foo\n")
             .is_err());
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.faults, 0);
+        assert_eq!(d.order_seed, 0);
+        assert!(d.recovery);
+        assert_eq!(d.crash_policy, CrashPolicy::Reroute);
+        let cfg = ExperimentConfig::from_text(
+            "[experiment]\nfaults = 3\norder = 99\nrecovery = no\ncrash_policy = drop\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults, 3);
+        assert_eq!(cfg.order_seed, 99);
+        assert!(!cfg.recovery);
+        assert_eq!(cfg.crash_policy, CrashPolicy::Drop);
+        assert!(ExperimentConfig::from_text("[experiment]\nfaults = 65\n").is_err());
+        assert!(
+            ExperimentConfig::from_text("[experiment]\ncrash_policy = explode\n")
+                .is_err()
+        );
     }
 
     #[test]

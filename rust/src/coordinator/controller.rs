@@ -142,6 +142,32 @@ impl Scheduler for Controller {
             repaired
         }
     }
+
+    /// Survivor re-placement after a device fault: exactly the pipelines
+    /// with a stage on the faulted device are re-planned (the crash
+    /// notification zeroes the device's bandwidth in `env`, steering
+    /// CWD's feasibility tests elsewhere; recovery restores it and the
+    /// same hook moves work back). Everything else rides the incremental
+    /// path, so unaffected groups keep their queues and portion clocks
+    /// bit-for-bit. A fault on a device hosting nothing is the identity.
+    fn on_fault(&mut self, env: &SchedEnv, old: &Plan, device: usize) -> Plan {
+        // Affected: stages currently on the device (crash side), plus
+        // pipelines sourced there (recover side — after the crash replan
+        // evacuated the device, these are the ones that may move back).
+        let affected: Vec<usize> = (0..env.pipelines.len())
+            .filter(|&p| {
+                env.pipelines[p].source_device == device
+                    || (0..env.pipelines[p].len()).any(|m| {
+                        old.assignment(p, m)
+                            .map_or(true, |a| a.cfg.device == device)
+                    })
+            })
+            .collect();
+        if affected.is_empty() {
+            return old.clone();
+        }
+        self.replan(env, old, &affected)
+    }
 }
 
 /// Factory covering OctopInf variants and all baselines.
@@ -234,6 +260,50 @@ mod tests {
         // Empty drift set is the identity.
         let same = ctl.replan(&env, &old, &[]);
         assert_eq!(same.assignments.len(), old.assignments.len());
+    }
+
+    #[test]
+    fn on_fault_evacuates_the_dead_device_and_keeps_the_rest() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let mut ctl = Controller::new(SchedulerKind::OctopInf);
+        let old = ctl.plan(&env);
+        // Crash device 1 (pipeline 0's source): its bandwidth snapshot
+        // arrives zeroed, exactly as the engine delivers it.
+        let mut bw = vec![80.0; 10];
+        bw[1] = 0.0;
+        let crashed = SchedEnv::bootstrap(&cl, &pf, &pl, bw);
+        let new = ctl.on_fault(&crashed, &old, 1);
+        for a in &new.assignments {
+            assert_ne!(a.cfg.device, 1, "stage {}/{} left on dead device", a.pipeline, a.model);
+        }
+        // Pipelines with no stake in device 1 keep their configs verbatim.
+        for p in 1..pl.len() {
+            if pl[p].source_device == 1 {
+                continue;
+            }
+            let untouched = (0..pl[p].len()).all(|m| {
+                old.assignment(p, m).map_or(false, |a| a.cfg.device != 1)
+            });
+            if untouched {
+                for m in 0..pl[p].len() {
+                    assert_eq!(
+                        old.assignment(p, m).unwrap().cfg,
+                        new.assignment(p, m).unwrap().cfg,
+                        "unaffected {p}/{m} changed"
+                    );
+                }
+            }
+        }
+        // A fault on a device hosting nothing is the identity.
+        let idle = ctl.on_fault(&env, &old, 6);
+        assert_eq!(idle.assignments.len(), old.assignments.len());
+        for a in &old.assignments {
+            assert_eq!(
+                idle.assignment(a.pipeline, a.model).unwrap().cfg,
+                a.cfg
+            );
+        }
     }
 
     #[test]

@@ -209,6 +209,16 @@ pub trait Scheduler {
         let _ = (old, drifted);
         self.plan(env)
     }
+
+    /// Failure-aware replan after `device` crashed (its `env.bw_mbps`
+    /// entry arrives zeroed, and on recovery, restored). The default is a
+    /// full survivor replan; OctopInf's `Controller` overrides this with
+    /// a targeted re-placement of the pipelines that had stages on the
+    /// dead device, keeping everything unaffected bit-for-bit in place.
+    fn on_fault(&mut self, env: &SchedEnv, old: &Plan, device: usize) -> Plan {
+        let _ = (old, device);
+        self.plan(env)
+    }
 }
 
 /// Selector used by the CLI / bench harness.

@@ -6,10 +6,12 @@
 //! so tables are byte-identical at any job count. Shared by
 //! `octopinf figure N [--jobs N]` and the bench harness.
 
+pub mod chaos;
 pub mod drift;
 pub mod fuzz;
 pub mod runner;
 
+pub use chaos::{chaos_comparison, chaos_table, storm_specs, ChaosComparison};
 pub use drift::{drift_comparison, drift_table, FamilyComparison};
 pub use fuzz::{
     conformance_round, conformance_round_mode, run_conformance,

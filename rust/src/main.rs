@@ -21,7 +21,7 @@ use octopinf::sim::{run as sim_run, Scenario};
 use octopinf::util::cli::Args;
 use octopinf::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|serve> [options]
+const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|serve> [options]
   profile  [--reps 5] [--out artifacts/profiles.tsv]
   simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
@@ -29,10 +29,40 @@ const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|serve> 
   figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
   fuzz     [--scenarios 50] [--seed0 3735928559] [--jobs N]
            [--replan periodic|drift]
-           [--repro fuzz:v1:seed=N]   (replay one scenario verbosely)
+           [--repro fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K]]
   drift    [--per-family 4] [--seed0 3735928559] [--jobs N]
            (fixed-period vs drift-triggered OctopInf per fuzz family)
+  chaos    [--storms 8] [--seed0 3299893997] [--jobs N]
+           [--replan periodic|drift] [--help]
+           (recovery on/off across fault storms; see `chaos --help`)
   serve    [--duration-s 10] [--fps 30] [--slo-ms 200]";
+
+/// Recovery-policy knobs behind `octopinf chaos` (satisfies `--help`).
+const CHAOS_HELP: &str = "octopinf chaos — fault-injection comparison
+Runs every main scheduler across seeded FaultStorm scenarios twice:
+with failure-aware recovery enabled and disabled. Invariants are armed
+on every run — a storm that loses a query unaccounted fails the sweep.
+
+options:
+  --storms N          fault-storm scenarios per scheduler (default 8)
+  --seed0 N           base seed for the storm specs (default 0xC4A0_5EED)
+  --jobs N            worker threads (0 = all cores); output is
+                      byte-identical at any job count
+  --replan MODE       periodic|drift — replan clock both arms run under
+
+recovery-policy knobs (config file `[experiment]` / repro string):
+  faults = M          fault windows sampled over the run (`:faults=M`);
+                      M in 1..=64, 0 disables injection
+  order = K           same-time event permutation seed (`:order=K`);
+                      0 = insertion order, any K is replayable
+  recovery = on|off   failure-aware replanning: crash/recover plan
+                      repair + post-outage catch-up round (default on;
+                      the chaos command sweeps both)
+  crash_policy = reroute|drop
+                      reroute: a crashed device's queued queries survive
+                      for live migration to survivors (default)
+                      drop: the queue dies with the device, accounted as
+                      lost_to_fault";
 
 fn main() {
     let args = Args::from_env();
@@ -43,6 +73,7 @@ fn main() {
         "figure" => cmd_figure(&args),
         "fuzz" => cmd_fuzz(&args),
         "drift" => cmd_drift(&args),
+        "chaos" => cmd_chaos(&args),
         "serve" => cmd_serve(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -163,7 +194,10 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
     let mode = parse_replan(args)?;
     if let Some(r) = args.get("repro") {
         let spec = FuzzSpec::from_repro(r).ok_or_else(|| {
-            anyhow!("bad repro string {r:?} (expected fuzz:v1:seed=N[:replan=drift])")
+            anyhow!(
+                "bad repro string {r:?} \
+                 (expected fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K])"
+            )
         })?;
         // A mode embedded in the repro string wins over the --replan flag:
         // the string must replay exactly the failing configuration.
@@ -226,6 +260,36 @@ fn parse_replan(args: &Args) -> Result<octopinf::coordinator::ReplanMode> {
         .ok_or_else(|| anyhow!("unknown replan mode {raw:?} (periodic|drift)"))
 }
 
+/// Graceful-degradation comparison: every scheduler across fault storms,
+/// recovery enabled vs disabled, invariants armed on every run.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("{CHAOS_HELP}");
+        return Ok(());
+    }
+    let n = args.get_usize("storms", 8);
+    let seed0 = args.get_u64("seed0", 0xC4A0_5EED);
+    let mode = parse_replan(args)?;
+    let cmps = experiments::chaos_comparison(seed0, n, args.jobs(), mode);
+    println!("{}", experiments::chaos_table(&cmps).to_markdown());
+    let violations: usize = cmps.iter().map(|c| c.violations).sum();
+    let lost: u64 = cmps
+        .iter()
+        .map(|c| c.recovery.lost_to_fault + c.no_recovery.lost_to_fault)
+        .sum();
+    println!(
+        "\n{} schedulers x {n} storms x 2 recovery modes [{}]; \
+         {lost} queries lost to faults (every one accounted); \
+         {violations} invariant violations",
+        cmps.len(),
+        mode.label(),
+    );
+    if violations > 0 {
+        return Err(anyhow!("invariant violations during chaos comparison"));
+    }
+    Ok(())
+}
+
 /// Fixed-period vs drift-triggered OctopInf across the fuzz families,
 /// same seeds, invariants armed on every run.
 fn cmd_drift(args: &Args) -> Result<()> {
@@ -256,9 +320,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let mut cfgs = HashMap::new();
-    cfgs.insert("det_m".to_string(), ModelServeCfg { batch: 4, max_wait_ms: 25.0 });
-    cfgs.insert("classifier".to_string(), ModelServeCfg { batch: 8, max_wait_ms: 15.0 });
-    cfgs.insert("embedder".to_string(), ModelServeCfg { batch: 8, max_wait_ms: 15.0 });
+    cfgs.insert("det_m".to_string(), ModelServeCfg::new(4, 25.0));
+    cfgs.insert("classifier".to_string(), ModelServeCfg::new(8, 15.0));
+    cfgs.insert("embedder".to_string(), ModelServeCfg::new(8, 15.0));
 
     let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();

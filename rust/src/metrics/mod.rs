@@ -24,6 +24,12 @@ pub struct RunMetrics {
     /// a streaming sketch, so recording stays O(1) and allocation-free.
     pub latency: QuantileSketch,
     pub latency_hist: Histogram,
+    /// Queries destroyed by an injected fault (in-flight batches on a
+    /// crashed device, queues lost under `CrashPolicy::Drop`, frames
+    /// captured while their source device was down). Kept separate from
+    /// `dropped` — these are system failures, not scheduling decisions —
+    /// and reconciled exactly by the invariant engine.
+    pub lost_to_fault: u64,
     /// Peak total GPU memory allocated, MB.
     pub peak_memory_mb: f64,
     /// Per-minute (workload objects/s, effective objects/s) timeline.
@@ -39,6 +45,7 @@ impl RunMetrics {
             on_time: 0,
             late: 0,
             dropped: 0,
+            lost_to_fault: 0,
             latency: QuantileSketch::new(),
             latency_hist: Histogram::new(0.0, 1000.0, 50),
             peak_memory_mb: 0.0,

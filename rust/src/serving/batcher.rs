@@ -9,16 +9,41 @@ use std::collections::VecDeque;
 pub struct DynamicBatcher<T> {
     batch: usize,
     max_wait_ms: f64,
+    /// Admission cap: `push` callers should check [`is_full`] first and
+    /// reject with backpressure instead of queueing unboundedly.
+    cap: usize,
     queue: VecDeque<(f64, T)>,
 }
 
 impl<T> DynamicBatcher<T> {
     pub fn new(batch: usize, max_wait_ms: f64) -> Self {
+        Self::bounded(batch, max_wait_ms, usize::MAX)
+    }
+
+    /// A batcher with an explicit admission cap (bounded per-model queue).
+    /// A cap below the batch size binds on every push cycle; a larger cap
+    /// bounds buildup whenever releases stall behind admissions.
+    pub fn bounded(batch: usize, max_wait_ms: f64, cap: usize) -> Self {
         DynamicBatcher {
             batch: batch.max(1),
             max_wait_ms: max_wait_ms.max(0.0),
+            cap: cap.max(1),
             queue: VecDeque::new(),
         }
+    }
+
+    /// The queue is at its admission cap: new work should be rejected
+    /// with a retry-after hint rather than queued.
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.cap
+    }
+
+    /// Backpressure hint: milliseconds until the next scheduled release
+    /// frees queue space (0 when a full batch is already due).
+    pub fn retry_after_ms(&self, now_ms: f64) -> f64 {
+        self.next_deadline_ms()
+            .map(|d| (d - now_ms).max(0.0))
+            .unwrap_or(0.0)
     }
 
     /// Add a request at `now_ms`; returns a full batch if one is ready.
@@ -126,6 +151,32 @@ mod tests {
     fn batch_of_one_is_immediate() {
         let mut b = DynamicBatcher::new(1, 0.0);
         assert_eq!(b.push(7, 0.0).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn bounded_batcher_reports_full_and_retry_hint() {
+        // Cap below the batch size: admission binds before a full batch
+        // can ever assemble, so only timer flushes free space.
+        let mut b = DynamicBatcher::bounded(8, 50.0, 2);
+        assert!(!b.is_full());
+        b.push('a', 0.0);
+        assert!(!b.is_full());
+        b.push('b', 1.0);
+        assert!(b.is_full());
+        // Head entered at 0.0, bound 50: space frees at the timer flush.
+        assert_eq!(b.retry_after_ms(10.0), 40.0);
+        assert_eq!(b.retry_after_ms(80.0), 0.0, "overdue flush: retry now");
+        let empty: DynamicBatcher<u8> = DynamicBatcher::bounded(4, 50.0, 8);
+        assert_eq!(empty.retry_after_ms(0.0), 0.0);
+    }
+
+    #[test]
+    fn default_batcher_is_unbounded() {
+        let mut b = DynamicBatcher::new(4, 50.0);
+        for i in 0..3 {
+            b.push(i, 0.0);
+        }
+        assert!(!b.is_full());
     }
 
     #[test]

@@ -49,6 +49,17 @@ pub struct Response {
 pub struct ModelServeCfg {
     pub batch: usize,
     pub max_wait_ms: f64,
+    /// Admission cap of the model's batcher queue: requests arriving at a
+    /// full queue are rejected with a retry-after hint instead of queueing
+    /// unboundedly (graceful degradation under overload).
+    pub queue_cap: usize,
+}
+
+impl ModelServeCfg {
+    /// Standard config: queue bounded at 8 assembled batches.
+    pub fn new(batch: usize, max_wait_ms: f64) -> ModelServeCfg {
+        ModelServeCfg { batch, max_wait_ms, queue_cap: batch.max(1) * 8 }
+    }
 }
 
 /// Aggregate report of one serving session.
@@ -59,6 +70,12 @@ pub struct ServeReport {
     /// Requests answered with an error `Response` (unknown model / engine
     /// failure) — isolated per batch, never fatal to the session.
     pub failed: u64,
+    /// Requests shed at dequeue because their SLO deadline had already
+    /// passed — executing them could only waste a batch slot.
+    pub shed: u64,
+    /// Requests rejected at admission (queue full): answered with an
+    /// explicit retry-after error instead of queueing unboundedly.
+    pub rejected: u64,
     pub per_model: HashMap<String, u64>,
     /// Streaming latency sketch: O(1) recording on the executor thread.
     pub latency: QuantileSketch,
@@ -99,7 +116,9 @@ pub fn serve(
     let mut rt = Runtime::new(artifacts_dir)?;
     let mut batchers: HashMap<String, DynamicBatcher<Request>> = cfgs
         .iter()
-        .map(|(m, c)| (m.clone(), DynamicBatcher::new(c.batch, c.max_wait_ms)))
+        .map(|(m, c)| {
+            (m.clone(), DynamicBatcher::bounded(c.batch, c.max_wait_ms, c.queue_cap))
+        })
         .collect();
     // Pre-compile engines so the first request doesn't eat compile time.
     for (m, c) in cfgs {
@@ -127,9 +146,15 @@ pub fn serve(
                     let model = req.model.clone();
                     let b = batchers
                         .entry(model.clone())
-                        .or_insert_with(|| DynamicBatcher::new(1, 5.0));
-                    // A push that fills the batch releases it right here.
-                    if let Some(batch) = b.push(req, now_ms(session_start)) {
+                        .or_insert_with(|| DynamicBatcher::bounded(1, 5.0, 8));
+                    if b.is_full() {
+                        // Explicit backpressure: answer now with a retry
+                        // hint instead of queueing unboundedly.
+                        let retry = b.retry_after_ms(now_ms(session_start));
+                        reject_request(req, retry, &tx, &mut report);
+                    } else if let Some(batch) = b.push(req, now_ms(session_start))
+                    {
+                        // A push that fills the batch releases it here.
                         run_batch(&mut rt, &model, cfgs, batch, &tx, &mut report);
                     }
                 }
@@ -170,6 +195,13 @@ fn run_batch(
     tx: &Sender<Response>,
     report: &mut ServeReport,
 ) {
+    // Deadline-aware shedding before any engine work: a request whose SLO
+    // already expired at dequeue time cannot be served on time — running
+    // it would only delay everyone behind it.
+    let batch = shed_expired(batch, tx, report);
+    if batch.is_empty() {
+        return;
+    }
     let bz = cfgs.get(model).map(|c| c.batch).unwrap_or(1);
     let n = batch.len();
     let per_in: usize = match rt.engine(model, bz) {
@@ -220,6 +252,58 @@ fn complete_batch(
             error: None,
         });
     }
+}
+
+/// Drop already-expired requests from a dequeued batch, answering each
+/// with an error `Response` (counted in `report.shed`), and return the
+/// still-viable remainder.
+fn shed_expired(
+    batch: Vec<Request>,
+    tx: &Sender<Response>,
+    report: &mut ServeReport,
+) -> Vec<Request> {
+    let mut live = Vec::with_capacity(batch.len());
+    for req in batch {
+        let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+        if latency_ms > req.slo_ms {
+            report.shed += 1;
+            let _ = tx.send(Response {
+                id: req.id,
+                model: req.model,
+                output: Vec::new(),
+                latency_ms,
+                batch_size: 0,
+                on_time: false,
+                error: Some("shed: deadline exceeded".to_string()),
+            });
+        } else {
+            live.push(req);
+        }
+    }
+    live
+}
+
+/// Answer a request rejected at admission (full queue) with an explicit
+/// retry-after hint — bounded queues are the serving path's backpressure.
+fn reject_request(
+    req: Request,
+    retry_after_ms: f64,
+    tx: &Sender<Response>,
+    report: &mut ServeReport,
+) {
+    report.rejected += 1;
+    let _ = tx.send(Response {
+        id: req.id,
+        model: req.model,
+        output: Vec::new(),
+        latency_ms: req.submitted.elapsed().as_secs_f64() * 1e3,
+        batch_size: 0,
+        on_time: false,
+        error: Some(format!(
+            "queue full; retry after {:.0} ms",
+            retry_after_ms.ceil()
+        )),
+    });
 }
 
 /// Answer every request of a failed batch with an error `Response`.
@@ -296,6 +380,57 @@ mod tests {
             assert!(r.output.is_empty());
             assert_eq!(r.error.as_deref(), Some("engine missing"));
         }
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_an_answer() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        // Negative SLO: expired the instant it was created.
+        let batch = vec![req(1, "det", -1.0), req(2, "det", 1e9)];
+        let live = shed_expired(batch, &tx, &mut report);
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].id, 2);
+        assert_eq!(report.shed, 1);
+        assert_eq!(report.served, 0, "shed requests are not completions");
+        let r: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, 1);
+        assert!(!r[0].on_time);
+        assert_eq!(r[0].error.as_deref(), Some("shed: deadline exceeded"));
+    }
+
+    #[test]
+    fn rejected_request_carries_retry_after() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        reject_request(req(7, "det", 100.0), 12.3, &tx, &mut report);
+        assert_eq!(report.rejected, 1);
+        let r: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(r.len(), 1, "rejected client must still get an answer");
+        let err = r[0].error.as_deref().unwrap();
+        assert!(err.contains("queue full"), "{err}");
+        assert!(err.contains("13 ms"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn run_batch_sheds_expired_before_engine_lookup() {
+        // Under the stub Runtime every engine lookup errors — but a batch
+        // that is entirely expired must shed (answered per request) before
+        // any engine work, not fail.
+        let mut rt = Runtime { manifest: Default::default() };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        let cfgs = HashMap::new();
+        let batch = vec![req(1, "det", -1.0), req(2, "det", -1.0)];
+        run_batch(&mut rt, "det", &cfgs, batch, &tx, &mut report);
+        assert_eq!(report.shed, 2);
+        assert_eq!(report.failed, 0, "shedding is not an engine failure");
+        let r: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(r.len(), 2);
+        assert!(r.iter().all(|x| x.error.as_deref()
+            == Some("shed: deadline exceeded")));
     }
 
     #[cfg(not(feature = "pjrt"))]

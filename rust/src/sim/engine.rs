@@ -20,6 +20,7 @@ use crate::coordinator::{
     GpuId, ModelObs, Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg,
 };
 use crate::metrics::{Outcome, RunMetrics};
+use crate::sim::faults::{CrashPolicy, FaultEv, FaultPlan};
 use crate::sim::invariants::{InvariantChecker, InvariantReport};
 use crate::sim::link::FifoLink;
 use crate::sim::scenario::Scenario;
@@ -117,13 +118,31 @@ enum Ev {
     /// Drift-mode only: compare live observations against the active
     /// plan's envelope and incrementally replan the drifted pipelines.
     DriftCheck,
+    /// Injected system fault (crash/recover, straggler, outage, freeze).
+    Fault(FaultEv),
     Tick,
 }
 
 struct TimedEvent {
     t: Ms,
+    /// Same-time ordering key. With `order_seed == 0` this equals `seq`
+    /// (insertion order, the historical behavior); otherwise it is a
+    /// seeded bijective permutation of `seq`, so events sharing a
+    /// timestamp pop in a shuffled — but fully reproducible — order.
+    /// Scheduler-independent quantities must not depend on it.
+    tie: u64,
     seq: u64,
     ev: Ev,
+}
+
+/// splitmix64 finalizer: a bijection on u64, so distinct `seq` values can
+/// never collide on `tie` (the `seq` tiebreak below is then unreachable,
+/// but kept as a total-order backstop).
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 impl PartialEq for TimedEvent {
@@ -139,10 +158,12 @@ impl PartialOrd for TimedEvent {
 }
 impl Ord for TimedEvent {
     fn cmp(&self, o: &Self) -> Ordering {
-        // Reversed for a min-heap on (t, seq). total_cmp gives NaN
+        // Reversed for a min-heap on (t, tie, seq). total_cmp gives NaN
         // timestamps a fixed (last) position instead of silently
         // comparing Equal and corrupting event order.
-        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
+        o.t.total_cmp(&self.t)
+            .then(o.tie.cmp(&self.tie))
+            .then(o.seq.cmp(&self.seq))
     }
 }
 
@@ -289,6 +310,34 @@ pub struct Simulator {
     /// every hook site is a single never-taken branch — see
     /// [`crate::sim::invariants`].
     checker: Option<Box<InvariantChecker>>,
+    // Fault injection (empty / all-zero unless cfg.faults > 0).
+    /// Scheduled fault events, seeded into the heap at run start.
+    faults: Vec<(Ms, FaultEv)>,
+    /// Whether the control plane reacts to faults (crash/recover replans,
+    /// post-outage catch-up). Off = pure graceful-degradation baseline.
+    recovery: bool,
+    crash_policy: CrashPolicy,
+    /// Same-time event permutation seed (0 = insertion order).
+    order_seed: u64,
+    /// Per-device crash depth (overlapping windows nest safely).
+    device_down: Vec<u32>,
+    /// Active straggler windows as (flat gpu index, factor).
+    stragglers: Vec<(usize, f64)>,
+    /// Per-GPU latency multiplier — product of active straggler factors,
+    /// recomputed from `stragglers` on every window edge so no float
+    /// divide-residue accumulates.
+    gpu_slow: Vec<f64>,
+    outage_depth: u32,
+    freeze_depth: u32,
+    /// Telemetry snapshot captured when a freeze window opened.
+    frozen_env: Option<(Vec<Vec<ModelObs>>, Vec<f64>)>,
+    /// In-flight batches doomed by a device crash: their `ExecDone` events
+    /// account the queries as `lost_to_fault` instead of completing them.
+    doomed: Vec<(usize, usize, usize)>,
+    /// Autoscale actions applied while the controller was out — their
+    /// cooldowns are handed back if post-recovery replanning supersedes
+    /// the stale-telemetry decision (redeploys the group).
+    outage_scaled: Vec<(usize, usize)>,
 }
 
 /// Owned subset of `Scenario` the engine needs (the borrow-free core).
@@ -349,8 +398,37 @@ impl Simulator {
             drift: DriftDetector::new(DriftParams::default()),
             autoscaler: AutoScaler::new(AutoScalerParams::default()),
             checker: None,
+            faults: if scenario.cfg.faults > 0 {
+                FaultPlan::sample(
+                    scenario.cfg.seed,
+                    scenario.cfg.faults,
+                    duration,
+                    &scenario.cluster,
+                    scenario.cfg.n_sources,
+                )
+                .events
+            } else {
+                Vec::new()
+            },
+            recovery: scenario.cfg.recovery,
+            crash_policy: scenario.cfg.crash_policy,
+            order_seed: scenario.cfg.order_seed,
+            device_down: vec![0; scenario.cluster.devices.len()],
+            stragglers: Vec::new(),
+            gpu_slow: vec![1.0; n_gpus],
+            outage_depth: 0,
+            freeze_depth: 0,
+            frozen_env: None,
+            doomed: Vec::new(),
+            outage_scaled: Vec::new(),
             sc,
         }
+    }
+
+    /// Override the sampled fault schedule (tests and targeted chaos runs).
+    /// Must be called before `run`.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = plan.events;
     }
 
     /// Arm the invariant engine before `run` (conformance/fuzz harness).
@@ -390,11 +468,36 @@ impl Simulator {
 
     fn push(&mut self, t: Ms, ev: Ev) {
         self.seq += 1;
-        self.heap.push(TimedEvent { t, seq: self.seq, ev });
+        let tie = if self.order_seed == 0 {
+            self.seq
+        } else {
+            mix64(self.seq ^ self.order_seed)
+        };
+        self.heap.push(TimedEvent { t, tie, seq: self.seq, ev });
     }
 
-    /// Build the scheduler environment from current observations.
+    /// Build the scheduler environment: live telemetry, unless a freeze
+    /// window is open — then the snapshot taken at freeze start (the
+    /// control plane plans against lies). Device liveness is heartbeat-
+    /// driven, not telemetry-driven, so crashed devices report zero
+    /// bandwidth even under a freeze.
     fn build_env(&self) -> (Vec<Vec<ModelObs>>, Vec<f64>) {
+        let (obs, mut bw) = match &self.frozen_env {
+            Some(snap) => snap.clone(),
+            None => self.live_env(),
+        };
+        for (d, &down) in self.device_down.iter().enumerate() {
+            if down > 0 {
+                if let Some(b) = bw.get_mut(d) {
+                    *b = 0.0;
+                }
+            }
+        }
+        (obs, bw)
+    }
+
+    /// Raw (unfrozen) observations and link bandwidths.
+    fn live_env(&self) -> (Vec<Vec<ModelObs>>, Vec<f64>) {
         let mut obs = Vec::new();
         for (p, dag) in self.sc.pipelines.iter().enumerate() {
             let structural = dag.request_rates(1.0);
@@ -464,6 +567,156 @@ impl Simulator {
         self.drift.arm(envelope);
     }
 
+    /// Failure-aware replan: let the scheduler re-place work around the
+    /// crashed (or just-recovered) device, installing via the same
+    /// plan-diff migration as every other swap — unaffected groups keep
+    /// their queues and clocks bit-for-bit.
+    fn fault_replan(&mut self, device: usize) {
+        let (obs, bw) = self.build_env();
+        let env = SchedEnv {
+            cluster: &self.sc.cluster,
+            profiles: &self.sc.profiles,
+            pipelines: &self.sc.pipelines,
+            obs,
+            bw_mbps: bw,
+            alpha: 1.2,
+        };
+        let plan = self.sched.on_fault(&env, &self.plan, device);
+        let envelope = (self.mode == ReplanMode::Drift).then(|| {
+            PlanEnvelope::capture(&plan, env.pipelines, &env.obs, &env.bw_mbps)
+        });
+        self.install_plan(plan);
+        if let Some(e) = envelope {
+            self.drift.arm(e);
+        }
+    }
+
+    /// Account `n` queries destroyed by a fault (metrics + checker move
+    /// together — the invariant engine reconciles them exactly).
+    fn lose_to_fault(&mut self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.metrics.lost_to_fault += n;
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_lost(n);
+        }
+    }
+
+    /// Recompute a GPU's slowdown as the product of its active straggler
+    /// windows (rebuilt from scratch so window exits leave no residue).
+    fn recompute_gpu_slow(&mut self, gi: usize) {
+        self.gpu_slow[gi] = self
+            .stragglers
+            .iter()
+            .filter(|(g, _)| *g == gi)
+            .map(|(_, f)| f)
+            .product();
+    }
+
+    fn on_fault_event(&mut self, ev: FaultEv) {
+        match ev {
+            FaultEv::DeviceCrash { device } => {
+                self.device_down[device] += 1;
+                if self.device_down[device] > 1 {
+                    return; // nested window: already down
+                }
+                // In-flight batches on the device die with it; their
+                // pending ExecDone events account the queries as lost.
+                for row in &self.groups {
+                    for g in row {
+                        if g.cfg.device != device {
+                            continue;
+                        }
+                        for (bi, &busy) in g.busy.iter().enumerate() {
+                            if busy {
+                                self.doomed.push((g.pipeline, g.model, bi));
+                            }
+                        }
+                    }
+                }
+                if self.crash_policy == CrashPolicy::Drop {
+                    let mut lost = 0u64;
+                    for p in 0..self.groups.len() {
+                        for m in 0..self.groups[p].len() {
+                            let g = &mut self.groups[p][m];
+                            if g.cfg.device == device {
+                                lost += g.queue.len() as u64;
+                                g.queue.clear();
+                                g.flush_at = None;
+                            }
+                        }
+                    }
+                    self.lose_to_fault(lost);
+                }
+                if self.recovery && self.outage_depth == 0 {
+                    self.fault_replan(device);
+                }
+            }
+            FaultEv::DeviceRecover { device } => {
+                if self.device_down[device] == 0 {
+                    return; // unmatched end (window started before t=0)
+                }
+                self.device_down[device] -= 1;
+                if self.device_down[device] > 0 {
+                    return;
+                }
+                if self.recovery && self.outage_depth == 0 {
+                    self.fault_replan(device);
+                }
+                // Kick every group with queued work: flush timers that
+                // fired into a dead device left queues with no pending
+                // trigger, and migrated-back groups should drain now.
+                for p in 0..self.groups.len() {
+                    for m in 0..self.groups[p].len() {
+                        if !self.groups[p][m].queue.is_empty() {
+                            self.try_dispatch(p, m);
+                        }
+                    }
+                }
+            }
+            FaultEv::StragglerStart { device, gpu, factor } => {
+                let gi = self.gpu_offset[device] + gpu;
+                self.stragglers.push((gi, factor));
+                self.recompute_gpu_slow(gi);
+            }
+            FaultEv::StragglerEnd { device, gpu, factor } => {
+                let gi = self.gpu_offset[device] + gpu;
+                if let Some(pos) = self
+                    .stragglers
+                    .iter()
+                    .position(|&(g, f)| g == gi && f == factor)
+                {
+                    self.stragglers.remove(pos);
+                    self.recompute_gpu_slow(gi);
+                }
+            }
+            FaultEv::ControllerOutageStart => {
+                self.outage_depth += 1;
+            }
+            FaultEv::ControllerOutageEnd => {
+                self.outage_depth = self.outage_depth.saturating_sub(1);
+                if self.outage_depth == 0 && self.recovery {
+                    // Catch-up round: replan against everything that
+                    // happened while the controller was dark.
+                    self.reschedule();
+                }
+            }
+            FaultEv::TelemetryFreezeStart => {
+                self.freeze_depth += 1;
+                if self.freeze_depth == 1 {
+                    self.frozen_env = Some(self.live_env());
+                }
+            }
+            FaultEv::TelemetryFreezeEnd => {
+                self.freeze_depth = self.freeze_depth.saturating_sub(1);
+                if self.freeze_depth == 0 {
+                    self.frozen_env = None;
+                }
+            }
+        }
+    }
+
     /// Install a plan by diffing it against the live deployment: groups
     /// whose configuration and bindings are unchanged keep everything —
     /// queues, arrival windows, busy flags, and pending `Portion` clocks —
@@ -504,10 +757,12 @@ impl Simulator {
                 .collect();
         }
         let mut ticks = Vec::new();
+        let mut changed: Vec<(usize, usize)> = Vec::new();
         for a in &plan.assignments {
             if group_matches(&self.groups[a.pipeline][a.model], a) {
                 continue; // live migration: nothing to redeploy
             }
+            changed.push((a.pipeline, a.model));
             self.epoch_counter += 1;
             let epoch = self.epoch_counter;
             let entry = &mut self.groups[a.pipeline][a.model];
@@ -532,6 +787,17 @@ impl Simulator {
             }
         }
         self.plan = plan;
+        // Scale decisions taken on stale telemetry during a controller
+        // outage hand their cooldown back once post-recovery replanning
+        // supersedes them (redeploys the group) — otherwise the phantom
+        // action would suppress the next legitimate scale-up for 25 s.
+        if self.outage_depth == 0 && !self.outage_scaled.is_empty() {
+            for key in std::mem::take(&mut self.outage_scaled) {
+                if changed.contains(&key) {
+                    self.autoscaler.cancel(key);
+                }
+            }
+        }
         // Seed portion clocks for the re-deployed reserved instances only.
         for (t, p, m, bi, epoch) in ticks {
             self.push(t, Ev::Portion { pipeline: p, model: m, binding: bi, epoch });
@@ -550,12 +816,16 @@ impl Simulator {
         let g = &mut self.groups[pipeline][model];
         let Some(b) = g.bindings.get(binding).copied() else { return };
         let Some(slot) = b.temporal else { return };
-        // Re-arm the clock first (under the group's current epoch).
+        // Re-arm the clock first (under the group's current epoch), so
+        // the duty cycle survives a crash window and resumes on recovery.
         let next = now + slot.duty_cycle_ms.max(1.0);
         let epoch = g.epoch;
         self.push(next, Ev::Portion { pipeline, model, binding, epoch });
 
         let g = &mut self.groups[pipeline][model];
+        if self.device_down[g.cfg.device] > 0 {
+            return; // device dark: the portion fires into the void
+        }
         if g.busy[binding] {
             return; // previous batch overran its cycle
         }
@@ -588,9 +858,12 @@ impl Simulator {
         batch.extend(self.groups[pipeline][model].queue.drain(..take));
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
         let class = self.sc.cluster.device(cfg.device).class;
-        let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch);
-        let end = now + dur; // reservation: interference-free
         let gi = self.gpu_idx(b.gpu);
+        // Reservation: interference-free — but a hardware straggler slows
+        // even reserved portions (the fault is below the scheduler).
+        let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch)
+            * self.gpu_slow[gi];
+        let end = now + dur;
         self.gpu_busy_width_ms[gi] += dur * b.width;
         self.push(end, Ev::ExecDone { pipeline, model, binding, queries: batch });
     }
@@ -664,6 +937,13 @@ impl Simulator {
             }
             if !applied {
                 self.autoscaler.cancel(key);
+            } else if self.outage_depth > 0
+                && !matches!(action, ScaleAction::Hold)
+            {
+                // Applied on stale telemetry while the controller was out:
+                // remember the key so post-recovery replanning can hand
+                // the cooldown back if it supersedes this decision.
+                self.outage_scaled.push(key);
             }
         }
     }
@@ -740,6 +1020,9 @@ impl Simulator {
             if g.queue.is_empty() {
                 return;
             }
+            if self.device_down[g.cfg.device] > 0 {
+                return; // device dark: queue holds for reroute/recovery
+            }
             // Only contended (non-reserved) instances dispatch here;
             // CORAL-reserved instances are driven by Portion events.
             let Some(binding_idx) = g
@@ -800,7 +1083,8 @@ impl Simulator {
             let total = runs.active_width() + binding.width;
             let mult =
                 self.interference.multiplier(total, cap, runs.active_count());
-            let dur = base_lat * mult;
+            // Straggler windows compose multiplicatively with interference.
+            let dur = base_lat * mult * self.gpu_slow[gi];
             let end = now + dur;
             runs.push(end, binding.width);
             self.gpu_busy_width_ms[gi] += dur * binding.width;
@@ -822,6 +1106,9 @@ impl Simulator {
         if b.temporal.is_none() || binding >= g.busy.len() || g.busy[binding] {
             return;
         }
+        if self.device_down[g.cfg.device] > 0 {
+            return; // device dark
+        }
         if g.queue.len() < g.cfg.batch as usize {
             return;
         }
@@ -836,9 +1123,10 @@ impl Simulator {
         }
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
         let class = self.sc.cluster.device(cfg.device).class;
-        let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch);
-        let end = now + dur;
         let gi = self.gpu_idx(b.gpu);
+        let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch)
+            * self.gpu_slow[gi];
+        let end = now + dur;
         self.gpu_busy_width_ms[gi] += dur * b.width;
         self.push(end, Ev::ExecDone { pipeline, model, binding, queries: batch });
     }
@@ -856,6 +1144,24 @@ impl Simulator {
             if binding < g.busy.len() {
                 g.busy[binding] = false;
             }
+        }
+        // A batch doomed by a device crash: the queries died with the
+        // hardware — account them as lost (never silently vanished) and
+        // free the instance slot without routing or completing anything.
+        if let Some(pos) = self
+            .doomed
+            .iter()
+            .position(|&(p, m, b)| p == pipeline && m == model && b == binding)
+        {
+            self.doomed.remove(pos);
+            self.lose_to_fault(queries.len() as u64);
+            if self.buf_pool.len() < 64 {
+                queries.clear();
+                self.buf_pool.push(queries);
+            }
+            self.chain_reserved(pipeline, model, binding);
+            self.try_dispatch(pipeline, model);
+            return;
         }
         let dag = &self.sc.pipelines[pipeline];
         let slo = dag.slo_ms;
@@ -971,6 +1277,16 @@ impl Simulator {
             deadline_ms: now + slo,
             objects: objects.min(u16::MAX as u32) as u16,
         };
+        // A dead source device still captures frames (the camera is a
+        // separate box) but cannot ship them: the query is lost at birth.
+        // Counting the frame first keeps frames/objects — the
+        // scheduler-independent fingerprint — identical across schedulers
+        // and across fault policies.
+        if self.device_down[src] > 0 {
+            self.lose_to_fault(1);
+            self.push(now + 1000.0 / fps, Ev::Frame { pipeline });
+            return;
+        }
         let det_dev =
             self.groups[pipeline][0].cfg.device;
         let arrive_t = self.transfer_time(src, det_dev, det_bytes);
@@ -1001,6 +1317,13 @@ impl Simulator {
             self.push(self.drift.params.check_period_ms, Ev::DriftCheck);
         }
         self.push(TICK_MS, Ev::Tick);
+        // Injected fault schedule (empty unless faults are armed, so the
+        // default event stream — and seq numbering — is untouched).
+        let fault_events = std::mem::take(&mut self.faults);
+        for &(t, fe) in &fault_events {
+            self.push(t, Ev::Fault(fe));
+        }
+        self.faults = fault_events;
 
         let horizon = self.sc.cfg.duration_ms;
         loop {
@@ -1033,7 +1356,11 @@ impl Simulator {
                     self.exec_done(pipeline, model, binding, queries)
                 }
                 Ev::Reschedule => {
-                    self.reschedule();
+                    // A controller outage skips the round's body but keeps
+                    // the clock re-arming: the data plane runs open-loop.
+                    if self.outage_depth == 0 {
+                        self.reschedule();
+                    }
                     self.push(self.now + SCHEDULING_PERIOD_MS, Ev::Reschedule);
                 }
                 Ev::AutoScale => {
@@ -1041,10 +1368,13 @@ impl Simulator {
                     self.push(self.now + AUTOSCALE_PERIOD_MS, Ev::AutoScale);
                 }
                 Ev::DriftCheck => {
-                    self.drift_check();
+                    if self.outage_depth == 0 {
+                        self.drift_check();
+                    }
                     let period = self.drift.params.check_period_ms;
                     self.push(self.now + period, Ev::DriftCheck);
                 }
+                Ev::Fault(fe) => self.on_fault_event(fe),
                 Ev::Tick => {
                     self.metrics.timeline.push((
                         self.minute_workload / 60.0,
@@ -1299,6 +1629,65 @@ mod tests {
             "migration reverted the autoscaled clone"
         );
         assert_eq!(sim.groups[0][0].epoch, epoch, "group was redeployed");
+    }
+
+    #[test]
+    fn device_crash_losses_are_accounted_exactly() {
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        // Crash source device 1 for 15 s mid-run: frames captured during
+        // the window are lost at birth; any in-flight batches die too.
+        sim.set_fault_plan(FaultPlan {
+            events: vec![
+                (10_000.0, FaultEv::DeviceCrash { device: 1 }),
+                (25_000.0, FaultEv::DeviceRecover { device: 1 }),
+            ],
+        });
+        sim.enable_invariants();
+        let m = sim.run();
+        let r = sim.take_invariant_report().unwrap();
+        assert!(r.ok(), "{:?}", r.violations);
+        assert!(m.lost_to_fault > 0, "crashed source device lost nothing");
+        assert_eq!(m.lost_to_fault, r.lost_to_fault);
+        assert!(m.on_time > 0, "survivors produced nothing");
+    }
+
+    #[test]
+    fn straggler_outage_and_freeze_keep_conservation() {
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        sim.set_fault_plan(FaultPlan {
+            events: vec![
+                (5_000.0, FaultEv::TelemetryFreezeStart),
+                (8_000.0, FaultEv::StragglerStart { device: 0, gpu: 0, factor: 3.0 }),
+                (12_000.0, FaultEv::ControllerOutageStart),
+                (20_000.0, FaultEv::StragglerEnd { device: 0, gpu: 0, factor: 3.0 }),
+                (28_000.0, FaultEv::ControllerOutageEnd),
+                (30_000.0, FaultEv::TelemetryFreezeEnd),
+            ],
+        });
+        sim.enable_invariants();
+        let m = sim.run();
+        let r = sim.take_invariant_report().unwrap();
+        assert!(r.ok(), "{:?}", r.violations);
+        // None of these faults destroy work — only slow or mislead.
+        assert_eq!(m.lost_to_fault, 0);
+        assert!(m.on_time > 0);
+    }
+
+    #[test]
+    fn fault_storm_runs_are_deterministic() {
+        let mut cfg = smoke_cfg();
+        cfg.faults = 4;
+        let sc1 = Scenario::build(cfg.clone());
+        let sc2 = Scenario::build(cfg);
+        let a = crate::sim::run(&sc1, SchedulerKind::OctopInf);
+        let b = crate::sim::run(&sc2, SchedulerKind::OctopInf);
+        assert_eq!(a.on_time, b.on_time);
+        assert_eq!(a.late, b.late);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.lost_to_fault, b.lost_to_fault);
+        assert_eq!(a.timeline, b.timeline);
     }
 
     #[test]

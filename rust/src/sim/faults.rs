@@ -1,0 +1,213 @@
+//! Deterministic fault injection: seeded system-level failures woven into
+//! the simulator's event heap.
+//!
+//! The fuzz families perturb the *workload* (flash crowds, blackouts,
+//! churn); this module perturbs the *system*. A [`FaultPlan`] — sampled
+//! from the same repro seed that drives everything else — schedules typed
+//! [`FaultEv`]s:
+//!
+//! - **device crash / recover**: in-flight batches on the dead device are
+//!   lost (accounted as `lost_to_fault`, never silently vanished); queued
+//!   queries are dropped or survive for re-routing per [`CrashPolicy`].
+//! - **GPU straggler**: a per-GPU latency multiplier window that composes
+//!   multiplicatively with the interference model.
+//! - **controller outage**: replan / drift-check bodies are skipped while
+//!   the window is open — the data plane runs open-loop on the stale plan.
+//! - **telemetry freeze**: the drift detector and CWD see rate/bandwidth
+//!   snapshots frozen at fault start, so they must plan against lies.
+//!
+//! Everything is derived from `seed ^ FAULT_PLAN_TAG`, so a repro string
+//! carrying `:faults=M` replays the exact same storm byte-for-byte.
+
+use crate::cluster::Cluster;
+use crate::util::Rng;
+use crate::Ms;
+
+/// Stream tag for fault-plan sampling (disjoint from the engine, fuzz
+/// sampler, and trace stream tags).
+pub const FAULT_PLAN_TAG: u64 = 0xFA_117_5EED;
+
+/// What happens to a crashed device's queued queries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPolicy {
+    /// The queue dies with the device; every queued query is accounted as
+    /// `lost_to_fault` at crash time.
+    Drop,
+    /// The logical stage queue survives: recovery replanning can migrate
+    /// the group (queue and all) to a survivor, or the queue resumes in
+    /// place when the device comes back.
+    Reroute,
+}
+
+impl CrashPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            CrashPolicy::Drop => "drop",
+            CrashPolicy::Reroute => "reroute",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CrashPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "drop" => Some(CrashPolicy::Drop),
+            "reroute" => Some(CrashPolicy::Reroute),
+            _ => None,
+        }
+    }
+}
+
+impl Default for CrashPolicy {
+    fn default() -> Self {
+        CrashPolicy::Reroute
+    }
+}
+
+/// A typed fault event. Faults come in start/end pairs sharing one
+/// sampled window; an end event whose start never fired (or vice versa)
+/// is a no-op, so windows may extend past the horizon safely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEv {
+    DeviceCrash { device: usize },
+    DeviceRecover { device: usize },
+    StragglerStart { device: usize, gpu: usize, factor: f64 },
+    StragglerEnd { device: usize, gpu: usize, factor: f64 },
+    ControllerOutageStart,
+    ControllerOutageEnd,
+    TelemetryFreezeStart,
+    TelemetryFreezeEnd,
+}
+
+impl FaultEv {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultEv::DeviceCrash { .. } => "device_crash",
+            FaultEv::DeviceRecover { .. } => "device_recover",
+            FaultEv::StragglerStart { .. } => "straggler_start",
+            FaultEv::StragglerEnd { .. } => "straggler_end",
+            FaultEv::ControllerOutageStart => "controller_outage_start",
+            FaultEv::ControllerOutageEnd => "controller_outage_end",
+            FaultEv::TelemetryFreezeStart => "telemetry_freeze_start",
+            FaultEv::TelemetryFreezeEnd => "telemetry_freeze_end",
+        }
+    }
+}
+
+/// A deterministic schedule of fault events, sorted by time.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub events: Vec<(Ms, FaultEv)>,
+}
+
+impl FaultPlan {
+    /// Sample `n` fault windows over `[0, horizon_ms)`.
+    ///
+    /// Crashes target only the first `hot_devices` edge devices (the ones
+    /// hosting cameras, hence the only non-server devices placement ever
+    /// uses); the server never crashes — a headless cluster has no
+    /// survivors to degrade onto. Stragglers may hit any GPU, including
+    /// the server's.
+    pub fn sample(
+        seed: u64,
+        n: u32,
+        horizon_ms: Ms,
+        cluster: &Cluster,
+        hot_devices: usize,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ FAULT_PLAN_TAG);
+        let hot = hot_devices.min(cluster.devices.len().saturating_sub(1)).max(1);
+        let mut events = Vec::with_capacity(2 * n as usize);
+        for _ in 0..n {
+            let start = rng.range(0.05, 0.70) * horizon_ms;
+            let end = start + rng.range(0.05, 0.35) * horizon_ms;
+            match rng.below(4) {
+                0 => {
+                    let device = 1 + rng.below(hot);
+                    events.push((start, FaultEv::DeviceCrash { device }));
+                    events.push((end, FaultEv::DeviceRecover { device }));
+                }
+                1 => {
+                    let device = rng.below(cluster.devices.len());
+                    let gpu = rng.below(cluster.device(device).gpus.len().max(1));
+                    let factor = rng.range(1.5, 4.0);
+                    events.push((start, FaultEv::StragglerStart { device, gpu, factor }));
+                    events.push((end, FaultEv::StragglerEnd { device, gpu, factor }));
+                }
+                2 => {
+                    events.push((start, FaultEv::ControllerOutageStart));
+                    events.push((end, FaultEv::ControllerOutageEnd));
+                }
+                _ => {
+                    events.push((start, FaultEv::TelemetryFreezeStart));
+                    events.push((end, FaultEv::TelemetryFreezeEnd));
+                }
+            }
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let c = Cluster::paper_testbed();
+        let a = FaultPlan::sample(77, 6, 30_000.0, &c, 4);
+        let b = FaultPlan::sample(77, 6, 30_000.0, &c, 4);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+            assert_eq!(x.1, y.1);
+        }
+        let d = FaultPlan::sample(78, 6, 30_000.0, &c, 4);
+        assert!(a.events.iter().zip(&d.events).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn windows_are_paired_sorted_and_in_range() {
+        let c = Cluster::paper_testbed();
+        let plan = FaultPlan::sample(1234, 16, 60_000.0, &c, 9);
+        assert_eq!(plan.len(), 32);
+        let mut starts = 0usize;
+        let mut ends = 0usize;
+        for w in plan.events.windows(2) {
+            assert!(w[0].0 <= w[1].0, "events not sorted");
+        }
+        for (t, ev) in &plan.events {
+            assert!(*t >= 0.0);
+            match ev {
+                FaultEv::DeviceCrash { device } => {
+                    assert!((1..=9).contains(device), "crash hit device {device}");
+                    starts += 1;
+                }
+                FaultEv::StragglerStart { factor, .. } => {
+                    assert!((1.5..=4.0).contains(factor));
+                    starts += 1;
+                }
+                FaultEv::ControllerOutageStart | FaultEv::TelemetryFreezeStart => starts += 1,
+                _ => ends += 1,
+            }
+        }
+        assert_eq!(starts, 16);
+        assert_eq!(ends, 16);
+    }
+
+    #[test]
+    fn crash_policy_parse_roundtrip() {
+        for p in [CrashPolicy::Drop, CrashPolicy::Reroute] {
+            assert_eq!(CrashPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(CrashPolicy::parse("explode"), None);
+        assert_eq!(CrashPolicy::default(), CrashPolicy::Reroute);
+    }
+}

@@ -12,9 +12,12 @@
 //!
 //! 1. **Conservation** — every admitted query terminates exactly once:
 //!    completed at a sink, consumed by the router at a non-sink stage
-//!    (fanning out into child queries, themselves created-counted), or
-//!    dropped — or it is still in flight (queued / executing / in
-//!    transit) when the horizon cuts the run.
+//!    (fanning out into child queries, themselves created-counted),
+//!    dropped, or destroyed by an injected fault (`lost_to_fault`:
+//!    in-flight batches on a crashed device, queues lost under
+//!    `CrashPolicy::Drop`, frames from a dead source) — or it is still in
+//!    flight (queued / executing / in transit) when the horizon cuts the
+//!    run. A fault may destroy work, but never unaccountably.
 //! 2. **Monotone clock** — processed event timestamps are finite and
 //!    non-decreasing. (Causality of link transfers is subsumed: an arrival
 //!    pushed into the past would pop out of order.)
@@ -56,6 +59,7 @@ pub struct InvariantChecker {
     objects_total: u64,
     created: u64,
     dropped: u64,
+    lost_to_fault: u64,
     routed: u64,
     vanished: u64,
     completed_queries: u64,
@@ -128,6 +132,14 @@ impl InvariantChecker {
     #[inline]
     pub fn on_drop(&mut self, n: u64) {
         self.dropped += n;
+    }
+
+    /// `n` queries were destroyed by an injected fault (crashed device's
+    /// in-flight batch, a queue lost under `CrashPolicy::Drop`, a frame
+    /// captured while its source device was down).
+    #[inline]
+    pub fn on_lost(&mut self, n: u64) {
+        self.lost_to_fault += n;
     }
 
     /// A batch of `len` queries was dispatched at configured max `max`.
@@ -310,13 +322,20 @@ impl InvariantChecker {
     /// running batch, or in transit when the horizon was reached.
     pub fn finish(&mut self, in_flight: u64, metrics: &RunMetrics) {
         self.in_flight = in_flight;
-        let accounted =
-            self.completed_queries + self.routed + self.dropped + in_flight;
+        let accounted = self.completed_queries
+            + self.routed
+            + self.dropped
+            + self.lost_to_fault
+            + in_flight;
         if accounted != self.created {
             self.violation(format!(
                 "conservation: created {} != completed {} + routed {} + \
-                 dropped {} + in-flight {}",
-                self.created, self.completed_queries, self.routed, self.dropped,
+                 dropped {} + lost-to-fault {} + in-flight {}",
+                self.created,
+                self.completed_queries,
+                self.routed,
+                self.dropped,
+                self.lost_to_fault,
                 in_flight
             ));
         }
@@ -324,6 +343,12 @@ impl InvariantChecker {
             self.violation(format!(
                 "metrics dropped {} != engine dropped {}",
                 metrics.dropped, self.dropped
+            ));
+        }
+        if metrics.lost_to_fault != self.lost_to_fault {
+            self.violation(format!(
+                "metrics lost-to-fault {} != engine lost-to-fault {}",
+                metrics.lost_to_fault, self.lost_to_fault
             ));
         }
         if metrics.completed() != self.completed_objects {
@@ -350,6 +375,7 @@ impl InvariantChecker {
             objects_total: self.objects_total,
             created: self.created,
             dropped: self.dropped,
+            lost_to_fault: self.lost_to_fault,
             routed: self.routed,
             vanished: self.vanished,
             completed_queries: self.completed_queries,
@@ -374,6 +400,8 @@ pub struct InvariantReport {
     pub objects_total: u64,
     pub created: u64,
     pub dropped: u64,
+    /// Queries destroyed by injected faults — conservation's fault term.
+    pub lost_to_fault: u64,
     /// Queries consumed by the router at non-sink stages.
     pub routed: u64,
     /// Objects lost to the unrouted residue (routing fractions < 1).
@@ -406,7 +434,7 @@ impl InvariantReport {
     pub fn summary(&self) -> String {
         format!(
             "events={} frames={} objects={} created={} done={} routed={} \
-             dropped={} unrouted={} in-flight={} violations={}",
+             dropped={} lost={} unrouted={} in-flight={} violations={}",
             self.events,
             self.frames,
             self.objects_total,
@@ -414,6 +442,7 @@ impl InvariantReport {
             self.completed_queries,
             self.routed,
             self.dropped,
+            self.lost_to_fault,
             self.vanished,
             self.in_flight,
             self.violations.len() as u64 + self.suppressed,
@@ -462,6 +491,40 @@ mod tests {
         let r = c.into_report();
         assert!(!r.ok());
         assert!(r.violations[0].contains("conservation"), "{}", r.violations[0]);
+    }
+
+    #[test]
+    fn fault_losses_balance_conservation() {
+        let mut c = InvariantChecker::new();
+        c.on_frame(1);
+        c.on_frame(1);
+        c.on_sink(10.0, 1, true, 200.0);
+        c.on_lost(1); // the other query died with its device
+        let mut m = RunMetrics::new(1000.0);
+        m.record(crate::metrics::Outcome::OnTime, 10.0);
+        m.lost_to_fault = 1;
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.lost_to_fault, 1);
+    }
+
+    #[test]
+    fn unaccounted_fault_loss_is_flagged() {
+        // Engine lost a query to a fault but the metrics side never heard:
+        // the reconciliation must trip even though conservation balances.
+        let mut c = InvariantChecker::new();
+        c.on_frame(1);
+        c.on_lost(1);
+        let m = RunMetrics::new(1000.0); // lost_to_fault left at 0
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(!r.ok());
+        assert!(
+            r.violations.iter().any(|v| v.contains("lost-to-fault")),
+            "{:?}",
+            r.violations
+        );
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //! identical mechanics.
 
 mod engine;
+pub mod faults;
 pub mod invariants;
 mod link;
 pub mod scenario;
 
 pub use engine::{InterferenceModel, Simulator};
+pub use faults::{CrashPolicy, FaultEv, FaultPlan};
 pub use invariants::{InvariantChecker, InvariantReport};
 pub use link::FifoLink;
 pub use scenario::{

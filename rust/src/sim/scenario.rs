@@ -121,9 +121,18 @@ pub enum FuzzClass {
     SkewedFanout,
     /// Two or more of the above composed.
     Mixed,
+    /// A base workload family (derived from the same seed) composed with
+    /// a seeded [`FaultPlan`](crate::sim::faults::FaultPlan): device
+    /// crashes, GPU stragglers, controller outages, telemetry freezes.
+    FaultStorm,
 }
 
 impl FuzzClass {
+    /// The seven pure *workload* families the sampler draws from.
+    /// [`FuzzClass::FaultStorm`] is deliberately not in this array: it is
+    /// an orthogonal axis layered onto a base family by
+    /// [`FuzzSpec::sample_storm`] or a `:faults=M` repro modifier, so
+    /// adding it here would re-roll every existing corpus seed.
     pub const ALL: [FuzzClass; 7] = [
         FuzzClass::FlashCrowd,
         FuzzClass::DiurnalShift,
@@ -143,6 +152,7 @@ impl FuzzClass {
             FuzzClass::TightSlo => "tight_slo",
             FuzzClass::SkewedFanout => "skewed_fanout",
             FuzzClass::Mixed => "mixed",
+            FuzzClass::FaultStorm => "fault_storm",
         }
     }
 }
@@ -160,6 +170,8 @@ pub struct FuzzSpec {
 /// Stream tag separating spec sampling from scenario mutation draws.
 const FUZZ_SAMPLE_TAG: u64 = 0xFAB1_0FF5;
 const FUZZ_MUTATE_TAG: u64 = 0x5EED_CAFE;
+/// Stream tag for the storm axis (fault count + ordering seed draws).
+const FUZZ_STORM_TAG: u64 = 0x57AB_F417;
 
 impl FuzzSpec {
     /// Sample a structurally-valid spec from `seed` (total function: every
@@ -196,34 +208,79 @@ impl FuzzSpec {
         FuzzSpec { seed, class, cfg }
     }
 
-    /// One-line repro string; feed back through [`FuzzSpec::from_repro`]
-    /// (or `octopinf fuzz --repro <string>`) to replay deterministically.
-    /// A non-default replan mode is part of the repro (a drift-mode
-    /// failure must not silently replay as periodic).
-    pub fn repro(&self) -> String {
-        match self.cfg.replan {
-            ReplanMode::Periodic => format!("fuzz:v1:seed={}", self.seed),
-            mode => format!("fuzz:v1:seed={}:replan={}", self.seed, mode.label()),
+    /// Sample the eighth family: a base workload spec from the same seed
+    /// with a fault storm layered on top (and, half the time, a non-zero
+    /// same-time event ordering seed, so storms also exercise the
+    /// permutation axis).
+    pub fn sample_storm(seed: u64) -> FuzzSpec {
+        let mut spec = FuzzSpec::sample(seed);
+        let mut rng = Rng::new(seed ^ FUZZ_STORM_TAG);
+        spec.class = FuzzClass::FaultStorm;
+        spec.cfg.faults = 1 + rng.below(4) as u32;
+        if rng.chance(0.5) {
+            spec.cfg.order_seed = rng.next_u64();
         }
+        spec
     }
 
-    /// Parse a repro string back into the identical spec.
+    /// One-line repro string; feed back through [`FuzzSpec::from_repro`]
+    /// (or `octopinf fuzz --repro <string>`) to replay deterministically.
+    /// Every non-default axis is part of the repro — a drift-mode,
+    /// fault-storm, or permuted-ordering failure must not silently replay
+    /// without it. Grammar:
+    /// `fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K]`.
+    pub fn repro(&self) -> String {
+        let mut s = format!("fuzz:v1:seed={}", self.seed);
+        if self.cfg.replan != ReplanMode::Periodic {
+            s.push_str(&format!(":replan={}", self.cfg.replan.label()));
+        }
+        if self.cfg.faults > 0 {
+            s.push_str(&format!(":faults={}", self.cfg.faults));
+        }
+        if self.cfg.order_seed != 0 {
+            s.push_str(&format!(":order={}", self.cfg.order_seed));
+        }
+        s
+    }
+
+    /// Parse a repro string back into the identical spec. Unknown
+    /// modifiers are rejected (a typo must fail loudly, not replay the
+    /// wrong scenario).
     pub fn from_repro(s: &str) -> Option<FuzzSpec> {
         let rest = s.trim().strip_prefix("fuzz:v1:seed=")?;
-        let (seed, mode) = match rest.split_once(':') {
-            None => (rest, ReplanMode::Periodic),
-            Some((seed, modifier)) => {
-                (seed, ReplanMode::parse(modifier.strip_prefix("replan=")?)?)
+        let mut parts = rest.split(':');
+        let seed = parts.next()?.parse::<u64>().ok()?;
+        let mut spec = FuzzSpec::sample(seed);
+        for part in parts {
+            let (key, val) = part.split_once('=')?;
+            match key {
+                "replan" => spec.cfg.replan = ReplanMode::parse(val)?,
+                "faults" => {
+                    spec.cfg.faults = val.parse::<u32>().ok()?;
+                    if spec.cfg.faults > 0 {
+                        spec.class = FuzzClass::FaultStorm;
+                    }
+                }
+                "order" => spec.cfg.order_seed = val.parse::<u64>().ok()?,
+                _ => return None,
             }
-        };
-        let mut spec = FuzzSpec::sample(seed.parse::<u64>().ok()?);
-        spec.cfg.replan = mode;
+        }
+        spec.cfg.validate().ok()?;
         Some(spec)
     }
 
     /// Instantiate the scenario: the standard deployment for `cfg`, then
     /// the class-specific adversarial mutation.
     pub fn build(&self) -> Scenario {
+        if self.class == FuzzClass::FaultStorm {
+            // Storms compose with the base workload family the same seed
+            // samples; the fault windows themselves ride into the engine
+            // on `cfg.faults`. `sample` never returns FaultStorm, so this
+            // recursion terminates after one step.
+            let mut base = self.clone();
+            base.class = FuzzSpec::sample(self.seed).class;
+            return base.build();
+        }
         let mut sc = Scenario::build(self.cfg.clone());
         let mut rng = Rng::new(self.seed ^ FUZZ_MUTATE_TAG);
         match self.class {
@@ -240,6 +297,7 @@ impl FuzzSpec {
                     tight_slo(&mut sc, &mut rng);
                 }
             }
+            FuzzClass::FaultStorm => unreachable!("delegated to base family"),
         }
         for p in &sc.pipelines {
             debug_assert!(p.validate().is_ok(), "{}", p.name);
@@ -506,6 +564,51 @@ mod tests {
         assert_eq!(bare.cfg.replan, ReplanMode::Periodic);
         assert!(FuzzSpec::from_repro("fuzz:v1:seed=9:replan=bogus").is_none());
         assert!(FuzzSpec::from_repro("fuzz:v1:seed=9:bogus=drift").is_none());
+    }
+
+    #[test]
+    fn repro_string_carries_faults_and_order() {
+        let mut spec = FuzzSpec::sample(11);
+        spec.cfg.faults = 3;
+        spec.cfg.order_seed = 77;
+        assert_eq!(spec.repro(), "fuzz:v1:seed=11:faults=3:order=77");
+        let back = FuzzSpec::from_repro(&spec.repro()).unwrap();
+        assert_eq!(back.cfg.faults, 3);
+        assert_eq!(back.cfg.order_seed, 77);
+        assert_eq!(back.class, FuzzClass::FaultStorm);
+        // Modifier order is free on input; unknown keys still fail.
+        let alt = FuzzSpec::from_repro("fuzz:v1:seed=11:order=77:faults=3:replan=drift")
+            .unwrap();
+        assert_eq!(alt.cfg.faults, 3);
+        assert_eq!(alt.cfg.order_seed, 77);
+        assert_eq!(alt.cfg.replan, ReplanMode::Drift);
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=11:faults=nope").is_none());
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=11:faults=3:bogus=1").is_none());
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=11:faults=900").is_none());
+    }
+
+    #[test]
+    fn storm_specs_roundtrip_and_compose_a_base_family() {
+        let mut saw_order = false;
+        for seed in 0..24u64 {
+            let a = FuzzSpec::sample_storm(seed);
+            assert_eq!(a.class, FuzzClass::FaultStorm);
+            assert!(a.cfg.faults >= 1 && a.cfg.faults <= 4, "seed {seed}");
+            saw_order |= a.cfg.order_seed != 0;
+            let b = FuzzSpec::from_repro(&a.repro()).expect("storm repro parses");
+            assert_eq!(b.class, FuzzClass::FaultStorm);
+            assert_eq!(a.cfg.faults, b.cfg.faults);
+            assert_eq!(a.cfg.order_seed, b.cfg.order_seed);
+            // The built scenario is the base family's (storms perturb the
+            // system, not the workload construction).
+            let base = FuzzSpec::sample(seed);
+            let (sa, sb) = (a.build(), base.build());
+            assert_eq!(sa.pipelines.len(), sb.pipelines.len(), "seed {seed}");
+            for (pa, pb) in sa.pipelines.iter().zip(&sb.pipelines) {
+                assert_eq!(pa.slo_ms, pb.slo_ms, "seed {seed}");
+            }
+        }
+        assert!(saw_order, "no storm sampled a non-zero ordering seed");
     }
 
     #[test]

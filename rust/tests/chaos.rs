@@ -1,0 +1,220 @@
+//! Fault-injection subsystem: acceptance tests.
+//!
+//! The storms here are the PR's contract: failure-aware recovery
+//! (crash-edge replanning, post-outage catch-up) must not lose to running
+//! open-loop through the same faults; every storm must close the
+//! fault-aware conservation census (`admitted == sink + routed + dropped +
+//! lost_to_fault + in_flight`) under the invariant engine; the same repro
+//! must be byte-identical at any job count and under any same-time event
+//! permutation seed; and a fault that touches nothing must change nothing.
+
+use octopinf::coordinator::{ReplanMode, SchedulerKind};
+use octopinf::experiments::chaos::{chaos_comparison, storm_specs};
+use octopinf::metrics::RunMetrics;
+use octopinf::sim::{
+    preset, run_checked, CrashPolicy, FaultEv, FaultPlan, FuzzSpec, Scenario,
+    Simulator,
+};
+use octopinf::util::prop::{check, forall};
+
+/// Root seed for the chaos sweeps (distinct from the conformance and
+/// drift corpora so the three suites don't share scenarios).
+const CHAOS_SEED0: u64 = 0xC4A0_5EED;
+
+/// Mirror of the engine's fault-plan sampling for a fuzz spec: how many
+/// device-crash windows this storm actually schedules.
+fn crash_count(spec: &FuzzSpec) -> usize {
+    let sc = spec.build();
+    FaultPlan::sample(
+        sc.cfg.seed,
+        sc.cfg.faults,
+        sc.cfg.duration_ms,
+        &sc.cluster,
+        sc.cfg.n_sources,
+    )
+    .events
+    .iter()
+    .filter(|(_, e)| matches!(e, FaultEv::DeviceCrash { .. }))
+    .count()
+}
+
+#[test]
+fn recovery_replanning_beats_open_loop_on_fault_storms() {
+    // Same storms, recovery on vs off, invariants armed in every run.
+    // Periodic mode gives the cleanest contrast: the 6-minute replan clock
+    // never fires inside a fuzz horizon, so the no-recovery arm runs its
+    // whole storm on the initial plan and only fault-edge replanning
+    // separates the arms.
+    let n = 6;
+    let cmps = chaos_comparison(CHAOS_SEED0, n, 0, ReplanMode::Periodic);
+    assert_eq!(cmps.len(), SchedulerKind::all_main().len());
+    for c in &cmps {
+        assert_eq!(
+            c.violations,
+            0,
+            "{}: invariant violations under fault storms",
+            c.kind.label()
+        );
+        assert_eq!(c.scenarios, n);
+    }
+    let oct = cmps
+        .iter()
+        .find(|c| c.kind == SchedulerKind::OctopInf)
+        .unwrap();
+    assert!(
+        oct.recovery.attainment() >= oct.no_recovery.attainment(),
+        "recovery {:.4} must not lose to open-loop {:.4} (on_time {} vs {})",
+        oct.recovery.attainment(),
+        oct.no_recovery.attainment(),
+        oct.recovery.on_time,
+        oct.no_recovery.on_time,
+    );
+    // If any storm crashes a device, frames captured during the window are
+    // destroyed — the sweep must have accounted (not hidden) those losses.
+    let crashes: usize = storm_specs(CHAOS_SEED0, n).iter().map(crash_count).sum();
+    if crashes > 0 {
+        let lost: u64 = cmps
+            .iter()
+            .map(|c| c.recovery.lost_to_fault + c.no_recovery.lost_to_fault)
+            .sum();
+        assert!(
+            lost > 0,
+            "{crashes} crash windows sampled but no query was lost to a fault"
+        );
+        assert!(
+            oct.recovery.plans >= oct.no_recovery.plans,
+            "recovery installed fewer plans ({} vs {}) despite fault edges",
+            oct.recovery.plans,
+            oct.no_recovery.plans,
+        );
+    }
+}
+
+#[test]
+fn chaos_comparison_is_identical_at_any_job_count() {
+    let a = chaos_comparison(CHAOS_SEED0 ^ 0x10B5, 2, 1, ReplanMode::Periodic);
+    let b = chaos_comparison(CHAOS_SEED0 ^ 0x10B5, 2, 4, ReplanMode::Periodic);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.violations, y.violations);
+        for (p, q) in [(&x.recovery, &y.recovery), (&x.no_recovery, &y.no_recovery)]
+        {
+            assert_eq!(p.on_time, q.on_time, "{}: jobs changed on_time", x.kind.label());
+            assert_eq!(p.late, q.late);
+            assert_eq!(p.dropped, q.dropped);
+            assert_eq!(p.lost_to_fault, q.lost_to_fault);
+            assert_eq!(p.plans, q.plans);
+        }
+    }
+}
+
+/// Run one storm spec under OctopInf and return its metrics, asserting
+/// the invariant census closed.
+fn run_storm(spec: &FuzzSpec) -> RunMetrics {
+    let (m, r) = run_checked(&spec.build(), SchedulerKind::OctopInf);
+    assert!(
+        r.ok(),
+        "{}: invariant violations:\n{}",
+        spec.repro(),
+        r.violations.join("\n")
+    );
+    m
+}
+
+#[test]
+fn order_permutation_is_seeded_and_deterministic() {
+    // The `:order=K` axis permutes same-time event execution. Every
+    // permutation must hold conservation, and each seed must replay
+    // byte-identically — including K = 0, the legacy insertion order.
+    let base = FuzzSpec::sample_storm(CHAOS_SEED0 ^ 0x0DE2);
+    for order in [0u64, 0x1234_5678_9ABC_DEF0, 0xDEAD_BEEF_CAFE_F00D] {
+        let mut spec = base.clone();
+        spec.cfg.order_seed = order;
+        let m1 = run_storm(&spec);
+        let m2 = run_storm(&spec);
+        assert_eq!(m1.on_time, m2.on_time, "order={order}: on_time diverged");
+        assert_eq!(m1.late, m2.late, "order={order}: late diverged");
+        assert_eq!(m1.dropped, m2.dropped, "order={order}: dropped diverged");
+        assert_eq!(
+            m1.lost_to_fault, m2.lost_to_fault,
+            "order={order}: lost_to_fault diverged"
+        );
+        assert_eq!(m1.timeline, m2.timeline, "order={order}: timeline diverged");
+        assert!(
+            m1.on_time + m1.late > 0,
+            "order={order}: storm produced no completions"
+        );
+    }
+}
+
+#[test]
+fn random_storms_never_lose_a_query_unaccounted() {
+    // Property: for any storm — random base family, fault count, ordering
+    // seed, crash policy, recovery setting, scheduler — the armed checker
+    // closes its census. Conservation and the metrics reconciliation
+    // (including `lost_to_fault`) are all inside `report.ok()`.
+    let kinds = SchedulerKind::all_main();
+    forall(
+        CHAOS_SEED0 ^ 0xF0A1,
+        12,
+        |rng| {
+            let mut spec = FuzzSpec::sample_storm(rng.next_u64());
+            spec.cfg.faults = 1 + rng.below(6) as u32;
+            spec.cfg.order_seed = if rng.chance(0.5) { rng.next_u64() } else { 0 };
+            spec.cfg.recovery = rng.chance(0.5);
+            spec.cfg.crash_policy = if rng.chance(0.5) {
+                CrashPolicy::Drop
+            } else {
+                CrashPolicy::Reroute
+            };
+            (spec, kinds[rng.below(kinds.len())])
+        },
+        |(spec, kind)| {
+            let (_m, r) = run_checked(&spec.build(), *kind);
+            check(
+                r.ok(),
+                format!(
+                    "{} on {}: {}",
+                    spec.repro(),
+                    kind.label(),
+                    r.violations.join("; ")
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn idle_device_crash_and_recover_changes_nothing() {
+    // The smoke preset places sources on devices 1 and 2 only; device 5
+    // hosts nothing. Crashing and recovering it mid-run must be invisible:
+    // the crash-edge replan finds no affected pipeline and returns the old
+    // plan, the recover-side dispatch kick finds every healthy queue
+    // already scheduled, and no query is anywhere near the dead hardware.
+    let sc = Scenario::build(preset("smoke").unwrap());
+    let run = |plan: Option<FaultPlan>| {
+        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        if let Some(p) = plan {
+            sim.set_fault_plan(p);
+        }
+        sim.enable_invariants();
+        let m = sim.run();
+        let r = sim.take_invariant_report().unwrap();
+        assert!(r.ok(), "invariant violations:\n{}", r.violations.join("\n"));
+        m
+    };
+    let baseline = run(None);
+    let faulted = run(Some(FaultPlan {
+        events: vec![
+            (10_123.0, FaultEv::DeviceCrash { device: 5 }),
+            (24_777.0, FaultEv::DeviceRecover { device: 5 }),
+        ],
+    }));
+    assert!(baseline.on_time > 0, "smoke run produced no on-time work");
+    assert_eq!(faulted.lost_to_fault, 0, "idle-device crash destroyed work");
+    assert_eq!(faulted.on_time, baseline.on_time);
+    assert_eq!(faulted.late, baseline.late);
+    assert_eq!(faulted.dropped, baseline.dropped);
+    assert_eq!(faulted.timeline, baseline.timeline);
+}
