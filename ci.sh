@@ -33,6 +33,12 @@ cargo run --release --quiet -- fuzz --scenarios 8 --replan drift --seed0 "${FUZZ
 cargo run --release --quiet -- chaos --storms 3 --seed0 "${CHAOS_SEED0:-3298844397}"
 cargo run --release --quiet -- chaos --storms 3 --replan drift --seed0 "${CHAOS_SEED0:-3298844397}"
 
+# Front-door smoke: filter/isolation/sim-frontend comparisons with hard
+# acceptance bars (filter gain >= 3x, tenant-B attainment pinned above
+# the open-admission baseline, request conservation, fingerprint parity)
+# — any missed bar exits non-zero.
+cargo run --release --quiet -- frontdoor --quick
+
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   cargo bench --bench hotpath
   if [ ! -f BENCH_hotpath.baseline.json ]; then

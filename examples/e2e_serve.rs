@@ -40,9 +40,10 @@ fn main() -> Result<()> {
     // tight wait bound; crop models batch deeper (burstier arrivals fill
     // them fast — Insight 1).
     let mut cfgs = HashMap::new();
-    cfgs.insert("det_m".into(), ModelServeCfg { batch: 2, max_wait_ms: 20.0 });  // profile-driven: CPU det_m is super-linear in batch
-    cfgs.insert("classifier".into(), ModelServeCfg { batch: 8, max_wait_ms: 15.0 });
-    cfgs.insert("embedder".into(), ModelServeCfg { batch: 8, max_wait_ms: 15.0 });
+    // profile-driven: CPU det_m is super-linear in batch, so batch 2
+    cfgs.insert("det_m".into(), ModelServeCfg::new(2, 20.0));
+    cfgs.insert("classifier".into(), ModelServeCfg::new(8, 15.0));
+    cfgs.insert("embedder".into(), ModelServeCfg::new(8, 15.0));
 
     let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
@@ -64,6 +65,8 @@ fn main() -> Result<()> {
                 model: "det_m".into(),
                 data: (0..frame_px).map(|_| rng.f64() as f32).collect(),
                 slo_ms,
+                tenant: 0,
+                stream: 0,
                 submitted: Instant::now(),
             });
             for _ in 0..rng.poisson(5.0) {
@@ -74,6 +77,8 @@ fn main() -> Result<()> {
                     model: model.into(),
                     data: (0..crop_px).map(|_| rng.f64() as f32).collect(),
                     slo_ms,
+                    tenant: 0,
+                    stream: id,
                     submitted: Instant::now(),
                 });
             }

@@ -99,6 +99,13 @@ pub struct ExperimentConfig {
     pub recovery: bool,
     /// What happens to a crashed device's queued queries.
     pub crash_policy: CrashPolicy,
+    /// Content-aware frontend: per-pipeline frame-difference filtering in
+    /// the sim, so schedulers plan against the *filtered* workload (the
+    /// serving path's `FrontDoor` filter, modelled at the scene level).
+    pub frontend: bool,
+    /// Mean static-scene run length in frames for the frontend model
+    /// (larger = more consecutive near-identical frames get filtered).
+    pub scene_static_frames: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -117,6 +124,8 @@ impl Default for ExperimentConfig {
             order_seed: 0,
             recovery: true,
             crash_policy: CrashPolicy::Reroute,
+            frontend: false,
+            scene_static_frames: 120.0,
         }
     }
 }
@@ -173,6 +182,12 @@ impl ExperimentConfig {
             cfg.crash_policy = CrashPolicy::parse(v)
                 .ok_or_else(|| format!("unknown crash policy {v:?}"))?;
         }
+        if let Some(v) = raw.get_bool("experiment", "frontend") {
+            cfg.frontend = v;
+        }
+        if let Some(v) = raw.get_f64("experiment", "scene_static_frames") {
+            cfg.scene_static_frames = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -192,6 +207,12 @@ impl ExperimentConfig {
         }
         if self.faults > 64 {
             return Err(format!("faults {} not in 0..=64", self.faults));
+        }
+        if !self.scene_static_frames.is_finite() || self.scene_static_frames < 0.0 {
+            return Err(format!(
+                "scene_static_frames {} must be finite and >= 0",
+                self.scene_static_frames
+            ));
         }
         Ok(())
     }
@@ -269,6 +290,23 @@ mod tests {
             ExperimentConfig::from_text("[experiment]\ncrash_policy = explode\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn frontend_knobs_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert!(!d.frontend, "frontend defaults off");
+        assert_eq!(d.scene_static_frames, 120.0);
+        let cfg = ExperimentConfig::from_text(
+            "[experiment]\nfrontend = yes\nscene_static_frames = 240\n",
+        )
+        .unwrap();
+        assert!(cfg.frontend);
+        assert_eq!(cfg.scene_static_frames, 240.0);
+        assert!(ExperimentConfig::from_text(
+            "[experiment]\nscene_static_frames = -5\n"
+        )
+        .is_err());
     }
 
     #[test]

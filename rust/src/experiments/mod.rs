@@ -8,11 +8,16 @@
 
 pub mod chaos;
 pub mod drift;
+pub mod frontdoor;
 pub mod fuzz;
 pub mod runner;
 
 pub use chaos::{chaos_comparison, chaos_table, storm_specs, ChaosComparison};
 pub use drift::{drift_comparison, drift_table, FamilyComparison};
+pub use frontdoor::{
+    filter_comparison, frontdoor_outcome, isolation_comparison,
+    run_front_harness, FrontdoorOutcome, HarnessCfg, TenantLoad,
+};
 pub use fuzz::{
     conformance_round, conformance_round_mode, run_conformance,
     run_conformance_mode, ConformanceOutcome,

@@ -16,14 +16,16 @@ use octopinf::config::ExperimentConfig;
 use octopinf::coordinator::SchedulerKind;
 use octopinf::experiments;
 use octopinf::runtime::{default_artifacts_dir, Runtime};
-use octopinf::serving::{serve, ModelServeCfg, Request};
+use octopinf::serving::{
+    serve_front, FilterCfg, FrontDoorCfg, ModelServeCfg, Request,
+};
 use octopinf::sim::{run as sim_run, Scenario};
 use octopinf::util::cli::Args;
 use octopinf::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|serve> [options]
+const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|serve|frontdoor> [options]
   profile  [--reps 5] [--out artifacts/profiles.tsv]
-  simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke]
+  simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke|static]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
            [--seed 42] [--duration-min N] [--replan periodic|drift]
   figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
@@ -35,7 +37,45 @@ const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|s
   chaos    [--storms 8] [--seed0 3299893997] [--jobs N]
            [--replan periodic|drift] [--help]
            (recovery on/off across fault storms; see `chaos --help`)
-  serve    [--duration-s 10] [--fps 30] [--slo-ms 200]";
+  serve    [--duration-s 10] [--fps 30] [--slo-ms 200] [--shards 2]
+           [--tenants 1] [--tenant-rate R] [--filter on|off] [--help]
+  frontdoor [--quick] [--help]
+           (front-door evidence: filter gain, tenant isolation, sim
+            frontend conformance; non-zero exit if any bar is missed)";
+
+/// Serving knobs behind `octopinf serve` (satisfies `--help`).
+const SERVE_HELP: &str = "octopinf serve — real PJRT serving stack on synthetic camera traffic
+Client threads stream detector frames plus fanned-out crops through the
+production front door (sharded fair batchers -> bounded ring -> executor).
+
+options:
+  --duration-s S      traffic duration (default 10)
+  --fps N             frames per second (default 30)
+  --slo-ms MS         request SLO (default 200)
+  --shards N          batcher shards models hash across (default 2)
+  --tenants N         spread the synthetic clients over N tenant ids
+                      (default 1; >1 exercises weighted-fair dequeue)
+  --tenant-rate R     per-tenant admission rate, requests/s (default
+                      unlimited; excess answered `throttled` with a
+                      retry-after hint)
+  --filter on|off     content-aware frontend: frame-diff filter + result
+                      cache in front of admission (default off)";
+
+/// What `octopinf frontdoor` measures (satisfies `--help`).
+const FRONTDOOR_HELP: &str = "octopinf frontdoor — front-door isolation & filtering evidence
+Three deterministic comparisons, no PJRT required:
+  1. static-scene load, content filter off vs on (logical-clock harness
+     over the real FrontDoor): effective throughput must gain >= 3x at
+     no loss of SLO attainment;
+  2. two-tenant flash crowd, isolation off vs on: the steady tenant's
+     attainment must stay >= 0.9 isolated and the un-isolated baseline
+     must demonstrably collapse;
+  3. sim `static` scenario, frontend off vs on under the invariant
+     engine: identical workload fingerprint, zero violations.
+Exits non-zero (listing the missed bars) if any check fails.
+
+options:
+  --quick             smaller loads / shorter horizons (CI smoke)";
 
 /// Recovery-policy knobs behind `octopinf chaos` (satisfies `--help`).
 const CHAOS_HELP: &str = "octopinf chaos — fault-injection comparison
@@ -75,6 +115,7 @@ fn main() {
         "drift" => cmd_drift(&args),
         "chaos" => cmd_chaos(&args),
         "serve" => cmd_serve(&args),
+        "frontdoor" => cmd_frontdoor(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -144,6 +185,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     t.row(vec!["peak_memory(MB)".into(), fnum(m.peak_memory_mb, 0)]);
     t.row(vec!["mean_gpu_util".into(), fnum(m.mean_gpu_util, 3)]);
     t.row(vec!["dropped".into(), m.dropped.to_string()]);
+    t.row(vec!["filtered".into(), m.filtered.to_string()]);
     println!("{}", t.to_markdown());
     println!("\nlatency histogram: {}", m.latency_hist.sparkline());
     Ok(())
@@ -311,9 +353,24 @@ fn cmd_drift(args: &Args) -> Result<()> {
 
 /// Real serving demo: synthetic camera traffic through the PJRT stack.
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("{SERVE_HELP}");
+        return Ok(());
+    }
     let duration_s = args.get_f64("duration-s", 10.0);
     let fps = args.get_f64("fps", 30.0);
     let slo_ms = args.get_f64("slo-ms", 200.0);
+    let n_tenants = args.get_u64("tenants", 1).max(1) as u32;
+    let mut front = FrontDoorCfg::default();
+    front.shards = args.get_usize("shards", front.shards).max(1);
+    if let Some(r) = args.get("tenant-rate") {
+        front.tenants.rate_per_s = r.parse::<f64>()?;
+    }
+    match args.get_or("filter", "off") {
+        "on" => front.filter = Some(FilterCfg::default()),
+        "off" => {}
+        other => return Err(anyhow!("--filter {other:?} (expected on|off)")),
+    }
     let dir = default_artifacts_dir();
     if !Path::new(&dir).join("manifest.tsv").exists() {
         return Err(anyhow!("artifacts missing — run `make artifacts`"));
@@ -328,20 +385,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
 
     // Client thread: frames at `fps`, plus crops fanned out per frame.
+    // Frames round-robin across tenants; each tenant owns one camera
+    // stream (the filter's unit of state).
     let gen = std::thread::spawn(move || {
         let mut rng = octopinf::util::Rng::new(7);
         let frame_px = 128 * 128 * 3;
         let crop_px = 32 * 32 * 3;
         let n_frames = (duration_s * fps) as u64;
         let mut id = 0u64;
-        for _ in 0..n_frames {
+        for f in 0..n_frames {
             let t0 = std::time::Instant::now();
+            let tenant = (f % n_tenants as u64) as u32;
             id += 1;
             let _ = req_tx.send(Request {
                 id,
                 model: "det_m".into(),
                 data: (0..frame_px).map(|_| rng.f64() as f32).collect(),
                 slo_ms,
+                tenant,
+                stream: tenant as u64,
                 submitted: std::time::Instant::now(),
             });
             for _ in 0..rng.poisson(4.0) {
@@ -353,6 +415,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     model: model.into(),
                     data: (0..crop_px).map(|_| rng.f64() as f32).collect(),
                     slo_ms,
+                    tenant,
+                    stream: id,
                     submitted: std::time::Instant::now(),
                 });
             }
@@ -373,19 +437,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n
     });
 
-    let report = serve(&dir, &cfgs, req_rx, resp_tx)?;
+    let report = serve_front(&dir, &cfgs, front, req_rx, resp_tx)?;
     gen.join().unwrap();
     let delivered = drain.join().unwrap();
 
     let mut t = Table::new(vec!["metric", "value"]);
-    t.row(vec!["served".to_string(), report.served.to_string()]);
+    t.row(vec!["submitted".to_string(), report.submitted.to_string()]);
+    t.row(vec!["served".into(), report.served.to_string()]);
     t.row(vec!["delivered".into(), delivered.to_string()]);
     t.row(vec!["on_time".into(), report.on_time.to_string()]);
+    t.row(vec!["filtered".into(), report.filtered.to_string()]);
+    t.row(vec!["cache_hits".into(), report.cache_hits.to_string()]);
+    t.row(vec!["throttled".into(), report.throttled.to_string()]);
+    t.row(vec!["rejected".into(), report.rejected.to_string()]);
+    t.row(vec!["shed".into(), report.shed.to_string()]);
     t.row(vec!["slo_attainment".into(), fnum(report.slo_attainment(), 3)]);
     t.row(vec!["eff_thpt(req/s)".into(), fnum(report.effective_throughput(), 1)]);
     t.row(vec!["latency_p50(ms)".into(), fnum(report.latency.p50(), 2)]);
     t.row(vec!["latency_p95(ms)".into(), fnum(report.latency.p95(), 2)]);
     t.row(vec!["latency_p99(ms)".into(), fnum(report.latency.p99(), 2)]);
     println!("{}", t.to_markdown());
+    if n_tenants > 1 {
+        let mut tt = Table::new(vec![
+            "tenant", "submitted", "served", "on_time", "throttled", "attain",
+        ]);
+        for (id, l) in &report.per_tenant {
+            tt.row(vec![
+                id.to_string(),
+                l.submitted.to_string(),
+                l.served.to_string(),
+                l.on_time.to_string(),
+                l.throttled.to_string(),
+                fnum(l.attainment(), 3),
+            ]);
+        }
+        println!("\n{}", tt.to_markdown());
+    }
+    Ok(())
+}
+
+/// Front-door evidence run: filter gain, tenant isolation, and sim
+/// frontend conformance — exits non-zero when a bar is missed.
+fn cmd_frontdoor(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("{FRONTDOOR_HELP}");
+        return Ok(());
+    }
+    let out = experiments::frontdoor_outcome(args.flag("quick"));
+    println!("{}", out.table.to_markdown());
+    println!(
+        "\nfilter gain {:.2}x; tenant-B attainment {:.3} isolated vs {:.3} open",
+        out.filter_gain, out.iso_b, out.no_iso_b
+    );
+    if !out.pass {
+        return Err(anyhow!(
+            "front-door bars missed:\n  {}",
+            out.failures.join("\n  ")
+        ));
+    }
+    println!("all front-door bars met");
     Ok(())
 }

@@ -30,6 +30,11 @@ pub struct RunMetrics {
     /// `dropped` — these are system failures, not scheduling decisions —
     /// and reconciled exactly by the invariant engine.
     pub lost_to_fault: u64,
+    /// Work units answered by the content-aware frontend (frame-diff
+    /// filter / result cache) without touching the pipeline — on time by
+    /// construction and never admitted, so kept out of the latency
+    /// sketches; reconciled exactly by the invariant engine.
+    pub filtered: u64,
     /// Peak total GPU memory allocated, MB.
     pub peak_memory_mb: f64,
     /// Per-minute (workload objects/s, effective objects/s) timeline.
@@ -46,6 +51,7 @@ impl RunMetrics {
             late: 0,
             dropped: 0,
             lost_to_fault: 0,
+            filtered: 0,
             latency: QuantileSketch::new(),
             latency_hist: Histogram::new(0.0, 1000.0, 50),
             peak_memory_mb: 0.0,
@@ -76,21 +82,29 @@ impl RunMetrics {
         self.latency_hist.push_n(latency_ms, n);
     }
 
+    /// Record `n` work units the frontend answered from a previous result
+    /// (no pipeline admission, no engine work, no latency sample).
+    pub fn record_filtered(&mut self, n: u64) {
+        self.filtered += n;
+    }
+
     /// Completed queries (on-time + late) — the conservation-side
     /// complement of `dropped`, cross-checked by the invariant engine.
     pub fn completed(&self) -> u64 {
         self.on_time + self.late
     }
 
-    /// Effective throughput: on-time completions per second (objects/s).
+    /// Effective throughput: usefully-answered work units per second —
+    /// on-time completions plus frontend answers (which are instant).
     pub fn effective_throughput(&self) -> f64 {
-        self.on_time as f64 * 1000.0 / self.duration_ms
+        (self.on_time + self.filtered) as f64 * 1000.0 / self.duration_ms
     }
 
-    /// Total throughput: all completions per second (the gap to effective
+    /// Total throughput: all answers per second (the gap to effective
     /// is the paper's "wasted computation").
     pub fn total_throughput(&self) -> f64 {
-        (self.on_time + self.late) as f64 * 1000.0 / self.duration_ms
+        (self.on_time + self.late + self.filtered) as f64 * 1000.0
+            / self.duration_ms
     }
 
     /// Fraction of completions violating the SLO.
@@ -113,13 +127,14 @@ impl RunMetrics {
         }
     }
 
-    /// Completion rate vs all queries (completed + dropped).
+    /// Completion rate vs all answered-or-dropped work (frontend answers
+    /// count as completions — the client got a result).
     pub fn completion_rate(&self) -> f64 {
-        let all = self.on_time + self.late + self.dropped;
+        let all = self.on_time + self.late + self.dropped + self.filtered;
         if all == 0 {
             0.0
         } else {
-            (self.on_time + self.late) as f64 / all as f64
+            (self.on_time + self.late + self.filtered) as f64 / all as f64
         }
     }
 }
@@ -171,6 +186,19 @@ mod tests {
         assert_eq!(a.late, b.late);
         assert_eq!(a.latency.p50(), b.latency.p50());
         assert_eq!(a.latency_hist.total(), b.latency_hist.total());
+    }
+
+    #[test]
+    fn filtered_counts_toward_effective_but_not_latency() {
+        let mut m = RunMetrics::new(10_000.0);
+        m.record_n(Outcome::OnTime, 50.0, 10);
+        m.record_filtered(30);
+        assert_eq!(m.filtered, 30);
+        assert!((m.effective_throughput() - 4.0).abs() < 1e-9, "10+30 in 10 s");
+        assert!((m.total_throughput() - 4.0).abs() < 1e-9);
+        assert_eq!(m.latency.len(), 10, "filtered units have no latency");
+        assert_eq!(m.completed(), 10, "filtered is not an engine completion");
+        assert_eq!(m.completion_rate(), 1.0);
     }
 
     #[test]

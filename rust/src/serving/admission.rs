@@ -1,0 +1,256 @@
+//! Per-tenant admission control: token buckets at the front door.
+//!
+//! One tenant's flash crowd must not starve another tenant's SLO (He et
+//! al., "Adaptive Scheduling for Edge-Assisted DNN Serving"). Admission
+//! is the first half of that isolation — each tenant refills a private
+//! token bucket and a burst beyond it is throttled with a retry-after
+//! hint *before* it can occupy queue space. The second half, weighted-
+//! fair dequeue at batch assembly, lives in [`fair`](super::fair).
+
+use std::collections::HashMap;
+
+/// Tenants beyond this many distinct ids share one overflow bucket/lane
+/// (id [`OVERFLOW_TENANT`]) so an adversarial client cycling tenant ids
+/// cannot grow per-tenant state unboundedly.
+pub const MAX_TENANTS: usize = 1024;
+
+/// The shared overflow lane id for tenants past [`MAX_TENANTS`].
+pub const OVERFLOW_TENANT: u32 = u32::MAX;
+
+/// Classic token bucket over the serve session's ms clock.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last_ms: f64,
+}
+
+impl TokenBucket {
+    /// `rate_per_s` may be `f64::INFINITY` (never throttles); `burst` is
+    /// the bucket depth — the largest instantaneous spike admitted.
+    pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_ms: 0.0 }
+    }
+
+    fn refill(&mut self, now_ms: f64) {
+        if now_ms > self.last_ms {
+            if self.rate_per_s.is_infinite() {
+                self.tokens = self.burst;
+            } else {
+                self.tokens = (self.tokens
+                    + self.rate_per_s * (now_ms - self.last_ms) / 1e3)
+                    .min(self.burst);
+            }
+            self.last_ms = now_ms;
+        }
+    }
+
+    /// Take one token, or say how many ms until one accrues.
+    pub fn admit(&mut self, now_ms: f64) -> Result<(), f64> {
+        self.refill(now_ms);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else if self.rate_per_s <= 0.0 {
+            Err(f64::INFINITY)
+        } else {
+            Err(((1.0 - self.tokens) * 1e3 / self.rate_per_s).max(1.0))
+        }
+    }
+}
+
+/// Session-wide tenancy policy: isolation switch, default bucket shape,
+/// optional per-tenant rate overrides and fair-dequeue weights.
+#[derive(Clone, Debug)]
+pub struct TenantPolicy {
+    /// Off = no admission throttling and FIFO dequeue — the baseline the
+    /// `frontdoor` experiment compares against.
+    pub isolation: bool,
+    /// Default per-tenant admission rate (requests/s). Infinite by
+    /// default: isolation then still applies *fair dequeue*, but never
+    /// throttles at admission.
+    pub rate_per_s: f64,
+    /// Default bucket depth (largest admitted spike).
+    pub burst: f64,
+    /// Per-tenant `(rate_per_s, burst)` overrides.
+    pub overrides: HashMap<u32, (f64, f64)>,
+    /// Per-tenant fair-dequeue weights (default 1.0).
+    pub weights: HashMap<u32, f64>,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> TenantPolicy {
+        TenantPolicy {
+            isolation: true,
+            rate_per_s: f64::INFINITY,
+            burst: 64.0,
+            overrides: HashMap::new(),
+            weights: HashMap::new(),
+        }
+    }
+}
+
+impl TenantPolicy {
+    pub fn weight(&self, tenant: u32) -> f64 {
+        self.weights.get(&tenant).copied().unwrap_or(1.0).max(1e-6)
+    }
+
+    fn bucket(&self, tenant: u32) -> TokenBucket {
+        let (rate, burst) = self
+            .overrides
+            .get(&tenant)
+            .copied()
+            .unwrap_or((self.rate_per_s, self.burst));
+        TokenBucket::new(rate, burst)
+    }
+}
+
+/// Fold a raw tenant id onto its accounting/bucket lane: ids keep their
+/// identity up to [`MAX_TENANTS`] distinct tenants, then share overflow.
+pub fn fold_tenant(tenant: u32, known: usize) -> u32 {
+    if known >= MAX_TENANTS && tenant >= MAX_TENANTS as u32 {
+        OVERFLOW_TENANT
+    } else {
+        tenant
+    }
+}
+
+/// Stateful per-tenant admission: a lazily-built bucket per tenant lane.
+#[derive(Debug, Default)]
+pub struct TenantAdmission {
+    policy: TenantPolicy,
+    buckets: HashMap<u32, TokenBucket>,
+}
+
+impl TenantAdmission {
+    pub fn new(policy: TenantPolicy) -> TenantAdmission {
+        TenantAdmission { policy, buckets: HashMap::new() }
+    }
+
+    pub fn policy(&self) -> &TenantPolicy {
+        &self.policy
+    }
+
+    /// Map a request's tenant id onto its lane (identity or overflow).
+    pub fn lane(&self, tenant: u32) -> u32 {
+        if self.buckets.contains_key(&tenant) {
+            tenant
+        } else {
+            fold_tenant(tenant, self.buckets.len())
+        }
+    }
+
+    /// Admit or throttle one request; `Err(retry_ms)` when the tenant's
+    /// bucket is dry. With isolation off everything is admitted.
+    pub fn admit(&mut self, tenant: u32, now_ms: f64) -> Result<(), f64> {
+        if !self.policy.isolation {
+            return Ok(());
+        }
+        let lane = self.lane(tenant);
+        if !self.buckets.contains_key(&lane) {
+            let b = self.policy.bucket(lane);
+            self.buckets.insert(lane, b);
+        }
+        self.buckets.get_mut(&lane).unwrap().admit(now_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_admits_burst_then_throttles_at_rate() {
+        let mut b = TokenBucket::new(10.0, 4.0);
+        for _ in 0..4 {
+            assert!(b.admit(0.0).is_ok());
+        }
+        let retry = b.admit(0.0).unwrap_err();
+        assert!(retry >= 1.0 && retry <= 100.0, "{retry}");
+        // 10/s refills one token per 100 ms.
+        assert!(b.admit(50.0).is_err());
+        assert!(b.admit(101.0).is_ok());
+        assert!(b.admit(102.0).is_err(), "only one token accrued");
+    }
+
+    #[test]
+    fn infinite_rate_never_throttles() {
+        let mut b = TokenBucket::new(f64::INFINITY, 2.0);
+        for t in 0..100 {
+            assert!(b.admit(t as f64).is_ok());
+        }
+    }
+
+    #[test]
+    fn zero_rate_throttles_after_burst_forever() {
+        let mut b = TokenBucket::new(0.0, 1.0);
+        assert!(b.admit(0.0).is_ok());
+        assert_eq!(b.admit(1e9).unwrap_err(), f64::INFINITY);
+    }
+
+    #[test]
+    fn isolation_off_admits_everything() {
+        let policy = TenantPolicy {
+            isolation: false,
+            rate_per_s: 0.0,
+            burst: 1.0,
+            ..TenantPolicy::default()
+        };
+        let mut adm = TenantAdmission::new(policy);
+        for i in 0..50 {
+            assert!(adm.admit(7, i as f64).is_ok());
+        }
+    }
+
+    #[test]
+    fn per_tenant_buckets_are_independent() {
+        let policy = TenantPolicy {
+            rate_per_s: 0.0,
+            burst: 2.0,
+            ..TenantPolicy::default()
+        };
+        let mut adm = TenantAdmission::new(policy);
+        assert!(adm.admit(1, 0.0).is_ok());
+        assert!(adm.admit(1, 0.0).is_ok());
+        assert!(adm.admit(1, 0.0).is_err(), "tenant 1 dry");
+        assert!(adm.admit(2, 0.0).is_ok(), "tenant 2 unaffected");
+    }
+
+    #[test]
+    fn overrides_take_precedence() {
+        let mut policy = TenantPolicy::default();
+        policy.rate_per_s = 0.0;
+        policy.burst = 1.0;
+        policy.overrides.insert(9, (f64::INFINITY, 8.0));
+        let mut adm = TenantAdmission::new(policy);
+        assert!(adm.admit(1, 0.0).is_ok());
+        assert!(adm.admit(1, 0.0).is_err(), "default bucket binds");
+        for t in 0..20 {
+            assert!(adm.admit(9, t as f64).is_ok(), "override never throttles");
+        }
+    }
+
+    #[test]
+    fn tenant_ids_fold_to_overflow_past_the_cap() {
+        let policy = TenantPolicy {
+            rate_per_s: 0.0,
+            burst: 1.0,
+            ..TenantPolicy::default()
+        };
+        let mut adm = TenantAdmission::new(policy);
+        // Fill the table with MAX_TENANTS distinct small ids.
+        for t in 0..MAX_TENANTS as u32 {
+            let _ = adm.admit(t, 0.0);
+        }
+        assert_eq!(adm.buckets.len(), MAX_TENANTS);
+        // Large ids now share the overflow lane instead of growing state.
+        let _ = adm.admit(5_000_000, 0.0);
+        let _ = adm.admit(6_000_000, 0.0);
+        assert_eq!(adm.buckets.len(), MAX_TENANTS + 1);
+        assert_eq!(adm.lane(7_000_000), OVERFLOW_TENANT);
+        // Small already-known ids keep their identity.
+        assert_eq!(adm.lane(3), 3);
+    }
+}

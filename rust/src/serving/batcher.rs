@@ -39,8 +39,15 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Backpressure hint: milliseconds until the next scheduled release
-    /// frees queue space (0 when a full batch is already due).
+    /// frees queue space. With at least one full batch queued the head's
+    /// deadline is its *arrival* time — always in the past, which used to
+    /// make this return "retry after 0 ms" against a queue that is still
+    /// full. Space then frees only when the executor completes a release
+    /// cycle, so quote the wait bound (the time scale of one cycle).
     pub fn retry_after_ms(&self, now_ms: f64) -> f64 {
+        if self.queue.len() >= self.batch {
+            return self.max_wait_ms.max(1.0);
+        }
         self.next_deadline_ms()
             .map(|d| (d - now_ms).max(0.0))
             .unwrap_or(0.0)
@@ -65,9 +72,15 @@ impl<T> DynamicBatcher<T> {
         }
     }
 
-    /// Force-release whatever is queued (shutdown path).
+    /// Force-release queued work (shutdown path), at most one engine batch
+    /// per call — callers re-poll until empty. Draining the whole queue as
+    /// a single release used to hand `execute_padded` more rows than the
+    /// engine was compiled for (`n > batch` is an error there), failing
+    /// every leftover request at session close whenever the backlog
+    /// exceeded the configured batch.
     pub fn flush(&mut self) -> Option<Vec<T>> {
-        (!self.queue.is_empty()).then(|| self.take(self.queue.len()))
+        (!self.queue.is_empty())
+            .then(|| self.take(self.queue.len().min(self.batch)))
     }
 
     /// Absolute time (same clock as `push`/`poll`) when the pending queue
@@ -139,6 +152,34 @@ mod tests {
         b.push(2, 0.0);
         assert_eq!(b.flush().unwrap().len(), 2);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn flush_never_exceeds_the_engine_batch() {
+        // Regression: a 20-deep backlog at shutdown must drain as chunks
+        // of <= batch (the engine errors on n > batch), not one release.
+        let mut b = DynamicBatcher::new(8, 1000.0);
+        for i in 0..20 {
+            b.push(i, 0.0);
+        }
+        assert_eq!(b.flush().unwrap().len(), 8);
+        assert_eq!(b.flush().unwrap().len(), 8);
+        assert_eq!(b.flush().unwrap(), vec![16, 17, 18, 19]);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn full_queue_retry_hint_is_never_zero() {
+        // Regression: with a full batch queued the old hint quoted the
+        // head's arrival time — already in the past — so clients were told
+        // "retry after 0 ms" against a queue that stayed full.
+        let mut b = DynamicBatcher::bounded(4, 50.0, 8);
+        for i in 0..6 {
+            b.push(i, 0.0);
+        }
+        assert!(b.len() >= b.batch_size());
+        assert!(b.retry_after_ms(100.0) > 0.0);
+        assert_eq!(b.retry_after_ms(100.0), 50.0, "quotes the wait bound");
     }
 
     #[test]

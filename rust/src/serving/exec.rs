@@ -1,0 +1,175 @@
+//! Execution backend abstraction for the serving path.
+//!
+//! [`serve_with`](crate::serving::serve_with) drives any [`ExecBackend`]:
+//! the PJRT [`Runtime`] in production, or [`SyntheticExec`] — a
+//! deterministic in-process model that mirrors the engine's padding
+//! contract (`n > batch` is an error) — in tests and the stub-runtime
+//! front-door experiment. The abstraction is what makes the whole
+//! admission / batching / backpressure machinery testable without XLA.
+
+use std::collections::HashMap;
+
+use crate::anyhow;
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+
+/// What the executor needs from an inference engine: input width per
+/// sample (to assemble row-major batches) and padded batch execution.
+pub trait ExecBackend {
+    /// Elements per input row for `(model, batch)`; errors when the model
+    /// has no compiled artifact at that batch size.
+    fn per_in(&mut self, model: &str, batch: usize) -> Result<usize>;
+
+    /// Execute `n` real rows (`input.len() == n * per_in`) padded up to
+    /// `batch`; returns only the real rows' outputs. Must error when
+    /// `n > batch` — the engine was compiled for exactly `batch` rows.
+    fn execute_padded(
+        &mut self,
+        model: &str,
+        batch: usize,
+        n: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>>;
+}
+
+impl ExecBackend for Runtime {
+    fn per_in(&mut self, model: &str, batch: usize) -> Result<usize> {
+        Ok(self.engine(model, batch)?.meta.input_shape.iter().product())
+    }
+
+    fn execute_padded(
+        &mut self,
+        model: &str,
+        batch: usize,
+        n: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>> {
+        // Delegates to the inherent method (stub or PJRT variant).
+        Runtime::execute_padded(self, model, batch, n, input)
+    }
+}
+
+/// One synthetic model: fixed row widths plus a nominal per-batch service
+/// time (used by [`SyntheticExec::sleep`] and the logical-clock harness).
+#[derive(Clone, Debug)]
+pub struct SyntheticModel {
+    pub per_in: usize,
+    pub per_out: usize,
+    pub service_ms: f64,
+}
+
+/// Deterministic stand-in engine for tests and stub-runtime experiments.
+///
+/// Semantics mirror the PJRT runtime exactly where the serving path can
+/// observe them: unknown models error at `per_in` (admission-time
+/// rejection shape), and `execute_padded` errors on `n > batch` or a
+/// mis-sized input — so the shutdown-flush regression test exercises the
+/// same contract the real engine enforces.
+#[derive(Debug, Default)]
+pub struct SyntheticExec {
+    models: HashMap<String, SyntheticModel>,
+    /// When set, `execute_padded` sleeps `service_ms` per call so threaded
+    /// tests get a genuinely slow executor (reachable backpressure).
+    pub sleep: bool,
+    /// Batches executed (all models).
+    pub batches: u64,
+    /// Accumulated nominal service time — the harness's logical busy clock.
+    pub busy_ms: f64,
+}
+
+impl SyntheticExec {
+    pub fn new() -> SyntheticExec {
+        SyntheticExec::default()
+    }
+
+    pub fn with_model(
+        mut self,
+        name: &str,
+        per_in: usize,
+        per_out: usize,
+        service_ms: f64,
+    ) -> SyntheticExec {
+        self.models.insert(
+            name.to_string(),
+            SyntheticModel { per_in, per_out, service_ms },
+        );
+        self
+    }
+
+    pub fn model(&self, name: &str) -> Option<&SyntheticModel> {
+        self.models.get(name)
+    }
+
+    fn lookup(&self, model: &str) -> Result<&SyntheticModel> {
+        self.models
+            .get(model)
+            .ok_or_else(|| anyhow!("no artifact for model {model}"))
+    }
+}
+
+impl ExecBackend for SyntheticExec {
+    fn per_in(&mut self, model: &str, _batch: usize) -> Result<usize> {
+        Ok(self.lookup(model)?.per_in)
+    }
+
+    fn execute_padded(
+        &mut self,
+        model: &str,
+        batch: usize,
+        n: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = self.lookup(model)?.clone();
+        if n > batch || input.len() != n * m.per_in {
+            return Err(anyhow!(
+                "execute_padded: n={n} batch={batch} input={}",
+                input.len()
+            ));
+        }
+        self.batches += 1;
+        self.busy_ms += m.service_ms;
+        if self.sleep && m.service_ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                m.service_ms / 1e3,
+            ));
+        }
+        // Deterministic per-row output: every output element is the row's
+        // checksum, so tests can verify routing (right answer to the right
+        // request) without modelling a real network.
+        let mut out = Vec::with_capacity(n * m.per_out);
+        for row in 0..n {
+            let sum: f32 =
+                input[row * m.per_in..(row + 1) * m.per_in].iter().sum();
+            out.extend(std::iter::repeat(sum).take(m.per_out));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_exec_mirrors_engine_padding_contract() {
+        let mut ex = SyntheticExec::new().with_model("det", 4, 2, 10.0);
+        // n > batch errors, exactly like the compiled engine.
+        let err = ex.execute_padded("det", 2, 3, &[0.0; 12]).unwrap_err();
+        assert!(format!("{err}").contains("n=3 batch=2"), "{err}");
+        // Mis-sized input errors.
+        assert!(ex.execute_padded("det", 4, 2, &[0.0; 7]).is_err());
+        // Unknown model errors at per_in (admission shape).
+        assert!(ex.per_in("ghost", 4).is_err());
+        assert_eq!(ex.batches, 0, "failed calls never count as executed");
+    }
+
+    #[test]
+    fn synthetic_exec_output_routes_per_row() {
+        let mut ex = SyntheticExec::new().with_model("det", 2, 3, 5.0);
+        let input = [1.0, 2.0, 10.0, 20.0]; // rows sum to 3 and 30
+        let out = ex.execute_padded("det", 4, 2, &input).unwrap();
+        assert_eq!(out, vec![3.0, 3.0, 3.0, 30.0, 30.0, 30.0]);
+        assert_eq!(ex.batches, 1);
+        assert_eq!(ex.busy_ms, 5.0);
+    }
+}

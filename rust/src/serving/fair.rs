@@ -1,0 +1,326 @@
+//! Weighted-fair tenant-aware batcher: the dequeue half of SLO isolation.
+//!
+//! Same release contract as [`DynamicBatcher`](super::batcher): a batch
+//! releases when full or when the oldest queued item has waited
+//! `max_wait_ms`. The difference is *which* items fill it — batch slots
+//! are granted per tenant lane by smallest virtual time
+//! (`serviced / weight`, classic WFQ), so a tenant flooding the queue
+//! only ever holds its weighted share of each assembled batch while any
+//! other lane has work queued. With `fair == false` assembly degrades to
+//! global FIFO across lanes — the no-isolation baseline the `frontdoor`
+//! experiment measures against.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::admission::{fold_tenant, MAX_TENANTS};
+
+#[derive(Debug)]
+struct Lane<T> {
+    tenant: u32,
+    weight: f64,
+    /// Slots granted so far, in units of one request: the WFQ virtual
+    /// time for this lane is `serviced / weight`.
+    serviced: f64,
+    q: VecDeque<(f64, T)>,
+}
+
+/// Tenant-aware bounded batcher with weighted-fair batch assembly.
+#[derive(Debug)]
+pub struct FairBatcher<T> {
+    batch: usize,
+    max_wait_ms: f64,
+    /// Admission cap over ALL lanes (the model's queue bound).
+    cap: usize,
+    fair: bool,
+    len: usize,
+    lanes: Vec<Lane<T>>,
+    index: HashMap<u32, usize>,
+}
+
+impl<T> FairBatcher<T> {
+    pub fn new(batch: usize, max_wait_ms: f64, cap: usize, fair: bool) -> Self {
+        FairBatcher {
+            batch: batch.max(1),
+            max_wait_ms: max_wait_ms.max(0.0),
+            cap: cap.max(1),
+            fair,
+            len: 0,
+            lanes: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.cap
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Backpressure hint, same semantics as
+    /// [`DynamicBatcher::retry_after_ms`](super::batcher::DynamicBatcher::retry_after_ms):
+    /// with at least one full batch queued, space frees on the time scale
+    /// of one release cycle (the wait bound), never "0 ms".
+    pub fn retry_after_ms(&self, now_ms: f64) -> f64 {
+        if self.len >= self.batch {
+            return self.max_wait_ms.max(1.0);
+        }
+        self.next_deadline_ms()
+            .map(|d| (d - now_ms).max(0.0))
+            .unwrap_or(0.0)
+    }
+
+    /// Enqueue one item on its tenant's lane. Never assembles — release
+    /// is pull-only via [`poll`]/[`flush`], so a bounded ring downstream
+    /// naturally gates assembly (backpressure reaches admission).
+    ///
+    /// [`poll`]: FairBatcher::poll
+    /// [`flush`]: FairBatcher::flush
+    pub fn push(&mut self, tenant: u32, weight: f64, item: T, now_ms: f64) {
+        let lane = self.lane_mut(tenant, weight);
+        self.lanes[lane].q.push_back((now_ms, item));
+        self.len += 1;
+    }
+
+    /// Release a batch if one is due: full, or the oldest queued item has
+    /// waited out the bound (then a partial releases).
+    pub fn poll(&mut self, now_ms: f64) -> Option<Vec<T>> {
+        if self.len >= self.batch {
+            return Some(self.assemble(self.batch));
+        }
+        let head = self.oldest_head()?;
+        (now_ms - head >= self.max_wait_ms)
+            .then(|| self.assemble(self.len))
+    }
+
+    /// Shutdown drain: at most one engine batch per call (the engine
+    /// errors on `n > batch`); callers re-call until `None`.
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        (self.len > 0).then(|| self.assemble(self.len.min(self.batch)))
+    }
+
+    /// When the queue next needs service, on the push/poll clock:
+    /// immediately (oldest head) for a full batch, the oldest head plus
+    /// the wait bound otherwise.
+    pub fn next_deadline_ms(&self) -> Option<f64> {
+        let head = self.oldest_head()?;
+        if self.len >= self.batch {
+            Some(head)
+        } else {
+            Some(head + self.max_wait_ms)
+        }
+    }
+
+    fn oldest_head(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.q.front().map(|&(t, _)| t))
+            .min_by(f64::total_cmp)
+    }
+
+    fn lane_mut(&mut self, tenant: u32, weight: f64) -> usize {
+        let tenant = fold_tenant(tenant, self.lanes.len().min(MAX_TENANTS));
+        if let Some(&i) = self.index.get(&tenant) {
+            return i;
+        }
+        // A lane joining late starts at the current minimum virtual time
+        // (scaled by its weight) — it competes fairly from now on instead
+        // of monopolizing batches to "catch up" on slots it never wanted.
+        let min_vt = self
+            .lanes
+            .iter()
+            .map(|l| l.serviced / l.weight)
+            .min_by(f64::total_cmp)
+            .unwrap_or(0.0);
+        let weight = weight.max(1e-6);
+        self.lanes.push(Lane {
+            tenant,
+            weight,
+            serviced: min_vt * weight,
+            q: VecDeque::new(),
+        });
+        self.index.insert(tenant, self.lanes.len() - 1);
+        self.lanes.len() - 1
+    }
+
+    /// Grant `n` slots one at a time. Fair mode: each slot goes to the
+    /// non-empty lane with the smallest virtual time (ties → lower tenant
+    /// id, deterministic). FIFO mode: each slot goes to the globally
+    /// oldest queued item.
+    fn assemble(&mut self, n: usize) -> Vec<T> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pick = if self.fair {
+                self.lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| !l.q.is_empty())
+                    .min_by(|(_, a), (_, b)| {
+                        (a.serviced / a.weight)
+                            .total_cmp(&(b.serviced / b.weight))
+                            .then(a.tenant.cmp(&b.tenant))
+                    })
+                    .map(|(i, _)| i)
+            } else {
+                self.lanes
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, l)| l.q.front().map(|&(t, _)| (t, l.tenant, i)))
+                    .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                    .map(|(_, _, i)| i)
+            };
+            let Some(i) = pick else { break };
+            let (_, item) = self.lanes[i].q.pop_front().unwrap();
+            self.lanes[i].serviced += 1.0;
+            self.len -= 1;
+            out.push(item);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_counts(batch: &[(u32, u64)]) -> HashMap<u32, usize> {
+        let mut c = HashMap::new();
+        for &(t, _) in batch {
+            *c.entry(t).or_insert(0) += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn fair_assembly_splits_slots_across_tenants() {
+        let mut b: FairBatcher<(u32, u64)> = FairBatcher::new(8, 50.0, 64, true);
+        // Tenant 1 floods 20 items first; tenant 2 queues 10 after.
+        for i in 0..20 {
+            b.push(1, 1.0, (1, i), 0.0);
+        }
+        for i in 0..10 {
+            b.push(2, 1.0, (2, i), 1.0);
+        }
+        let counts = drain_counts(&b.poll(2.0).unwrap());
+        assert_eq!(counts.get(&1), Some(&4), "equal weights: equal slots");
+        assert_eq!(counts.get(&2), Some(&4));
+    }
+
+    #[test]
+    fn weights_skew_the_split() {
+        let mut b: FairBatcher<(u32, u64)> = FairBatcher::new(8, 50.0, 64, true);
+        for i in 0..20 {
+            b.push(1, 3.0, (1, i), 0.0);
+            b.push(2, 1.0, (2, i), 0.0);
+        }
+        let counts = drain_counts(&b.poll(1.0).unwrap());
+        assert_eq!(counts.get(&1), Some(&6), "weight 3 vs 1: 6/2 split");
+        assert_eq!(counts.get(&2), Some(&2));
+    }
+
+    #[test]
+    fn fifo_mode_ignores_tenancy() {
+        let mut b: FairBatcher<(u32, u64)> = FairBatcher::new(4, 50.0, 64, false);
+        for i in 0..4 {
+            b.push(1, 1.0, (1, i), i as f64);
+        }
+        b.push(2, 1.0, (2, 0), 10.0);
+        let batch = b.poll(11.0).unwrap();
+        assert_eq!(
+            batch,
+            vec![(1, 0), (1, 1), (1, 2), (1, 3)],
+            "FIFO: the flood's head-of-line wins every slot"
+        );
+    }
+
+    #[test]
+    fn fifo_order_is_preserved_within_a_lane() {
+        let mut b: FairBatcher<u64> = FairBatcher::new(3, 50.0, 64, true);
+        b.push(1, 1.0, 10, 0.0);
+        b.push(1, 1.0, 11, 1.0);
+        b.push(1, 1.0, 12, 2.0);
+        assert_eq!(b.poll(3.0).unwrap(), vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn push_never_assembles_release_is_pull_only() {
+        let mut b: FairBatcher<u64> = FairBatcher::new(2, 50.0, 64, true);
+        for i in 0..10 {
+            b.push(1, 1.0, i, 0.0);
+        }
+        assert_eq!(b.len(), 10, "push queues; only poll/flush release");
+        assert_eq!(b.poll(0.0).unwrap().len(), 2);
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn partial_releases_on_wait_bound() {
+        let mut b: FairBatcher<u64> = FairBatcher::new(8, 50.0, 64, true);
+        b.push(1, 1.0, 1, 0.0);
+        b.push(2, 1.0, 2, 10.0);
+        assert!(b.poll(49.0).is_none());
+        assert_eq!(b.poll(50.0).unwrap().len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_chunks_to_engine_batch() {
+        let mut b: FairBatcher<u64> = FairBatcher::new(4, 1e6, 64, true);
+        for i in 0..11 {
+            b.push(i as u32 % 3, 1.0, i, 0.0);
+        }
+        assert_eq!(b.flush().unwrap().len(), 4);
+        assert_eq!(b.flush().unwrap().len(), 4);
+        assert_eq!(b.flush().unwrap().len(), 3);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn full_queue_retry_hint_is_never_zero() {
+        let mut b: FairBatcher<u64> = FairBatcher::new(4, 50.0, 8, true);
+        for i in 0..6 {
+            b.push(1, 1.0, i, 0.0);
+        }
+        assert!(b.retry_after_ms(1e6) > 0.0);
+    }
+
+    #[test]
+    fn late_joining_lane_does_not_catch_up_monopolize() {
+        let mut b: FairBatcher<(u32, u64)> = FairBatcher::new(4, 50.0, 256, true);
+        // Tenant 1 runs alone for 40 slots.
+        for i in 0..40 {
+            b.push(1, 1.0, (1, i), 0.0);
+        }
+        for _ in 0..10 {
+            b.poll(0.0).unwrap();
+        }
+        // Tenant 2 joins. If its lane started at virtual time 0 it would
+        // take every slot of the next 10 batches; starting at the current
+        // minimum it takes its fair half.
+        for i in 0..20 {
+            b.push(1, 1.0, (1, 100 + i), 1.0);
+            b.push(2, 1.0, (2, i), 1.0);
+        }
+        let counts = drain_counts(&b.poll(2.0).unwrap());
+        assert_eq!(counts.get(&1), Some(&2), "late joiner gets a share, not all");
+        assert_eq!(counts.get(&2), Some(&2));
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_across_lanes() {
+        let mut b: FairBatcher<u64> = FairBatcher::new(8, 50.0, 64, true);
+        assert_eq!(b.next_deadline_ms(), None);
+        b.push(5, 1.0, 1, 30.0);
+        b.push(1, 1.0, 2, 10.0);
+        assert_eq!(b.next_deadline_ms(), Some(60.0), "oldest head + bound");
+    }
+}

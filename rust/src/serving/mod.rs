@@ -1,20 +1,37 @@
-//! The real serving path: a request router + per-model dynamic batchers +
-//! a PJRT executor, all in Rust, driven purely by the AOT artifacts.
-//! This is what `examples/e2e_serve.rs` and `octopinf serve` run — Python
-//! is never involved.
+//! The real serving path: a front door (content filter → per-tenant
+//! admission → sharded fair batchers) feeding a PJRT executor over a
+//! bounded ring, all in Rust, driven purely by the AOT artifacts. This is
+//! what `examples/e2e_serve.rs` and `octopinf serve` run — Python is
+//! never involved.
 //!
 //! Threading: clients submit [`Request`]s over an mpsc channel from any
-//! thread; a single executor thread owns the PJRT [`Runtime`] (XLA handles
-//! are not `Send`) and drives batching + execution; responses flow back
-//! over a channel with full timing.
+//! thread. A *front* thread owns the [`FrontDoor`] — it admits, filters,
+//! and assembles batches, pushing them into a bounded ring
+//! (`sync_channel`) so admission runs ahead of execution by at most
+//! `ring_depth` batches. The *executor* thread (the caller of
+//! [`serve_with`]) owns the [`ExecBackend`] (XLA handles are not `Send`)
+//! and drains the ring; engine outputs flow back to the front thread so
+//! the content filter can reuse them. When the ring is full, shard
+//! queues fill, and admission rejects with retry-after hints —
+//! backpressure is real, not theoretical.
 
+pub mod admission;
 pub mod batcher;
+pub mod exec;
+pub mod fair;
+pub mod filter;
+pub mod shard;
 
+pub use admission::{TenantPolicy, MAX_TENANTS, OVERFLOW_TENANT};
 pub use batcher::DynamicBatcher;
+pub use exec::{ExecBackend, SyntheticExec};
+pub use fair::FairBatcher;
+pub use filter::{ContentFilter, FilterCfg};
+pub use shard::{FrontDoor, FrontDoorCfg, Offer};
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, Sender, SyncSender, TrySendError};
 use std::time::Instant;
 
 use crate::runtime::Runtime;
@@ -27,6 +44,11 @@ pub struct Request {
     pub model: String,
     pub data: Vec<f32>,
     pub slo_ms: f64,
+    /// Owning tenant: admission tokens, fair-dequeue weight, and report
+    /// accounting are all per tenant.
+    pub tenant: u32,
+    /// Source stream id — the frame-difference filter's unit of state.
+    pub stream: u64,
     pub submitted: Instant,
 }
 
@@ -39,8 +61,9 @@ pub struct Response {
     pub latency_ms: f64,
     pub batch_size: usize,
     pub on_time: bool,
-    /// `Some` when the request failed (unknown model, engine error): the
-    /// request is answered and dropped instead of killing the session.
+    /// `Some` when the request failed (unknown model, engine error,
+    /// throttle/rejection): the request is answered and dropped instead
+    /// of killing the session.
     pub error: Option<String>,
 }
 
@@ -62,9 +85,36 @@ impl ModelServeCfg {
     }
 }
 
+/// Per-tenant slice of a [`ServeReport`] — the isolation evidence.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantLane {
+    pub submitted: u64,
+    pub served: u64,
+    pub on_time: u64,
+    pub filtered: u64,
+    pub throttled: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub failed: u64,
+}
+
+impl TenantLane {
+    /// On-time fraction over everything the tenant submitted (filtered
+    /// answers count as on time — they are returned instantly).
+    pub fn attainment(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            (self.on_time + self.filtered) as f64 / self.submitted as f64
+        }
+    }
+}
+
 /// Aggregate report of one serving session.
 #[derive(Debug, Default)]
 pub struct ServeReport {
+    /// Everything that arrived at the front door.
+    pub submitted: u64,
     pub served: u64,
     pub on_time: u64,
     /// Requests answered with an error `Response` (unknown model / engine
@@ -76,7 +126,17 @@ pub struct ServeReport {
     /// Requests rejected at admission (queue full): answered with an
     /// explicit retry-after error instead of queueing unboundedly.
     pub rejected: u64,
+    /// Requests throttled by their tenant's token bucket.
+    pub throttled: u64,
+    /// Requests answered by the content frontend (frame-diff or cache)
+    /// without any engine work.
+    pub filtered: u64,
+    /// Of `filtered`, how many came from the cross-stream result cache
+    /// (the rest were same-stream frame-diff hits).
+    pub cache_hits: u64,
     pub per_model: HashMap<String, u64>,
+    /// Per-tenant accounting (BTreeMap: deterministic iteration order).
+    pub per_tenant: BTreeMap<u32, TenantLane>,
     /// Streaming latency sketch: O(1) recording on the executor thread.
     pub latency: QuantileSketch,
     /// Executed batches by size: one count per *batch*, not per request
@@ -86,91 +146,209 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Requests/s answered usefully: engine completions that met their
+    /// SLO plus frontend answers (which cost no engine work at all) —
+    /// the EVA-survey "effective throughput" the filter is buying.
     pub fn effective_throughput(&self) -> f64 {
         if self.wall_ms <= 0.0 {
             0.0
         } else {
-            self.on_time as f64 * 1000.0 / self.wall_ms
+            (self.on_time + self.filtered) as f64 * 1000.0 / self.wall_ms
         }
     }
 
+    /// On-time fraction of everything *answered with a result* (served
+    /// through the engine or by the frontend).
     pub fn slo_attainment(&self) -> f64 {
-        if self.served == 0 {
+        let answered = self.served + self.filtered;
+        if answered == 0 {
             0.0
         } else {
-            self.on_time as f64 / self.served as f64
+            (self.on_time + self.filtered) as f64 / answered as f64
         }
+    }
+
+    /// Every submitted request terminates in exactly one of these
+    /// counters — `accounted() == submitted` is the session-level
+    /// conservation law the integration tests enforce.
+    pub fn accounted(&self) -> u64 {
+        self.served
+            + self.filtered
+            + self.rejected
+            + self.throttled
+            + self.shed
+            + self.failed
+    }
+
+    /// Per-tenant lane, folding ids beyond [`MAX_TENANTS`] distinct
+    /// tenants onto [`OVERFLOW_TENANT`] so report state stays bounded.
+    pub fn lane(&mut self, tenant: u32) -> &mut TenantLane {
+        let key = if self.per_tenant.len() >= MAX_TENANTS
+            && !self.per_tenant.contains_key(&tenant)
+        {
+            OVERFLOW_TENANT
+        } else {
+            tenant
+        };
+        self.per_tenant.entry(key).or_default()
+    }
+
+    /// Count one arrival (total + tenant lane). Called before the front
+    /// door decides anything, so conservation has a stable left side.
+    pub fn note_submitted(&mut self, tenant: u32) {
+        self.submitted += 1;
+        self.lane(tenant).submitted += 1;
+    }
+
+    /// Fold another report into this one (the front-thread and executor
+    /// partial reports merge into the session report).
+    pub fn absorb(&mut self, other: ServeReport) {
+        self.submitted += other.submitted;
+        self.served += other.served;
+        self.on_time += other.on_time;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.rejected += other.rejected;
+        self.throttled += other.throttled;
+        self.filtered += other.filtered;
+        self.cache_hits += other.cache_hits;
+        for (m, c) in other.per_model {
+            *self.per_model.entry(m).or_default() += c;
+        }
+        for (t, l) in other.per_tenant {
+            let lane = self.lane(t);
+            lane.submitted += l.submitted;
+            lane.served += l.served;
+            lane.on_time += l.on_time;
+            lane.filtered += l.filtered;
+            lane.throttled += l.throttled;
+            lane.rejected += l.rejected;
+            lane.shed += l.shed;
+            lane.failed += l.failed;
+        }
+        for (b, c) in other.batch_hist {
+            *self.batch_hist.entry(b).or_default() += c;
+        }
+        self.latency.merge(&other.latency);
+    }
+
+    /// Deterministic one-line fingerprint of every counter (sorted maps,
+    /// no timing-dependent fields) — what the sharded-path determinism
+    /// tests compare across runs.
+    pub fn digest(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "sub={} srv={} ot={} fil={} ch={} thr={} rej={} shed={} fail={}",
+            self.submitted,
+            self.served,
+            self.on_time,
+            self.filtered,
+            self.cache_hits,
+            self.throttled,
+            self.rejected,
+            self.shed,
+            self.failed,
+        );
+        let mut models: Vec<_> = self.per_model.iter().collect();
+        models.sort();
+        for (m, c) in models {
+            let _ = write!(s, " m:{m}={c}");
+        }
+        for (t, l) in &self.per_tenant {
+            let _ = write!(
+                s,
+                " t:{t}={}/{}/{}/{}/{}/{}/{}/{}",
+                l.submitted, l.served, l.on_time, l.filtered, l.throttled,
+                l.rejected, l.shed, l.failed
+            );
+        }
+        let mut hist: Vec<_> = self.batch_hist.iter().collect();
+        hist.sort();
+        for (b, c) in hist {
+            let _ = write!(s, " b:{b}={c}");
+        }
+        s
     }
 }
 
-/// The executor loop: drains `rx` until it closes, batches per model, runs
-/// PJRT, and reports each completion on `tx`.
-///
-/// Returns the aggregate report when the request stream ends.
+/// The production entry point: compile the PJRT runtime over an artifacts
+/// directory and serve with the default front door (2 shards, isolation
+/// on with unlimited rates, no content filter).
 pub fn serve(
     artifacts_dir: &Path,
     cfgs: &HashMap<String, ModelServeCfg>,
     rx: Receiver<Request>,
     tx: Sender<Response>,
 ) -> Result<ServeReport> {
+    serve_front(artifacts_dir, cfgs, FrontDoorCfg::default(), rx, tx)
+}
+
+/// [`serve`] with an explicit front-door configuration (tenancy, filter,
+/// shard count) — the `octopinf serve` CLI surface.
+pub fn serve_front(
+    artifacts_dir: &Path,
+    cfgs: &HashMap<String, ModelServeCfg>,
+    front: FrontDoorCfg,
+    rx: Receiver<Request>,
+    tx: Sender<Response>,
+) -> Result<ServeReport> {
     let mut rt = Runtime::new(artifacts_dir)?;
-    let mut batchers: HashMap<String, DynamicBatcher<Request>> = cfgs
-        .iter()
-        .map(|(m, c)| {
-            (m.clone(), DynamicBatcher::bounded(c.batch, c.max_wait_ms, c.queue_cap))
-        })
-        .collect();
     // Pre-compile engines so the first request doesn't eat compile time.
     for (m, c) in cfgs {
         rt.engine(m, c.batch)?;
     }
+    serve_with(&mut rt, cfgs, front, rx, tx)
+}
 
-    let mut report = ServeReport::default();
+/// Engine result fed back to the front thread: `Some(row)` installs the
+/// content filter's stream reference + cache entry, `None` abandons the
+/// pending entry (the request was shed or failed).
+type DoneMsg = (u64, Option<Vec<f32>>);
+
+/// Serve over any [`ExecBackend`] — the testable core of the path.
+///
+/// The caller's thread becomes the executor (it owns `backend`, which is
+/// not required to be `Send`); a scoped front thread owns the
+/// [`FrontDoor`] and the request stream. Returns when `rx` closes and
+/// every queued request has been answered.
+pub fn serve_with(
+    backend: &mut dyn ExecBackend,
+    cfgs: &HashMap<String, ModelServeCfg>,
+    front: FrontDoorCfg,
+    rx: Receiver<Request>,
+    tx: Sender<Response>,
+) -> Result<ServeReport> {
     let session_start = Instant::now();
-    let mut open = true;
-    while open || batchers.values().any(|b| !b.is_empty()) {
-        if open {
-            // Sleep until the earliest pending flush deadline (or an idle
-            // cap) instead of busy-spinning a 1 ms poll; an incoming
-            // request or a closed channel wakes the receiver immediately.
-            let now = now_ms(session_start);
-            let wait_ms = batchers
-                .values()
-                .filter_map(|b| b.next_deadline_ms())
-                .min_by(f64::total_cmp)
-                .map(|d| (d - now).max(0.0))
-                .unwrap_or(IDLE_WAIT_MS)
-                .min(IDLE_WAIT_MS);
-            match rx.recv_timeout(std::time::Duration::from_secs_f64(wait_ms / 1e3)) {
-                Ok(req) => {
-                    let model = req.model.clone();
-                    let b = batchers
-                        .entry(model.clone())
-                        .or_insert_with(|| DynamicBatcher::bounded(1, 5.0, 8));
-                    if b.is_full() {
-                        // Explicit backpressure: answer now with a retry
-                        // hint instead of queueing unboundedly.
-                        let retry = b.retry_after_ms(now_ms(session_start));
-                        reject_request(req, retry, &tx, &mut report);
-                    } else if let Some(batch) = b.push(req, now_ms(session_start))
-                    {
-                        // A push that fills the batch releases it here.
-                        run_batch(&mut rt, &model, cfgs, batch, &tx, &mut report);
-                    }
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open = false,
-            }
+    let ring_depth = front.ring_depth.max(1);
+    let filter_on = front.filter.is_some();
+    let (ring_tx, ring_rx) =
+        std::sync::mpsc::sync_channel::<(String, Vec<Request>)>(ring_depth);
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<DoneMsg>();
+    let front_tx = tx.clone();
+
+    let mut exec_report = ServeReport::default();
+    let front_report = std::thread::scope(|scope| {
+        let front_handle = scope.spawn(move || {
+            front_loop(cfgs, front, rx, front_tx, ring_tx, done_rx, session_start)
+        });
+        // Executor: drain the ring until the front thread closes it.
+        while let Ok((model, batch)) = ring_rx.recv() {
+            run_batch(
+                backend,
+                &model,
+                cfgs,
+                batch,
+                &tx,
+                &mut exec_report,
+                filter_on.then_some(&done_tx),
+            );
         }
-        // Flush ready batches.
-        let now = now_ms(session_start);
-        for (model, b) in batchers.iter_mut() {
-            // When the stream closed, force-flush leftovers.
-            let ready = if open { b.poll(now) } else { b.flush() };
-            let Some(batch) = ready else { continue };
-            run_batch(&mut rt, model, cfgs, batch, &tx, &mut report);
-        }
-    }
+        drop(done_tx);
+        front_handle.join().expect("front-door thread panicked")
+    });
+
+    let mut report = front_report;
+    report.absorb(exec_report);
     report.wall_ms = session_start.elapsed().as_secs_f64() * 1e3;
     Ok(report)
 }
@@ -178,46 +356,197 @@ pub fn serve(
 /// Receive wait when no flush deadline is pending (bounds how long a
 /// disconnect or a misestimated deadline can stall the loop).
 const IDLE_WAIT_MS: f64 = 50.0;
+/// Receive wait while a batch is parked on a full ring: short, so the
+/// retry happens as soon as the executor frees a slot.
+const RING_RETRY_MS: f64 = 2.0;
 
 fn now_ms(start: Instant) -> f64 {
     start.elapsed().as_secs_f64() * 1e3
+}
+
+/// The front thread: admission, filtering, batch assembly, and the
+/// admission-side half of the session report.
+fn front_loop(
+    cfgs: &HashMap<String, ModelServeCfg>,
+    front: FrontDoorCfg,
+    rx: Receiver<Request>,
+    tx: Sender<Response>,
+    ring_tx: SyncSender<(String, Vec<Request>)>,
+    done_rx: Receiver<DoneMsg>,
+    session_start: Instant,
+) -> ServeReport {
+    let mut door = FrontDoor::new(cfgs, &front);
+    let mut report = ServeReport::default();
+    // A batch that found the ring full: held (not re-queued) and retried
+    // until a slot frees. While it is parked, no further assembly runs,
+    // so shard queues fill and admission starts rejecting — backpressure.
+    let mut parked: Option<(String, Vec<Request>)> = None;
+    let mut open = true;
+    while open {
+        // Feed engine results back into the content filter.
+        let now = now_ms(session_start);
+        for (id, out) in done_rx.try_iter() {
+            match out {
+                Some(o) => door.record_result(id, &o, now),
+                None => door.abandon_result(id),
+            }
+        }
+        // Move ready batches into the ring without ever blocking.
+        loop {
+            let candidate = match parked.take() {
+                Some(b) => Some(b),
+                None => door.poll(now_ms(session_start)),
+            };
+            let Some(b) = candidate else { break };
+            match ring_tx.try_send(b) {
+                Ok(()) => {}
+                Err(TrySendError::Full(b)) => {
+                    parked = Some(b);
+                    break;
+                }
+                // Executor died (panic downstream): stop assembling.
+                Err(TrySendError::Disconnected(_)) => return report,
+            }
+        }
+        // Wait for the next request, bounded by the earliest batch
+        // deadline (or a short retry tick while parked on a full ring).
+        let now = now_ms(session_start);
+        let wait_ms = if parked.is_some() {
+            RING_RETRY_MS
+        } else {
+            door.next_deadline_ms()
+                .map(|d| (d - now).max(0.0))
+                .unwrap_or(IDLE_WAIT_MS)
+                .min(IDLE_WAIT_MS)
+        };
+        match rx.recv_timeout(std::time::Duration::from_secs_f64(wait_ms / 1e3)) {
+            Ok(req) => {
+                report.note_submitted(req.tenant);
+                let offer = door.offer(req, now_ms(session_start));
+                settle_offer(offer, &tx, &mut report);
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+    }
+    // Shutdown drain: every queued request still gets an engine pass —
+    // in ≤ batch chunks (the engine errors on n > batch) — with blocking
+    // sends now that no new work can arrive.
+    loop {
+        let b = parked
+            .take()
+            .or_else(|| door.poll(now_ms(session_start)))
+            .or_else(|| door.flush());
+        let Some(b) = b else { break };
+        if ring_tx.send(b).is_err() {
+            break;
+        }
+    }
+    report
+}
+
+/// Account one front-door decision and answer the client where the
+/// decision already terminates the request. Shared by the threaded
+/// serve path and the logical-clock harness in `experiments::frontdoor`,
+/// so both account identically. (`Queued` requests terminate later, on
+/// the executor side.)
+pub fn settle_offer(offer: Offer, tx: &Sender<Response>, report: &mut ServeReport) {
+    match offer {
+        Offer::Queued => {}
+        Offer::Answered { req, output, cached } => {
+            report.filtered += 1;
+            if cached {
+                report.cache_hits += 1;
+            }
+            report.lane(req.tenant).filtered += 1;
+            let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+            let _ = tx.send(Response {
+                id: req.id,
+                model: req.model,
+                output,
+                latency_ms,
+                batch_size: 0,
+                on_time: latency_ms <= req.slo_ms,
+                error: None,
+            });
+        }
+        Offer::Throttled { req, retry_after_ms } => {
+            report.throttled += 1;
+            report.lane(req.tenant).throttled += 1;
+            let _ = tx.send(Response {
+                id: req.id,
+                model: req.model,
+                output: Vec::new(),
+                latency_ms: req.submitted.elapsed().as_secs_f64() * 1e3,
+                batch_size: 0,
+                on_time: false,
+                error: Some(format!(
+                    "throttled: tenant over admission rate; retry after {:.0} ms",
+                    retry_after_ms.ceil().min(1e6)
+                )),
+            });
+        }
+        Offer::QueueFull { req, retry_after_ms } => {
+            reject_request(req, retry_after_ms, tx, report);
+        }
+        Offer::Unknown { req } => {
+            // Unconfigured model: answered and counted, but NEVER given a
+            // batcher — the old path grew the batcher map per unknown
+            // name, an adversarial-client memory leak.
+            report.failed += 1;
+            report.lane(req.tenant).failed += 1;
+            let _ = tx.send(Response {
+                id: req.id,
+                model: req.model.clone(),
+                output: Vec::new(),
+                latency_ms: req.submitted.elapsed().as_secs_f64() * 1e3,
+                batch_size: 0,
+                on_time: false,
+                error: Some(format!(
+                    "unknown model {:?}: not in the serving config",
+                    req.model
+                )),
+            });
+        }
+    }
 }
 
 /// Execute one batch. Engine failures (a model absent from the manifest,
 /// a PJRT error) are isolated to this batch: its requests are answered
 /// with error `Response`s and the session keeps serving everyone else —
 /// they used to propagate out of `serve` and kill every client.
-fn run_batch(
-    rt: &mut Runtime,
+pub fn run_batch(
+    backend: &mut dyn ExecBackend,
     model: &str,
     cfgs: &HashMap<String, ModelServeCfg>,
     batch: Vec<Request>,
     tx: &Sender<Response>,
     report: &mut ServeReport,
+    done: Option<&Sender<DoneMsg>>,
 ) {
     // Deadline-aware shedding before any engine work: a request whose SLO
     // already expired at dequeue time cannot be served on time — running
     // it would only delay everyone behind it.
-    let batch = shed_expired(batch, tx, report);
+    let batch = shed_expired(batch, tx, report, done);
     if batch.is_empty() {
         return;
     }
     let bz = cfgs.get(model).map(|c| c.batch).unwrap_or(1);
     let n = batch.len();
-    let per_in: usize = match rt.engine(model, bz) {
-        Ok(e) => e.meta.input_shape.iter().product(),
-        Err(e) => return fail_batch(batch, &e.to_string(), tx, report),
+    let per_in: usize = match backend.per_in(model, bz) {
+        Ok(p) => p,
+        Err(e) => return fail_batch(batch, &e.to_string(), tx, report, done),
     };
     let mut input = Vec::with_capacity(n * per_in);
     for r in &batch {
         debug_assert_eq!(r.data.len(), per_in);
         input.extend_from_slice(&r.data);
     }
-    let out = match rt.execute_padded(model, bz, n, &input) {
+    let out = match backend.execute_padded(model, bz, n, &input) {
         Ok(o) => o,
-        Err(e) => return fail_batch(batch, &e.to_string(), tx, report),
+        Err(e) => return fail_batch(batch, &e.to_string(), tx, report, done),
     };
-    complete_batch(batch, &out, tx, report);
+    complete_batch(batch, &out, tx, report, done);
 }
 
 /// Account one *successful* executed batch and answer its requests.
@@ -226,6 +555,7 @@ fn complete_batch(
     out: &[f32],
     tx: &Sender<Response>,
     report: &mut ServeReport,
+    done: Option<&Sender<DoneMsg>>,
 ) {
     let n = batch.len();
     let per_out = out.len() / n.max(1);
@@ -239,13 +569,25 @@ fn complete_batch(
         if on_time {
             report.on_time += 1;
         }
+        {
+            let lane = report.lane(req.tenant);
+            lane.served += 1;
+            if on_time {
+                lane.on_time += 1;
+            }
+        }
         *report.per_model.entry(req.model.clone()).or_default() += 1;
         report.latency.push(latency_ms);
+        let row = out[i * per_out..(i + 1) * per_out].to_vec();
+        if let Some(d) = done {
+            // Feed the content filter's pending entry (front thread).
+            let _ = d.send((req.id, Some(row.clone())));
+        }
         // Client may be gone (fire-and-forget benchmarks) — ignore errors.
         let _ = tx.send(Response {
             id: req.id,
             model: req.model,
-            output: out[i * per_out..(i + 1) * per_out].to_vec(),
+            output: row,
             latency_ms,
             batch_size: n,
             on_time,
@@ -261,12 +603,17 @@ fn shed_expired(
     batch: Vec<Request>,
     tx: &Sender<Response>,
     report: &mut ServeReport,
+    done: Option<&Sender<DoneMsg>>,
 ) -> Vec<Request> {
     let mut live = Vec::with_capacity(batch.len());
     for req in batch {
         let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
         if latency_ms > req.slo_ms {
             report.shed += 1;
+            report.lane(req.tenant).shed += 1;
+            if let Some(d) = done {
+                let _ = d.send((req.id, None));
+            }
             let _ = tx.send(Response {
                 id: req.id,
                 model: req.model,
@@ -292,6 +639,7 @@ fn reject_request(
     report: &mut ServeReport,
 ) {
     report.rejected += 1;
+    report.lane(req.tenant).rejected += 1;
     let _ = tx.send(Response {
         id: req.id,
         model: req.model,
@@ -312,11 +660,16 @@ fn fail_batch(
     err: &str,
     tx: &Sender<Response>,
     report: &mut ServeReport,
+    done: Option<&Sender<DoneMsg>>,
 ) {
     let n = batch.len();
     for req in batch {
         let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
         report.failed += 1;
+        report.lane(req.tenant).failed += 1;
+        if let Some(d) = done {
+            let _ = d.send((req.id, None));
+        }
         let _ = tx.send(Response {
             id: req.id,
             model: req.model,
@@ -339,6 +692,8 @@ mod tests {
             model: model.into(),
             data: vec![0.0; 4],
             slo_ms,
+            tenant: 0,
+            stream: id,
             submitted: Instant::now(),
         }
     }
@@ -350,17 +705,18 @@ mod tests {
         let batch: Vec<Request> =
             (0..8).map(|i| req(i, "classifier", 1e9)).collect();
         let out = vec![0.5f32; 8 * 2];
-        complete_batch(batch, &out, &tx, &mut report);
+        complete_batch(batch, &out, &tx, &mut report, None);
         assert_eq!(report.batch_hist.get(&8), Some(&1), "one batch, bucket 8");
         assert_eq!(report.served, 8);
         assert_eq!(report.on_time, 8);
         assert_eq!(rx.try_iter().count(), 8);
 
         let batch: Vec<Request> = (0..3).map(|i| req(i, "embedder", 1e9)).collect();
-        complete_batch(batch, &vec![0.0f32; 3 * 2], &tx, &mut report);
+        complete_batch(batch, &vec![0.0f32; 3 * 2], &tx, &mut report, None);
         assert_eq!(report.batch_hist.get(&3), Some(&1));
         assert_eq!(report.batch_hist.values().sum::<u64>(), 2, "two batches total");
         assert_eq!(report.latency.count(), report.served);
+        assert_eq!(report.per_tenant.get(&0).unwrap().served, 11);
     }
 
     #[test]
@@ -368,7 +724,7 @@ mod tests {
         let (tx, rx) = std::sync::mpsc::channel();
         let mut report = ServeReport::default();
         let batch: Vec<Request> = (0..4).map(|i| req(i, "no_such_model", 50.0)).collect();
-        fail_batch(batch, "engine missing", &tx, &mut report);
+        fail_batch(batch, "engine missing", &tx, &mut report, None);
         assert_eq!(report.failed, 4);
         assert_eq!(report.served, 0, "failures are not completions");
         assert_eq!(report.latency.count(), 0);
@@ -388,7 +744,7 @@ mod tests {
         let mut report = ServeReport::default();
         // Negative SLO: expired the instant it was created.
         let batch = vec![req(1, "det", -1.0), req(2, "det", 1e9)];
-        let live = shed_expired(batch, &tx, &mut report);
+        let live = shed_expired(batch, &tx, &mut report, None);
         assert_eq!(live.len(), 1);
         assert_eq!(live[0].id, 2);
         assert_eq!(report.shed, 1);
@@ -413,18 +769,68 @@ mod tests {
         assert!(err.contains("13 ms"), "{err}");
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn unknown_model_offer_is_failed_and_answered() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut report = ServeReport::default();
+        report.note_submitted(3);
+        let mut r = req(9, "ghost", 100.0);
+        r.tenant = 3;
+        settle_offer(Offer::Unknown { req: r }, &tx, &mut report);
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.accounted(), report.submitted, "conservation");
+        let resp: Vec<Response> = rx.try_iter().collect();
+        assert_eq!(resp.len(), 1);
+        assert!(resp[0].error.as_deref().unwrap().contains("unknown model"));
+        assert_eq!(report.per_tenant.get(&3).unwrap().failed, 1);
+    }
+
+    #[test]
+    fn absorb_merges_every_counter_and_digest_is_stable() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mut a = ServeReport::default();
+        a.note_submitted(1);
+        complete_batch(vec![req(1, "det", 1e9)], &[1.0], &tx, &mut a, None);
+        let mut b = ServeReport::default();
+        b.note_submitted(2);
+        reject_request(req(2, "det", 1.0), 5.0, &tx, &mut b);
+        a.absorb(b);
+        assert_eq!(a.submitted, 2);
+        assert_eq!(a.served, 1);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.accounted(), a.submitted);
+        assert_eq!(a.per_tenant.len(), 2);
+        assert_eq!(a.latency.count(), 1);
+        let d = a.digest();
+        assert!(d.contains("sub=2"), "{d}");
+        assert!(d.contains("t:1="), "{d}");
+        assert!(d.contains("t:2="), "{d}");
+        assert_eq!(d, a.digest(), "digest is a pure function of counters");
+    }
+
+    #[test]
+    fn report_lane_folds_past_the_tenant_cap() {
+        let mut r = ServeReport::default();
+        for t in 0..MAX_TENANTS as u32 {
+            r.lane(t).submitted += 1;
+        }
+        r.lane(5_000_000).submitted += 1;
+        r.lane(6_000_000).submitted += 1;
+        assert_eq!(r.per_tenant.len(), MAX_TENANTS + 1);
+        assert_eq!(r.per_tenant.get(&OVERFLOW_TENANT).unwrap().submitted, 2);
+    }
+
     #[test]
     fn run_batch_sheds_expired_before_engine_lookup() {
-        // Under the stub Runtime every engine lookup errors — but a batch
-        // that is entirely expired must shed (answered per request) before
-        // any engine work, not fail.
-        let mut rt = Runtime { manifest: Default::default() };
+        // Under an empty synthetic backend every engine lookup errors —
+        // but a batch that is entirely expired must shed (answered per
+        // request) before any engine work, not fail.
+        let mut ex = SyntheticExec::new();
         let (tx, rx) = std::sync::mpsc::channel();
         let mut report = ServeReport::default();
         let cfgs = HashMap::new();
         let batch = vec![req(1, "det", -1.0), req(2, "det", -1.0)];
-        run_batch(&mut rt, "det", &cfgs, batch, &tx, &mut report);
+        run_batch(&mut ex, "det", &cfgs, batch, &tx, &mut report, None);
         assert_eq!(report.shed, 2);
         assert_eq!(report.failed, 0, "shedding is not an engine failure");
         let r: Vec<Response> = rx.try_iter().collect();
@@ -433,20 +839,30 @@ mod tests {
             == Some("shed: deadline exceeded")));
     }
 
-    #[cfg(not(feature = "pjrt"))]
     #[test]
     fn run_batch_isolates_unknown_models() {
-        // The stub Runtime errors on every engine lookup — exactly the
+        // A backend with no models errors on every lookup — exactly the
         // unknown-model shape. run_batch must degrade to fail_batch
         // instead of propagating (the old `?` aborted the whole session).
-        let mut rt = Runtime { manifest: Default::default() };
+        let mut ex = SyntheticExec::new();
         let (tx, rx) = std::sync::mpsc::channel();
         let mut report = ServeReport::default();
         let cfgs = HashMap::new();
-        run_batch(&mut rt, "ghost", &cfgs, vec![req(1, "ghost", 10.0)], &tx, &mut report);
+        run_batch(&mut ex, "ghost", &cfgs, vec![req(1, "ghost", 10.0)], &tx, &mut report, None);
         assert_eq!(report.failed, 1);
         let r: Vec<Response> = rx.try_iter().collect();
         assert_eq!(r.len(), 1);
         assert!(r[0].error.is_some());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_satisfies_the_exec_backend_trait() {
+        // The stub Runtime errors on every call, but it must still *be*
+        // an ExecBackend so serve_with compiles against both variants.
+        let mut rt = Runtime { manifest: Default::default() };
+        let backend: &mut dyn ExecBackend = &mut rt;
+        assert!(backend.per_in("det", 4).is_err());
+        assert!(backend.execute_padded("det", 4, 1, &[0.0; 4]).is_err());
     }
 }

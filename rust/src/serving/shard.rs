@@ -1,0 +1,385 @@
+//! The serving front door: sharded batchers + per-tenant admission +
+//! content-aware filtering, in front of the executor.
+//!
+//! Models hash onto N batcher shards; the executor side dequeues with
+//! work-stealing (a round-robin scan that takes the earliest-due batch
+//! from *any* shard, so one hot shard cannot idle the engine while
+//! another has work due). The door never executes anything — it turns
+//! each arriving request into an [`Offer`], and assembled batches are
+//! pulled via [`FrontDoor::poll`]/[`flush`] by whoever owns the ring to
+//! the executor.
+
+use std::collections::HashMap;
+
+use super::admission::{TenantAdmission, TenantPolicy};
+use super::fair::FairBatcher;
+use super::filter::{ContentFilter, FilterCfg};
+use super::{ModelServeCfg, Request};
+
+/// Front-door configuration (shard count, ring depth, tenancy, filter).
+#[derive(Clone, Debug)]
+pub struct FrontDoorCfg {
+    /// Batcher shards (models hash across them).
+    pub shards: usize,
+    /// Bounded-ring depth between the front door and the executor: how
+    /// many assembled batches admission may run ahead of execution.
+    pub ring_depth: usize,
+    pub tenants: TenantPolicy,
+    /// `Some` enables the content-aware frontend.
+    pub filter: Option<FilterCfg>,
+}
+
+impl Default for FrontDoorCfg {
+    fn default() -> FrontDoorCfg {
+        FrontDoorCfg {
+            shards: 2,
+            ring_depth: 2,
+            tenants: TenantPolicy::default(),
+            filter: None,
+        }
+    }
+}
+
+/// What the front door decided about one arriving request.
+pub enum Offer {
+    /// Queued on its model's shard; an engine batch will carry it.
+    Queued,
+    /// Answered immediately by the content frontend (filter or cache) —
+    /// no engine work. `cached` distinguishes cache from frame-diff hits.
+    Answered { req: Request, output: Vec<f32>, cached: bool },
+    /// Throttled at tenant admission (token bucket dry).
+    Throttled { req: Request, retry_after_ms: f64 },
+    /// The model's queue is at its admission cap.
+    QueueFull { req: Request, retry_after_ms: f64 },
+    /// Not a configured model: rejected without allocating any state
+    /// (the old path permanently grew the batcher map per unknown name).
+    Unknown { req: Request },
+}
+
+/// One batcher shard: the (model → batcher) slice that hashed onto it,
+/// kept sorted by model name for deterministic iteration.
+struct Shard {
+    batchers: Vec<(String, FairBatcher<Request>)>,
+}
+
+impl Shard {
+    fn get_mut(&mut self, model: &str) -> Option<&mut FairBatcher<Request>> {
+        self.batchers
+            .iter_mut()
+            .find(|(m, _)| m == model)
+            .map(|(_, b)| b)
+    }
+}
+
+/// The assembled front door. Single-threaded by design — it lives on the
+/// front thread; concurrency comes from the bounded ring behind it.
+pub struct FrontDoor {
+    shards: Vec<Shard>,
+    shard_of: HashMap<String, usize>,
+    admission: TenantAdmission,
+    filter: Option<ContentFilter>,
+    /// Work-stealing scan cursor: rotates so no shard gets structural
+    /// priority when several batches are due at once.
+    steal_rr: usize,
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl FrontDoor {
+    pub fn new(cfgs: &HashMap<String, ModelServeCfg>, cfg: &FrontDoorCfg) -> FrontDoor {
+        let n = cfg.shards.max(1);
+        let mut shards: Vec<Shard> =
+            (0..n).map(|_| Shard { batchers: Vec::new() }).collect();
+        let mut shard_of = HashMap::new();
+        // Sorted model order so shard contents are deterministic.
+        let mut models: Vec<&String> = cfgs.keys().collect();
+        models.sort();
+        for m in models {
+            let c = &cfgs[m];
+            let s = (fnv(m) % n as u64) as usize;
+            shard_of.insert(m.clone(), s);
+            shards[s].batchers.push((
+                m.clone(),
+                FairBatcher::new(
+                    c.batch,
+                    c.max_wait_ms,
+                    c.queue_cap,
+                    cfg.tenants.isolation,
+                ),
+            ));
+        }
+        FrontDoor {
+            shards,
+            shard_of,
+            admission: TenantAdmission::new(cfg.tenants.clone()),
+            filter: cfg.filter.clone().map(ContentFilter::new),
+            steal_rr: 0,
+        }
+    }
+
+    /// Decide one arriving request: filter/cache answer, throttle,
+    /// queue-full rejection, unknown-model rejection, or enqueue.
+    pub fn offer(&mut self, req: Request, now_ms: f64) -> Offer {
+        let Some(&shard) = self.shard_of.get(&req.model) else {
+            return Offer::Unknown { req };
+        };
+        // Content frontend first: a filtered frame costs no tokens and no
+        // queue space — that is the whole point.
+        if let Some(f) = self.filter.as_mut() {
+            if let Some((output, cached)) =
+                f.observe(req.id, req.stream, &req.data, now_ms)
+            {
+                return Offer::Answered { req, output, cached };
+            }
+        }
+        if let Err(retry_after_ms) = self.admission.admit(req.tenant, now_ms) {
+            if let Some(f) = self.filter.as_mut() {
+                f.abandon(req.id);
+            }
+            return Offer::Throttled { req, retry_after_ms };
+        }
+        let weight = self.admission.policy().weight(req.tenant);
+        let lane = self.admission.lane(req.tenant);
+        let b = self.shards[shard].get_mut(&req.model).unwrap();
+        if b.is_full() {
+            let retry_after_ms = b.retry_after_ms(now_ms);
+            if let Some(f) = self.filter.as_mut() {
+                f.abandon(req.id);
+            }
+            return Offer::QueueFull { req, retry_after_ms };
+        }
+        b.push(lane, weight, req, now_ms);
+        Offer::Queued
+    }
+
+    /// Work-stealing dequeue: scan every shard from a rotating cursor and
+    /// release the earliest-due ready batch, if any.
+    pub fn poll(&mut self, now_ms: f64) -> Option<(String, Vec<Request>)> {
+        let n = self.shards.len();
+        let mut best: Option<(f64, usize, usize)> = None;
+        for off in 0..n {
+            let s = (self.steal_rr + off) % n;
+            for (bi, (_, b)) in self.shards[s].batchers.iter().enumerate() {
+                let Some(due) = b.next_deadline_ms() else { continue };
+                if due <= now_ms
+                    && best.map_or(true, |(bd, _, _)| due < bd)
+                {
+                    best = Some((due, s, bi));
+                }
+            }
+        }
+        let (_, s, bi) = best?;
+        self.steal_rr = (s + 1) % n;
+        let (model, b) = &mut self.shards[s].batchers[bi];
+        b.poll(now_ms).map(|batch| (model.clone(), batch))
+    }
+
+    /// Shutdown drain: one ≤ batch chunk per call, scanning shards in
+    /// order; callers re-call until `None`.
+    pub fn flush(&mut self) -> Option<(String, Vec<Request>)> {
+        for s in &mut self.shards {
+            for (model, b) in &mut s.batchers {
+                if let Some(batch) = b.flush() {
+                    return Some((model.clone(), batch));
+                }
+            }
+        }
+        None
+    }
+
+    /// Earliest deadline across every shard (for the front thread's
+    /// receive timeout).
+    pub fn next_deadline_ms(&self) -> Option<f64> {
+        self.shards
+            .iter()
+            .flat_map(|s| s.batchers.iter())
+            .filter_map(|(_, b)| b.next_deadline_ms())
+            .min_by(f64::total_cmp)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards
+            .iter()
+            .all(|s| s.batchers.iter().all(|(_, b)| b.is_empty()))
+    }
+
+    pub fn queued(&self) -> usize {
+        self.shards
+            .iter()
+            .flat_map(|s| s.batchers.iter())
+            .map(|(_, b)| b.len())
+            .sum()
+    }
+
+    /// Feed an engine result back into the content frontend (installs the
+    /// stream reference + cache entry). No-op when the filter is off.
+    pub fn record_result(&mut self, id: u64, output: &[f32], now_ms: f64) {
+        if let Some(f) = self.filter.as_mut() {
+            f.record(id, output, now_ms);
+        }
+    }
+
+    /// Drop the filter's pending entry for a request that died downstream
+    /// (shed or failed) — its output will never arrive.
+    pub fn abandon_result(&mut self, id: u64) {
+        if let Some(f) = self.filter.as_mut() {
+            f.abandon(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, model: &str, tenant: u32) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            data: vec![id as f32; 4],
+            slo_ms: 1e9,
+            tenant,
+            stream: tenant as u64,
+            submitted: Instant::now(),
+        }
+    }
+
+    fn cfgs() -> HashMap<String, ModelServeCfg> {
+        let mut m = HashMap::new();
+        m.insert("det".to_string(), ModelServeCfg::new(4, 25.0));
+        m.insert("cls".to_string(), ModelServeCfg::new(2, 10.0));
+        m
+    }
+
+    #[test]
+    fn unknown_models_are_rejected_without_allocating_state() {
+        let mut door = FrontDoor::new(&cfgs(), &FrontDoorCfg::default());
+        let before: usize =
+            door.shards.iter().map(|s| s.batchers.len()).sum();
+        for i in 0..100 {
+            match door.offer(req(i, &format!("ghost{i}"), 0), 0.0) {
+                Offer::Unknown { .. } => {}
+                _ => panic!("unknown model must be rejected"),
+            }
+        }
+        let after: usize = door.shards.iter().map(|s| s.batchers.len()).sum();
+        assert_eq!(before, after, "no batcher growth on unknown names");
+    }
+
+    #[test]
+    fn models_spread_across_shards_and_poll_steals_work() {
+        let cfg = FrontDoorCfg { shards: 4, ..FrontDoorCfg::default() };
+        let mut door = FrontDoor::new(&cfgs(), &cfg);
+        // Fill both models to a full batch each.
+        for i in 0..4 {
+            assert!(matches!(door.offer(req(i, "det", 0), 0.0), Offer::Queued));
+        }
+        for i in 10..12 {
+            assert!(matches!(door.offer(req(i, "cls", 0), 0.0), Offer::Queued));
+        }
+        // Two polls drain both models regardless of which shards they
+        // hashed to — the dequeue side sees every shard.
+        let mut models = Vec::new();
+        while let Some((m, batch)) = door.poll(0.0) {
+            assert!(!batch.is_empty());
+            models.push(m);
+        }
+        models.sort();
+        assert_eq!(models, vec!["cls", "det"]);
+        assert!(door.is_empty());
+    }
+
+    #[test]
+    fn queue_full_rejects_with_nonzero_retry() {
+        let mut cfgs = cfgs();
+        cfgs.get_mut("det").unwrap().queue_cap = 6;
+        let mut door = FrontDoor::new(&cfgs, &FrontDoorCfg::default());
+        let mut rejected = 0;
+        for i in 0..10 {
+            match door.offer(req(i, "det", 0), 0.0) {
+                Offer::Queued => {}
+                Offer::QueueFull { retry_after_ms, .. } => {
+                    rejected += 1;
+                    assert!(retry_after_ms > 0.0, "retry hint must be > 0");
+                }
+                _ => panic!("unexpected offer"),
+            }
+        }
+        assert_eq!(rejected, 4, "cap 6 of 10 pushes");
+        assert_eq!(door.queued(), 6);
+    }
+
+    #[test]
+    fn throttled_tenant_gets_retry_hint() {
+        let mut fd = FrontDoorCfg::default();
+        fd.tenants.rate_per_s = 10.0;
+        fd.tenants.burst = 2.0;
+        let mut door = FrontDoor::new(&cfgs(), &fd);
+        let mut throttled = 0;
+        for i in 0..5 {
+            match door.offer(req(i, "det", 1), 0.0) {
+                Offer::Queued => {}
+                Offer::Throttled { retry_after_ms, .. } => {
+                    throttled += 1;
+                    assert!(retry_after_ms > 0.0);
+                }
+                _ => panic!("unexpected offer"),
+            }
+        }
+        assert_eq!(throttled, 3, "burst 2 admits 2 of 5");
+    }
+
+    #[test]
+    fn filter_answers_repeat_frames_without_queueing() {
+        let fd = FrontDoorCfg {
+            filter: Some(FilterCfg::default()),
+            ..FrontDoorCfg::default()
+        };
+        let mut door = FrontDoor::new(&cfgs(), &fd);
+        let mut r1 = req(1, "det", 0);
+        r1.data = vec![0.5; 4];
+        assert!(matches!(door.offer(r1, 0.0), Offer::Queued));
+        let (_, batch) = door.poll(100.0).expect("wait bound passed");
+        assert_eq!(batch.len(), 1);
+        door.record_result(1, &[9.0], 100.0);
+        // Same stream, same content → answered, never queued.
+        let mut r2 = req(2, "det", 0);
+        r2.data = vec![0.5; 4];
+        r2.stream = 0;
+        match door.offer(r2, 101.0) {
+            Offer::Answered { output, cached, .. } => {
+                assert_eq!(output, vec![9.0]);
+                assert!(!cached, "same-stream repeat is a frame-diff hit");
+            }
+            _ => panic!("repeat frame must be answered by the filter"),
+        }
+        assert!(door.is_empty());
+    }
+
+    #[test]
+    fn flush_drains_every_shard_in_engine_sized_chunks() {
+        let cfg = FrontDoorCfg { shards: 3, ..FrontDoorCfg::default() };
+        let mut door = FrontDoor::new(&cfgs(), &cfg);
+        for i in 0..9 {
+            door.offer(req(i, "det", 0), 0.0);
+        }
+        for i in 20..23 {
+            door.offer(req(i, "cls", 0), 0.0);
+        }
+        let mut total = 0;
+        while let Some((m, batch)) = door.flush() {
+            let cap = if m == "det" { 4 } else { 2 };
+            assert!(batch.len() <= cap, "flush chunk exceeds engine batch");
+            total += batch.len();
+        }
+        assert_eq!(total, 12);
+    }
+}

@@ -25,7 +25,7 @@ use crate::sim::invariants::{InvariantChecker, InvariantReport};
 use crate::sim::link::FifoLink;
 use crate::sim::scenario::Scenario;
 use crate::util::Rng;
-use crate::workload::{ArrivalWindow, ContentDynamics};
+use crate::workload::{ArrivalWindow, ContentDynamics, SceneFilter};
 use crate::Ms;
 
 /// Co-location interference: latency multiplier when executions overlap on
@@ -295,6 +295,12 @@ pub struct Simulator {
     rng: Rng,
     minute_workload: f64,
     minute_effective: f64,
+    /// Content-aware frontend: per-pipeline scene filter (`None` per slot
+    /// when `cfg.frontend` is off). Each filter draws from its own forked
+    /// RNG stream, so the filter decision sequence — and with it the
+    /// workload fingerprint — is independent of scheduler and fault
+    /// choices.
+    frontend: Vec<Option<SceneFilter>>,
     interference: InterferenceModel,
     /// Monotone source of per-group deployment epochs (see `Group::epoch`).
     epoch_counter: u64,
@@ -352,6 +358,8 @@ struct ScenarioData {
 const QUEUE_CAP: usize = 1024;
 const AUTOSCALE_PERIOD_MS: Ms = 10_000.0;
 const TICK_MS: Ms = 60_000.0;
+/// Seed tag for the frontend scene filters' dedicated RNG stream.
+const FRONTEND_TAG: u64 = 0xF117E2;
 
 impl Simulator {
     pub fn new(scenario: &Scenario, kind: SchedulerKind) -> Simulator {
@@ -374,6 +382,17 @@ impl Simulator {
             gpu_offset.push(n_gpus);
             n_gpus += d.gpus.len();
         }
+        let mut front_rng = Rng::new(sc.cfg.seed ^ FRONTEND_TAG);
+        let frontend = (0..sc.pipelines.len())
+            .map(|i| {
+                sc.cfg.frontend.then(|| {
+                    SceneFilter::new(
+                        sc.cfg.scene_static_frames,
+                        front_rng.fork(i as u64),
+                    )
+                })
+            })
+            .collect();
         Simulator {
             kind,
             sched: make_scheduler(kind, scenario.cfg.seed ^ 0xC0FFEE),
@@ -392,6 +411,7 @@ impl Simulator {
             rng: Rng::new(scenario.cfg.seed ^ 0x51A7ED),
             minute_workload: 0.0,
             minute_effective: 0.0,
+            frontend,
             interference: InterferenceModel::default(),
             epoch_counter: 0,
             mode: scenario.cfg.replan,
@@ -1269,6 +1289,27 @@ impl Simulator {
         let det_bytes = dag.models[0].spec.input_bytes;
         let objects = self.content[pipeline].objects_in_frame(now);
         self.minute_workload += objects as f64;
+        // Content-aware frontend: the scene filter advances EVERY frame (its
+        // dedicated RNG stream keeps the decision sequence independent of
+        // scheduler and fault choices), but a dead source wins — a frame the
+        // camera cannot ship is lost, never "filtered".
+        let scene_static = self.frontend[pipeline]
+            .as_mut()
+            .map_or(false, |f| f.filter_frame());
+        if scene_static && self.device_down[src] == 0 {
+            // The frontend answers the frame from the previous result: the
+            // objects count toward the effective timeline and
+            // `RunMetrics::filtered` (min 1 unit — an empty static frame is
+            // still an answered frame), but no query is ever created.
+            let units = (objects as u64).max(1);
+            self.minute_effective += units as f64;
+            self.metrics.record_filtered(units);
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_filtered_frame(objects, units);
+            }
+            self.push(now + 1000.0 / fps, Ev::Frame { pipeline });
+            return;
+        }
         if let Some(c) = self.checker.as_deref_mut() {
             c.on_frame(objects);
         }

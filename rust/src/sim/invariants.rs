@@ -57,6 +57,8 @@ pub struct InvariantChecker {
     events: u64,
     frames: u64,
     objects_total: u64,
+    filtered_queries: u64,
+    filtered_units: u64,
     created: u64,
     dropped: u64,
     lost_to_fault: u64,
@@ -105,6 +107,19 @@ impl InvariantChecker {
         self.frames += 1;
         self.objects_total += objects as u64;
         self.created += 1;
+    }
+
+    /// A source frame was answered by the content-aware frontend without
+    /// entering the pipeline: it counts toward the scheduler-independent
+    /// workload fingerprint (frames, objects) but is never `created`, so
+    /// query conservation is untouched. `units` is what the frontend
+    /// credited to `RunMetrics::filtered` for this frame.
+    #[inline]
+    pub fn on_filtered_frame(&mut self, objects: u32, units: u64) {
+        self.frames += 1;
+        self.objects_total += objects as u64;
+        self.filtered_queries += 1;
+        self.filtered_units += units;
     }
 
     /// A downstream child query was spawned by the router.
@@ -365,6 +380,12 @@ impl InvariantChecker {
                 metrics.completed()
             ));
         }
+        if metrics.filtered != self.filtered_units {
+            self.violation(format!(
+                "metrics filtered {} != engine frontend units {}",
+                metrics.filtered, self.filtered_units
+            ));
+        }
     }
 
     /// Consume the checker into its report.
@@ -373,6 +394,8 @@ impl InvariantChecker {
             events: self.events,
             frames: self.frames,
             objects_total: self.objects_total,
+            filtered_queries: self.filtered_queries,
+            filtered_units: self.filtered_units,
             created: self.created,
             dropped: self.dropped,
             lost_to_fault: self.lost_to_fault,
@@ -398,6 +421,10 @@ pub struct InvariantReport {
     /// Total objects the content processes produced — also
     /// scheduler-independent (per-pipeline RNG streams are isolated).
     pub objects_total: u64,
+    /// Frames the content-aware frontend answered without admission.
+    pub filtered_queries: u64,
+    /// Work units the frontend credited for those frames (>= queries).
+    pub filtered_units: u64,
     pub created: u64,
     pub dropped: u64,
     /// Queries destroyed by injected faults — conservation's fault term.
@@ -433,11 +460,13 @@ impl InvariantReport {
     /// One-line human summary for fuzz tables.
     pub fn summary(&self) -> String {
         format!(
-            "events={} frames={} objects={} created={} done={} routed={} \
-             dropped={} lost={} unrouted={} in-flight={} violations={}",
+            "events={} frames={} objects={} filtered={} created={} done={} \
+             routed={} dropped={} lost={} unrouted={} in-flight={} \
+             violations={}",
             self.events,
             self.frames,
             self.objects_total,
+            self.filtered_queries,
             self.created,
             self.completed_queries,
             self.routed,
@@ -479,6 +508,40 @@ mod tests {
         let r = c.into_report();
         assert!(r.ok(), "{:?}", r.violations);
         assert_eq!(r.workload_fingerprint(), (1, 3));
+    }
+
+    #[test]
+    fn filtered_frames_fingerprint_without_creating_queries() {
+        let mut c = InvariantChecker::new();
+        c.on_frame(2);
+        c.on_sink(10.0, 2, true, 200.0);
+        // Two frames the frontend answered (3 and 1 objects; min 1 unit each).
+        c.on_filtered_frame(3, 3);
+        c.on_filtered_frame(0, 1);
+        let mut m = RunMetrics::new(1000.0);
+        m.record(crate::metrics::Outcome::OnTime, 10.0);
+        m.record_filtered(4);
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.workload_fingerprint(), (3, 5), "filtered frames count");
+        assert_eq!(r.created, 1, "filtered frames never become queries");
+        assert_eq!((r.filtered_queries, r.filtered_units), (2, 4));
+    }
+
+    #[test]
+    fn filtered_metrics_mismatch_is_flagged() {
+        let mut c = InvariantChecker::new();
+        c.on_filtered_frame(2, 2);
+        let m = RunMetrics::new(1000.0); // filtered left at 0
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(!r.ok());
+        assert!(
+            r.violations.iter().any(|v| v.contains("filtered")),
+            "{:?}",
+            r.violations
+        );
     }
 
     #[test]

@@ -472,6 +472,15 @@ pub fn preset(name: &str) -> Option<ExperimentConfig> {
             cfg.n_sources = 2;
             cfg.duration_ms = 60_000.0;
         }
+        "static" => {
+            // Surveillance-style mostly-static scenes: the content-aware
+            // frontend answers long static runs without admission. Small
+            // and short so CI can afford an on/off comparison.
+            cfg.frontend = true;
+            cfg.scene_static_frames = 240.0;
+            cfg.n_sources = 3;
+            cfg.duration_ms = 120_000.0;
+        }
         _ => return None,
     }
     Some(cfg)
@@ -510,10 +519,16 @@ mod tests {
 
     #[test]
     fn all_presets_resolve() {
-        for name in ["standard", "lte", "double", "slo50", "slo100", "longterm", "smoke"] {
+        for name in [
+            "standard", "lte", "double", "slo50", "slo100", "longterm",
+            "smoke", "static",
+        ] {
             assert!(preset(name).is_some(), "{name}");
         }
         assert!(preset("bogus").is_none());
+        let st = preset("static").unwrap();
+        assert!(st.frontend);
+        assert_eq!(st.scene_static_frames, 240.0);
     }
 
     #[test]

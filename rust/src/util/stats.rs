@@ -219,6 +219,28 @@ impl QuantileSketch {
         }
     }
 
+    /// Fold another sketch into this one (exact: bucket counts add, and
+    /// min/max/sum/low combine losslessly). Lets per-thread sketches
+    /// merge into one session report.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.n == 0 {
+            return;
+        }
+        if self.counts.is_empty() && !other.counts.is_empty() {
+            self.counts = vec![0; NBUCKETS];
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            if c > 0 {
+                self.counts[i] += c;
+            }
+        }
+        self.low += other.low;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn len(&self) -> usize {
         self.n as usize
     }
@@ -463,6 +485,34 @@ mod tests {
         for q in [0.0, 0.25, 0.5, 1.0] {
             assert_eq!(a.quantile(q), b.quantile(q));
         }
+    }
+
+    #[test]
+    fn sketch_merge_equals_single_sketch() {
+        let mut whole = QuantileSketch::new();
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        let mut rng = crate::util::Rng::new(5);
+        for i in 0..500 {
+            let x = rng.range(1e-2, 1e4);
+            whole.push(x);
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.mean(), whole.mean());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), whole.quantile(q));
+        }
+        // Merging into an empty sketch is a copy; merging empty is a no-op.
+        let mut empty = QuantileSketch::new();
+        empty.merge(&whole);
+        assert_eq!(empty.quantile(0.5), whole.quantile(0.5));
+        let before = whole.count();
+        whole.merge(&QuantileSketch::new());
+        assert_eq!(whole.count(), before);
     }
 
     #[test]

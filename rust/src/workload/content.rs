@@ -160,6 +160,87 @@ impl ContentDynamics {
     }
 }
 
+/// During a static run, every this-many-th frame is forced through the
+/// pipeline anyway — the same staleness bound the serving-path filter
+/// applies ([`serving::filter::REFRESH_EVERY`](crate::serving::filter)).
+pub const SCENE_REFRESH_FRAMES: u32 = 30;
+
+/// Scene-level stand-in for the serving path's frame-difference filter:
+/// alternating *static* runs (consecutive near-identical frames, which a
+/// frontend answers from the previous result) and *active* runs (content
+/// changed — every frame needs inference). Run lengths are geometric via
+/// exponential draws, so the process is memoryless like the MMPP above.
+///
+/// The sim has no pixels, so the filter is modelled at the decision
+/// level: [`filter_frame`](SceneFilter::filter_frame) says whether the
+/// frame would have been skipped. Drawing from a dedicated RNG stream
+/// (not the content RNG) keeps filter decisions scheduler-independent —
+/// the workload fingerprint is identical with the frontend on or off.
+#[derive(Clone, Debug)]
+pub struct SceneFilter {
+    /// Mean frames per static run; <= 0 disables filtering entirely.
+    mean_static_frames: f64,
+    /// Mean frames per active run.
+    mean_active_frames: f64,
+    rng: Rng,
+    in_static: bool,
+    /// Frames left in the current run.
+    run_left: u32,
+    /// Consecutive filtered frames since the last refresh pass.
+    hits_since_refresh: u32,
+}
+
+impl SceneFilter {
+    pub fn new(mean_static_frames: f64, rng: Rng) -> SceneFilter {
+        SceneFilter {
+            mean_static_frames,
+            mean_active_frames: 15.0,
+            rng,
+            // `filter_frame` flips the regime when a run ends, so seeding
+            // "static, 0 left" makes the first run *active*: the first
+            // frames always reach the engine (the serving filter has no
+            // reference frame yet either).
+            in_static: true,
+            run_left: 0,
+            hits_since_refresh: 0,
+        }
+    }
+
+    fn draw_run(&mut self, mean: f64) -> u32 {
+        // rng.exp takes a *rate*; mean M frames -> rate 1/M.
+        (self.rng.exp(1.0 / mean.max(1.0)).round() as u32).max(1)
+    }
+
+    /// Advance one frame; `true` means the frontend would answer it from
+    /// the previous result (no engine work).
+    pub fn filter_frame(&mut self) -> bool {
+        if self.mean_static_frames <= 0.0 {
+            return false;
+        }
+        if self.run_left == 0 {
+            self.in_static = !self.in_static;
+            let mean = if self.in_static {
+                self.mean_static_frames
+            } else {
+                self.mean_active_frames
+            };
+            self.run_left = self.draw_run(mean);
+        }
+        self.run_left -= 1;
+        if !self.in_static {
+            self.hits_since_refresh = 0;
+            return false;
+        }
+        // Staleness cap: periodically refresh the reference frame.
+        if self.hits_since_refresh >= SCENE_REFRESH_FRAMES {
+            self.hits_since_refresh = 0;
+            return false;
+        }
+        self.hits_since_refresh += 1;
+        true
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +292,56 @@ mod tests {
         for i in 0..1000 {
             let t = i as f64 * 66.7;
             assert_eq!(a.objects_in_frame(t), b.objects_in_frame(t));
+        }
+    }
+
+    #[test]
+    fn scene_filter_mixes_static_and_active_runs() {
+        let mut f = SceneFilter::new(120.0, Rng::new(77));
+        let n = 50_000;
+        let filtered = (0..n).filter(|_| f.filter_frame()).count();
+        let frac = filtered as f64 / n as f64;
+        // Static runs mean 120 vs active mean 15, minus refresh passes:
+        // the filtered fraction should be high but never total.
+        assert!(frac > 0.6, "filtered fraction {frac}");
+        assert!(frac < 0.97, "refresh passes must leak frames: {frac}");
+    }
+
+    #[test]
+    fn scene_filter_first_frame_reaches_the_engine() {
+        let mut f = SceneFilter::new(1e6, Rng::new(1));
+        assert!(!f.filter_frame(), "no reference frame yet: engine pass");
+    }
+
+    #[test]
+    fn scene_filter_refresh_bounds_consecutive_hits() {
+        let mut f = SceneFilter::new(1e9, Rng::new(3));
+        let mut consecutive = 0u32;
+        let mut max_run = 0u32;
+        for _ in 0..10_000 {
+            if f.filter_frame() {
+                consecutive += 1;
+                max_run = max_run.max(consecutive);
+            } else {
+                consecutive = 0;
+            }
+        }
+        assert!(max_run <= SCENE_REFRESH_FRAMES, "run {max_run}");
+        assert!(max_run >= SCENE_REFRESH_FRAMES - 1, "cap should bind: {max_run}");
+    }
+
+    #[test]
+    fn scene_filter_disabled_below_zero_mean() {
+        let mut f = SceneFilter::new(0.0, Rng::new(4));
+        assert!((0..1000).all(|_| !f.filter_frame()));
+    }
+
+    #[test]
+    fn scene_filter_is_deterministic_per_seed() {
+        let mut a = SceneFilter::new(120.0, Rng::new(9));
+        let mut b = SceneFilter::new(120.0, Rng::new(9));
+        for _ in 0..5000 {
+            assert_eq!(a.filter_frame(), b.filter_frame());
         }
     }
 

@@ -6,7 +6,10 @@
 
 mod content;
 
-pub use content::{ContentDynamics, ContentProfile, DiurnalShape};
+pub use content::{
+    ContentDynamics, ContentProfile, DiurnalShape, SceneFilter,
+    SCENE_REFRESH_FRAMES,
+};
 
 /// Sliding window of arrival timestamps used to estimate per-model request
 /// rate and burstiness (CV of inter-arrival gaps) — CWD's Insight 1 inputs.

@@ -1,0 +1,273 @@
+//! Integration tests for the serving front door: the threaded serve path
+//! over a synthetic backend (no PJRT, no artifacts), the logical-clock
+//! harness, and the sim-side frontend. These are the regression tests for
+//! the three serving-path bugs this layer fixed: whole-queue shutdown
+//! flushes, unknown-model batcher leaks, and unreachable backpressure.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use octopinf::experiments::{
+    isolation_comparison, run_front_harness, HarnessCfg, TenantLoad,
+};
+use octopinf::serving::{
+    serve_with, FilterCfg, FrontDoor, FrontDoorCfg, ModelServeCfg, Offer,
+    Request, Response, SyntheticExec,
+};
+use octopinf::coordinator::SchedulerKind;
+use octopinf::sim::{preset, run_checked, Scenario};
+
+fn req(id: u64, model: &str, slo_ms: f64, data: Vec<f32>) -> Request {
+    Request {
+        id,
+        model: model.into(),
+        data,
+        slo_ms,
+        tenant: 0,
+        stream: id,
+        submitted: Instant::now(),
+    }
+}
+
+/// Shutdown with a backlog bigger than the batch size: every queued
+/// request must still be answered, in engine-legal (≤ batch) chunks.
+/// Regression for the whole-queue `flush()` that handed the engine an
+/// 11-deep batch compiled for 4.
+#[test]
+fn shutdown_backlog_larger_than_batch_answers_everyone() {
+    let mut ex = SyntheticExec::new().with_model("det", 4, 2, 0.0);
+    let mut cfgs = HashMap::new();
+    // Enormous max-wait: nothing flushes on a deadline, so the backlog is
+    // still queued when the channel closes.
+    cfgs.insert("det".to_string(), ModelServeCfg::new(4, 1e6));
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
+    for i in 0..11 {
+        req_tx.send(req(i, "det", 1e9, vec![0.1; 4])).unwrap();
+    }
+    drop(req_tx);
+    let report =
+        serve_with(&mut ex, &cfgs, FrontDoorCfg::default(), req_rx, resp_tx)
+            .unwrap();
+    assert_eq!(report.submitted, 11);
+    assert_eq!(report.served, 11, "shutdown must drain the whole backlog");
+    assert_eq!(report.failed, 0, "no chunk may exceed the engine batch");
+    assert_eq!(report.accounted(), report.submitted);
+    assert!(
+        report.batch_hist.keys().all(|&b| b <= 4),
+        "batches {:?} exceed the compiled size",
+        report.batch_hist
+    );
+    let answers: Vec<Response> = resp_rx.try_iter().collect();
+    assert_eq!(answers.len(), 11, "every client heard back");
+    assert!(answers.iter().all(|r| r.error.is_none()));
+}
+
+/// End-to-end backpressure: a slow executor + bounded queues must reject
+/// overflow with a non-zero retry hint while answering every request.
+/// Regression for the unreachable `retry_after_ms` ("retry after 0 ms")
+/// on a full queue.
+#[test]
+fn overload_rejects_with_nonzero_retry_hint() {
+    let mut ex = SyntheticExec::new().with_model("det", 4, 2, 20.0);
+    ex.sleep = true; // a genuinely slow engine, so the ring backs up
+    let mut cfgs = HashMap::new();
+    cfgs.insert("det".to_string(), ModelServeCfg::new(4, 5.0)); // cap 32
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
+    const N: u64 = 500;
+    for i in 0..N {
+        req_tx.send(req(i, "det", 1e9, vec![0.5; 4])).unwrap();
+    }
+    drop(req_tx);
+    let report =
+        serve_with(&mut ex, &cfgs, FrontDoorCfg::default(), req_rx, resp_tx)
+            .unwrap();
+    assert_eq!(report.submitted, N);
+    assert!(report.rejected > 0, "overload must reach the queue cap");
+    assert!(report.served > 0, "the engine still makes progress");
+    assert_eq!(
+        report.accounted(),
+        report.submitted,
+        "conservation: {}",
+        report.digest()
+    );
+    let answers: Vec<Response> = resp_rx.try_iter().collect();
+    assert_eq!(answers.len() as u64, N, "every request is answered");
+    let rejects: Vec<&str> = answers
+        .iter()
+        .filter_map(|r| r.error.as_deref())
+        .filter(|e| e.contains("queue full"))
+        .collect();
+    assert!(!rejects.is_empty());
+    for e in &rejects {
+        assert!(e.contains("retry after"), "{e}");
+        assert!(!e.contains("after 0 ms"), "useless hint: {e}");
+    }
+}
+
+/// Two tenants flooding the same overloaded model: equal weights split
+/// service ~evenly, a 3:1 weight tilts it. The queue cap is raised so
+/// nothing is rejected — the split is decided purely by weighted-fair
+/// batch assembly (FIFO would keep the weighted case even).
+#[test]
+fn fair_dequeue_shares_an_overloaded_model_by_weight() {
+    let mk_load = |tenant| TenantLoad {
+        tenant,
+        streams: 4,
+        fps: 50.0,
+        model: "det".to_string(),
+        slo_ms: 300.0, // overload resolves by shedding, never rejection
+        start_ms: 0.0,
+        stop_ms: 2_000.0,
+        static_scene: false,
+    };
+    let mk_hc = || {
+        let mut cfgs = HashMap::new();
+        let mut c = ModelServeCfg::new(4, 5.0);
+        c.queue_cap = 2048; // larger than the whole offered load
+        cfgs.insert("det".to_string(), c);
+        HarnessCfg {
+            cfgs,
+            front: FrontDoorCfg::default(), // isolation on, unlimited rate
+            duration_ms: 2_000.0,
+            service_ms: 20.0, // ~200 req/s capacity vs 400 req/s offered
+        }
+    };
+    let r = run_front_harness(&mk_hc(), &[mk_load(1), mk_load(2)], 3);
+    assert_eq!(r.accounted(), r.submitted, "{}", r.digest());
+    assert_eq!(r.rejected, 0, "the cap must not bind in this test");
+    assert!(r.shed > 0, "the load must actually exceed capacity");
+    let a = r.per_tenant[&1].served as f64;
+    let b = r.per_tenant[&2].served as f64;
+    assert!(a > 0.0 && b > 0.0);
+    assert!(
+        (a - b).abs() / a.max(b) < 0.15,
+        "equal-weight split skewed: {a} vs {b}"
+    );
+    let mut hc = mk_hc();
+    hc.front.tenants.weights.insert(1, 3.0);
+    let r = run_front_harness(&hc, &[mk_load(1), mk_load(2)], 3);
+    assert_eq!(r.accounted(), r.submitted, "{}", r.digest());
+    let a = r.per_tenant[&1].served as f64;
+    let b = r.per_tenant[&2].served as f64;
+    assert!(b > 0.0, "the light tenant still gets its share");
+    assert!(a > 2.0 * b, "weight 3 vs 1 must tilt the split: {a} vs {b}");
+}
+
+/// The full isolation experiment: the steady tenant survives the flood
+/// only when isolation is on.
+#[test]
+fn isolation_experiment_protects_tenant_b() {
+    let (no_iso, iso) = isolation_comparison(true);
+    assert_eq!(no_iso.accounted(), no_iso.submitted, "{}", no_iso.digest());
+    assert_eq!(iso.accounted(), iso.submitted, "{}", iso.digest());
+    let b_iso = iso.per_tenant.get(&2).unwrap().attainment();
+    let b_open = no_iso.per_tenant.get(&2).unwrap().attainment();
+    assert!(
+        b_iso > b_open + 0.15,
+        "isolation must visibly protect B: {b_iso:.3} vs {b_open:.3}"
+    );
+}
+
+/// Content frontend: a repeated frame on the same stream is answered by
+/// frame-diff; identical content on a *different* stream is answered by
+/// the content-hash cache.
+#[test]
+fn filter_and_cache_answer_without_engine_work() {
+    let mut cfgs = HashMap::new();
+    cfgs.insert("det".to_string(), ModelServeCfg::new(4, 5.0));
+    let mut front = FrontDoorCfg::default();
+    front.filter = Some(FilterCfg::default());
+    let mut door = FrontDoor::new(&cfgs, &front);
+    let payload: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+    let mk = |id, stream| Request {
+        id,
+        model: "det".into(),
+        data: payload.clone(),
+        slo_ms: 1e9,
+        tenant: 0,
+        stream,
+        submitted: Instant::now(),
+    };
+    // First frame of stream 1: no reference yet — queued for the engine.
+    assert!(matches!(door.offer(mk(1, 1), 0.0), Offer::Queued));
+    door.record_result(1, &[9.0, 9.0], 1.0);
+    // Same stream, same scene: frame-diff answer from the last result.
+    match door.offer(mk(2, 1), 2.0) {
+        Offer::Answered { output, cached, .. } => {
+            assert_eq!(output, vec![9.0, 9.0]);
+            assert!(!cached, "same-stream hits are frame-diff, not cache");
+        }
+        _ => panic!("expected a frame-diff answer"),
+    }
+    // Different stream, identical content: cross-stream cache answer.
+    match door.offer(mk(3, 2), 3.0) {
+        Offer::Answered { cached, .. } => assert!(cached),
+        _ => panic!("expected a cache answer"),
+    }
+}
+
+/// The sharded front door is deterministic under a fixed seed: three
+/// models hashed across three shards, three tenants, two identical runs,
+/// identical digests.
+#[test]
+fn sharded_path_is_deterministic_under_fixed_seed() {
+    let mut cfgs = HashMap::new();
+    for m in ["det", "classifier", "embedder"] {
+        cfgs.insert(m.to_string(), ModelServeCfg::new(4, 5.0));
+    }
+    let mut front = FrontDoorCfg::default();
+    front.shards = 3;
+    let loads: Vec<TenantLoad> = ["det", "classifier", "embedder"]
+        .iter()
+        .enumerate()
+        .map(|(i, m)| TenantLoad {
+            tenant: i as u32,
+            streams: 3,
+            fps: 40.0,
+            model: m.to_string(),
+            slo_ms: 500.0,
+            start_ms: 0.0,
+            stop_ms: 3_000.0,
+            static_scene: i == 0,
+        })
+        .collect();
+    let hc = HarnessCfg {
+        cfgs,
+        front,
+        duration_ms: 3_000.0,
+        service_ms: 8.0,
+    };
+    let a = run_front_harness(&hc, &loads, 42);
+    let b = run_front_harness(&hc, &loads, 42);
+    assert_eq!(a.digest(), b.digest());
+    assert_eq!(a.accounted(), a.submitted, "{}", a.digest());
+    assert!(a.per_model.len() == 3, "all three shards saw work");
+}
+
+/// Sim-side frontend on the `static` preset: invariants hold, the
+/// workload fingerprint is identical with the frontend on or off, and
+/// the frontend actually filters.
+#[test]
+fn sim_frontend_keeps_the_workload_fingerprint() {
+    let mut on = preset("static").expect("static preset");
+    on.duration_ms = 60_000.0;
+    on.n_sources = 2;
+    let mut off = on.clone();
+    off.frontend = false;
+    let (m_off, inv_off) =
+        run_checked(&Scenario::build(off), SchedulerKind::OctopInf);
+    let (m_on, inv_on) =
+        run_checked(&Scenario::build(on), SchedulerKind::OctopInf);
+    assert!(inv_off.ok(), "{:?}", inv_off.violations);
+    assert!(inv_on.ok(), "{:?}", inv_on.violations);
+    assert_eq!(
+        inv_off.workload_fingerprint(),
+        inv_on.workload_fingerprint(),
+        "the frontend changes admission, never the scene"
+    );
+    assert_eq!(m_off.filtered, 0);
+    assert!(m_on.filtered > 0, "static scenes must filter");
+    assert_eq!(inv_on.filtered_units, m_on.filtered);
+}
