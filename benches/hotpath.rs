@@ -4,10 +4,14 @@
 
 mod common;
 
+use std::collections::BinaryHeap;
+
 use octopinf::config::ExperimentConfig;
 use octopinf::coordinator::SchedulerKind;
+use octopinf::network::{BwTrace, TraceKind};
 use octopinf::serving::DynamicBatcher;
-use octopinf::sim::{run, Scenario};
+use octopinf::sim::wheel::{EventWheel, WheelEntry};
+use octopinf::sim::{run, FifoLink, Scenario};
 use octopinf::util::stats::{burstiness, QuantileSketch};
 use octopinf::util::Rng;
 use octopinf::workload::{ArrivalWindow, ContentDynamics, ContentProfile};
@@ -72,6 +76,64 @@ fn main() {
             p.push(s);
         }
         std::hint::black_box((p.p50(), p.p95(), p.p99()));
+    });
+
+    // Event queue: the sim's time source. Same seeded (time, tie) stream
+    // through the calendar wheel and through the old global-BinaryHeap
+    // discipline, insert+pop in engine-like order (mostly near-future
+    // pushes, monotone pops).
+    let keys: Vec<(f64, u64)> = {
+        let mut r = Rng::new(6);
+        let mut t = 0.0;
+        (0..10_000u64)
+            .map(|s| {
+                t += r.exp(0.5); // ~2 ms mean gap, many same-bucket entries
+                (t + r.range(0.0, 50.0), r.next_u64())
+            })
+            .collect()
+    };
+    rec.micro("event wheel insert+pop 10k", 200, || {
+        let mut w: EventWheel<u64> = EventWheel::new();
+        for (s, &(t, tie)) in keys.iter().enumerate() {
+            w.push(t, tie, s as u64, s as u64);
+        }
+        while let Some(e) = w.pop() {
+            std::hint::black_box(e.ev);
+        }
+    });
+    rec.micro("event binaryheap insert+pop 10k", 200, || {
+        let mut h: BinaryHeap<WheelEntry<u64>> = BinaryHeap::new();
+        for (s, &(t, tie)) in keys.iter().enumerate() {
+            h.push(WheelEntry { t, tie, seq: s as u64, ev: s as u64 });
+        }
+        while let Some(e) = h.pop() {
+            std::hint::black_box(e.ev);
+        }
+    });
+
+    // FifoLink::send on a live trace, and into a blackout window (the
+    // outage path is an O(1) skip-table lookup, not a per-second scan).
+    let lte = {
+        let mut r = Rng::new(8);
+        BwTrace::generate(TraceKind::Lte, 120_000.0, &mut r)
+    };
+    let mut link = FifoLink::new(lte, 20.0);
+    let mut now = 0.0;
+    rec.micro("fifolink send lte", 500_000, || {
+        now = (now + 0.2) % 100_000.0;
+        std::hint::black_box(link.send(now, 20_000.0));
+    });
+    let dark = {
+        let mut r = Rng::new(9);
+        let mut t = BwTrace::generate(TraceKind::FiveG, 600_000.0, &mut r);
+        t.zero_window(10, 400); // 390 s mid-trace outage
+        FifoLink::new(t, 20.0)
+    };
+    rec.micro("fifolink clone+send into blackout", 200_000, || {
+        // Clone resets free_at so every iteration takes the deferral path
+        // (the pre-wheel engine re-scanned those 385 dark seconds here).
+        let mut l = dark.clone();
+        std::hint::black_box(l.send(15_000.0, 20_000.0));
     });
 
     // Burstiness over a large arrival vector.

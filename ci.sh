@@ -8,6 +8,9 @@
 #               seed (override with FUZZ_SEED0 to rotate the corpus)
 #   chaos smoke: fault-storm recovery comparison in both replan modes
 #               (override CHAOS_SEED0 to rotate the storms)
+#   partition determinism: fuzz + chaos smokes re-run at --sim-jobs 1 and
+#               --sim-jobs 4 over 2-cluster scenarios; the printed digest
+#               lines must match byte-for-byte or CI exits non-zero
 #   perf:       cargo bench --bench hotpath -> BENCH_hotpath.json; the
 #               first run captures BENCH_hotpath.baseline.json (commit it),
 #               later runs gate >25 % per-entry regressions
@@ -32,6 +35,31 @@ cargo run --release --quiet -- fuzz --scenarios 8 --replan drift --seed0 "${FUZZ
 # or conservation violation exits non-zero.
 cargo run --release --quiet -- chaos --storms 3 --seed0 "${CHAOS_SEED0:-3298844397}"
 cargo run --release --quiet -- chaos --storms 3 --replan drift --seed0 "${CHAOS_SEED0:-3298844397}"
+
+# Partition-determinism gate: the same sweeps at --sim-jobs 1 vs 4 over
+# two-cluster scenarios must emit identical digest lines — `--sim-jobs`
+# is a wall-clock knob, never a result axis.
+det_gate() {
+  local label="$1"; shift
+  local a b
+  a=$("$@" --sim-jobs 1 | grep '^digest:' || true)
+  b=$("$@" --sim-jobs 4 | grep '^digest:' || true)
+  if [ -z "$a" ] || [ -z "$b" ]; then
+    echo "ci.sh: $label smoke printed no digest line" >&2
+    exit 1
+  fi
+  if [ "$a" != "$b" ]; then
+    echo "ci.sh: $label digests diverged across --sim-jobs" >&2
+    echo "  --sim-jobs 1: $a" >&2
+    echo "  --sim-jobs 4: $b" >&2
+    exit 1
+  fi
+  echo "$label digest stable across --sim-jobs (clusters=2): ${a#digest: }"
+}
+det_gate fuzz cargo run --release --quiet -- fuzz \
+  --scenarios 6 --clusters 2 --seed0 "${FUZZ_SEED0:-12648430}"
+det_gate chaos cargo run --release --quiet -- chaos \
+  --storms 2 --clusters 2 --seed0 "${CHAOS_SEED0:-3298844397}"
 
 # Front-door smoke: filter/isolation/sim-frontend comparisons with hard
 # acceptance bars (filter gain >= 3x, tenant-B attainment pinned above

@@ -106,6 +106,12 @@ pub struct ExperimentConfig {
     /// Mean static-scene run length in frames for the frontend model
     /// (larger = more consecutive near-identical frames get filtered).
     pub scene_static_frames: f64,
+    /// Independent edge clusters (sim partitions). Partition 0 runs this
+    /// exact config; replicas re-derive their workload from
+    /// splitmix-separated seeds (`sim::partition_seed`). Part of the
+    /// workload definition — unlike `--sim-jobs`, which only picks how
+    /// many threads tick the partitions.
+    pub clusters: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -126,6 +132,7 @@ impl Default for ExperimentConfig {
             crash_policy: CrashPolicy::Reroute,
             frontend: false,
             scene_static_frames: 120.0,
+            clusters: 1,
         }
     }
 }
@@ -188,6 +195,9 @@ impl ExperimentConfig {
         if let Some(v) = raw.get_f64("experiment", "scene_static_frames") {
             cfg.scene_static_frames = v;
         }
+        if let Some(v) = raw.get_u64("experiment", "clusters") {
+            cfg.clusters = v as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -213,6 +223,9 @@ impl ExperimentConfig {
                 "scene_static_frames {} must be finite and >= 0",
                 self.scene_static_frames
             ));
+        }
+        if self.clusters == 0 || self.clusters > 64 {
+            return Err(format!("clusters {} not in 1..=64", self.clusters));
         }
         Ok(())
     }
@@ -307,6 +320,18 @@ mod tests {
             "[experiment]\nscene_static_frames = -5\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn clusters_parse_and_validate() {
+        assert_eq!(ExperimentConfig::default().clusters, 1);
+        let cfg =
+            ExperimentConfig::from_text("[experiment]\nclusters = 4\n").unwrap();
+        assert_eq!(cfg.clusters, 4);
+        assert!(ExperimentConfig::from_text("[experiment]\nclusters = 0\n")
+            .is_err());
+        assert!(ExperimentConfig::from_text("[experiment]\nclusters = 65\n")
+            .is_err());
     }
 
     #[test]

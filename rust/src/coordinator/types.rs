@@ -196,8 +196,10 @@ impl<'a> SchedEnv<'a> {
     }
 }
 
-/// Scheduler interface all five systems implement.
-pub trait Scheduler {
+/// Scheduler interface all five systems implement. `Send` because sim
+/// partitions (each owning a boxed scheduler) migrate across the driver's
+/// worker threads between epoch barriers.
+pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
     fn plan(&mut self, env: &SchedEnv) -> Plan;
 

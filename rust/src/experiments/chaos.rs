@@ -13,7 +13,8 @@
 //!   survive for migration, or die with the hardware
 
 use crate::coordinator::{ReplanMode, SchedulerKind};
-use crate::sim::{run_checked, FuzzSpec};
+use crate::sim::{run_checked_with, FuzzSpec};
+use crate::util::stats::{fnv1a, FNV_OFFSET};
 use crate::util::table::{fnum, Table};
 
 use super::runner::par_map;
@@ -72,8 +73,26 @@ pub fn chaos_comparison(
     jobs: usize,
     mode: ReplanMode,
 ) -> Vec<ChaosComparison> {
+    chaos_comparison_with(seed0, n, jobs, mode, 1, 1)
+}
+
+/// [`chaos_comparison`] with `clusters` partitions per storm and
+/// `sim_jobs` partition workers inside every simulation. Both job axes
+/// are pure wall-clock knobs — the comparisons and [`chaos_digest`] over
+/// them are byte-identical at any combination.
+pub fn chaos_comparison_with(
+    seed0: u64,
+    n: usize,
+    jobs: usize,
+    mode: ReplanMode,
+    sim_jobs: usize,
+    clusters: usize,
+) -> Vec<ChaosComparison> {
     let kinds = SchedulerKind::all_main();
-    let specs = storm_specs(seed0, n);
+    let mut specs = storm_specs(seed0, n);
+    for s in &mut specs {
+        s.cfg.clusters = clusters.max(1);
+    }
     // Flatten to independent (scheduler, spec, recovery) cells.
     let cells: Vec<(usize, FuzzSpec, bool)> = kinds
         .iter()
@@ -89,7 +108,7 @@ pub fn chaos_comparison(
         let mut spec = spec.clone();
         spec.cfg.replan = mode;
         spec.cfg.recovery = *rec;
-        let (m, report) = run_checked(&spec.build(), kinds[*ki]);
+        let (m, report) = run_checked_with(&spec.build(), kinds[*ki], sim_jobs);
         (
             *ki,
             *rec,
@@ -124,6 +143,27 @@ pub fn chaos_comparison(
         c.violations += violations;
     }
     out
+}
+
+/// One 64-bit line for a whole chaos run: every cell's counters in
+/// scheduler order, recovery and no-recovery arms both folded. CI runs
+/// the same storms at `--sim-jobs 1` and `--sim-jobs 4` and fails on any
+/// difference.
+pub fn chaos_digest(cmps: &[ChaosComparison]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for (i, c) in cmps.iter().enumerate() {
+        h = fnv1a(h, i as u64);
+        h = fnv1a(h, c.scenarios as u64);
+        h = fnv1a(h, c.violations as u64);
+        for agg in [&c.recovery, &c.no_recovery] {
+            h = fnv1a(h, agg.on_time);
+            h = fnv1a(h, agg.late);
+            h = fnv1a(h, agg.dropped);
+            h = fnv1a(h, agg.lost_to_fault);
+            h = fnv1a(h, agg.plans);
+        }
+    }
+    h
 }
 
 /// Render the comparison for the CLI.
@@ -189,5 +229,17 @@ mod tests {
         for c in &cmps {
             assert_eq!(c.violations, 0, "{}: invariant violations", c.kind.label());
         }
+    }
+
+    #[test]
+    fn chaos_digest_is_invariant_to_sim_jobs() {
+        let base =
+            chaos_comparison_with(57, 1, 0, ReplanMode::Periodic, 1, 2);
+        let d0 = chaos_digest(&base);
+        let par = chaos_comparison_with(57, 1, 0, ReplanMode::Periodic, 4, 2);
+        assert_eq!(chaos_digest(&par), d0, "sim-jobs changed chaos results");
+        let other =
+            chaos_comparison_with(58, 1, 0, ReplanMode::Periodic, 1, 2);
+        assert_ne!(chaos_digest(&other), d0, "digest ignores the storms");
     }
 }

@@ -11,7 +11,7 @@
 //! SLO-attainment headroom is.
 
 use crate::coordinator::{ReplanMode, SchedulerKind};
-use crate::sim::{run_checked, FuzzClass, FuzzSpec, ScenarioGen};
+use crate::sim::{run_checked_with, FuzzClass, FuzzSpec, ScenarioGen};
 use crate::util::table::{fnum, Table};
 
 use super::runner::par_map;
@@ -78,6 +78,17 @@ pub fn drift_comparison(
     per_family: usize,
     jobs: usize,
 ) -> Vec<FamilyComparison> {
+    drift_comparison_with(seed0, per_family, jobs, 1)
+}
+
+/// [`drift_comparison`] with `sim_jobs` partition worker threads inside
+/// every simulation (pure wall-clock knob; results byte-identical).
+pub fn drift_comparison_with(
+    seed0: u64,
+    per_family: usize,
+    jobs: usize,
+    sim_jobs: usize,
+) -> Vec<FamilyComparison> {
     let buckets = family_specs(seed0, per_family);
     // Flatten to independent (spec, mode) cells.
     let cells: Vec<(usize, FuzzSpec, ReplanMode)> = buckets
@@ -95,7 +106,8 @@ pub fn drift_comparison(
         let (fi, spec, mode) = &cells[i];
         let mut spec = spec.clone();
         spec.cfg.replan = *mode;
-        let (m, report) = run_checked(&spec.build(), SchedulerKind::OctopInf);
+        let (m, report) =
+            run_checked_with(&spec.build(), SchedulerKind::OctopInf, sim_jobs);
         (
             *fi,
             *mode,

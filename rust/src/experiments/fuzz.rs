@@ -14,7 +14,8 @@
 //! `jobs = 0` means one worker per hardware thread).
 
 use crate::coordinator::{ReplanMode, SchedulerKind};
-use crate::sim::{run_checked, FuzzSpec, Scenario, ScenarioGen};
+use crate::sim::{run_checked_with, FuzzSpec, Scenario, ScenarioGen};
+use crate::util::stats::{fnv1a, FNV_OFFSET};
 
 use super::runner::par_map;
 
@@ -29,6 +30,10 @@ pub struct ConformanceOutcome {
     /// Total completed queries across all runs (sanity: the round did work).
     pub total_completions: u64,
     pub runs: usize,
+    /// FNV fold of every run's full [`RunMetrics::digest`], in scheduler
+    /// order — the bit-exact summary the `--sim-jobs` determinism gate in
+    /// `ci.sh` diffs.
+    pub metrics_digest: u64,
 }
 
 impl ConformanceOutcome {
@@ -70,6 +75,17 @@ pub fn conformance_round_mode(
     spec: &FuzzSpec,
     mode: ReplanMode,
 ) -> ConformanceOutcome {
+    conformance_round_with(spec, mode, 1)
+}
+
+/// [`conformance_round_mode`] with `sim_jobs` partition worker threads
+/// inside every simulation (a pure wall-clock knob — the outcome,
+/// including `metrics_digest`, is byte-identical at any value).
+pub fn conformance_round_with(
+    spec: &FuzzSpec,
+    mode: ReplanMode,
+    sim_jobs: usize,
+) -> ConformanceOutcome {
     let mut spec = spec.clone();
     spec.cfg.replan = mode;
     let spec = &spec;
@@ -79,6 +95,7 @@ pub fn conformance_round_mode(
         divergences: Vec::new(),
         total_completions: 0,
         runs: 0,
+        metrics_digest: FNV_OFFSET,
     };
     // (kind, frames, objects, trace bits) per run; each run rebuilds the
     // scenario from the spec so generator determinism is itself under test.
@@ -86,8 +103,9 @@ pub fn conformance_round_mode(
     for kind in SchedulerKind::conformance_set() {
         let sc = spec.build();
         let bits = trace_fingerprint(&sc);
-        let (_metrics, report) = run_checked(&sc, kind);
+        let (metrics, report) = run_checked_with(&sc, kind, sim_jobs);
         outcome.runs += 1;
+        outcome.metrics_digest = fnv1a(outcome.metrics_digest, metrics.digest());
         outcome.total_completions += report.completed_queries;
         for v in &report.violations {
             outcome.violations.push((kind, v.clone()));
@@ -141,8 +159,49 @@ pub fn run_conformance_mode(
     jobs: usize,
     mode: ReplanMode,
 ) -> Vec<ConformanceOutcome> {
-    let specs: Vec<FuzzSpec> = ScenarioGen::new(seed0).take(n).collect();
-    par_map(specs.len(), jobs, |i| conformance_round_mode(&specs[i], mode))
+    run_conformance_with(seed0, n, jobs, mode, 1, 1)
+}
+
+/// Full-knob sweep: `clusters` partitions per scenario (> 1 makes every
+/// spec a multi-cluster workload, recorded in its repro string) and
+/// `sim_jobs` partition workers inside each simulation. The outcome
+/// vector — and [`conformance_digest`] over it — is byte-identical at any
+/// `jobs`/`sim_jobs` combination.
+pub fn run_conformance_with(
+    seed0: u64,
+    n: usize,
+    jobs: usize,
+    mode: ReplanMode,
+    sim_jobs: usize,
+    clusters: usize,
+) -> Vec<ConformanceOutcome> {
+    let specs: Vec<FuzzSpec> = ScenarioGen::new(seed0)
+        .take(n)
+        .map(|mut s| {
+            s.cfg.clusters = clusters.max(1);
+            s
+        })
+        .collect();
+    par_map(specs.len(), jobs, |i| {
+        conformance_round_with(&specs[i], mode, sim_jobs)
+    })
+}
+
+/// One 64-bit line for a whole conformance sweep: folds every outcome's
+/// seed, run/violation/divergence counts, completions, and full metrics
+/// digest. CI runs the same sweep at `--sim-jobs 1` and `--sim-jobs 4`
+/// and fails on any difference.
+pub fn conformance_digest(outcomes: &[ConformanceOutcome]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for o in outcomes {
+        h = fnv1a(h, o.spec.seed);
+        h = fnv1a(h, o.runs as u64);
+        h = fnv1a(h, o.total_completions);
+        h = fnv1a(h, o.violations.len() as u64);
+        h = fnv1a(h, o.divergences.len() as u64);
+        h = fnv1a(h, o.metrics_digest);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -158,6 +217,35 @@ mod tests {
         assert!(a.total_completions > 0, "round did no work");
         let b = conformance_round(&spec);
         assert_eq!(a.total_completions, b.total_completions);
+        assert_eq!(a.metrics_digest, b.metrics_digest);
+    }
+
+    #[test]
+    fn sweep_digest_is_invariant_to_both_job_axes() {
+        // Grid workers (jobs) and partition workers (sim_jobs) are both
+        // pure wall-clock knobs; two clusters make the partition axis
+        // actually fan out.
+        let base = run_conformance_with(700, 3, 1, ReplanMode::Periodic, 1, 2);
+        let d0 = conformance_digest(&base);
+        for (jobs, sim_jobs) in [(4, 1), (1, 4), (2, 2)] {
+            let alt = run_conformance_with(
+                700,
+                3,
+                jobs,
+                ReplanMode::Periodic,
+                sim_jobs,
+                2,
+            );
+            assert_eq!(
+                conformance_digest(&alt),
+                d0,
+                "jobs={jobs} sim_jobs={sim_jobs} diverged"
+            );
+        }
+        // The digest is content-sensitive: a different corpus digests
+        // differently.
+        let other = run_conformance_with(701, 3, 1, ReplanMode::Periodic, 1, 2);
+        assert_ne!(conformance_digest(&other), d0);
     }
 
     #[test]

@@ -12,15 +12,21 @@ pub mod frontdoor;
 pub mod fuzz;
 pub mod runner;
 
-pub use chaos::{chaos_comparison, chaos_table, storm_specs, ChaosComparison};
-pub use drift::{drift_comparison, drift_table, FamilyComparison};
+pub use chaos::{
+    chaos_comparison, chaos_comparison_with, chaos_digest, chaos_table,
+    storm_specs, ChaosComparison,
+};
+pub use drift::{
+    drift_comparison, drift_comparison_with, drift_table, FamilyComparison,
+};
 pub use frontdoor::{
     filter_comparison, frontdoor_outcome, isolation_comparison,
     run_front_harness, FrontdoorOutcome, HarnessCfg, TenantLoad,
 };
 pub use fuzz::{
-    conformance_round, conformance_round_mode, run_conformance,
-    run_conformance_mode, ConformanceOutcome,
+    conformance_digest, conformance_round, conformance_round_mode,
+    conformance_round_with, run_conformance, run_conformance_mode,
+    run_conformance_with, ConformanceOutcome,
 };
 pub use runner::{run_grid, run_one, RunSpec};
 

@@ -8,12 +8,16 @@
 //! back **in input order**, which makes `--jobs N` output byte-identical
 //! to `--jobs 1`: parallelism changes wall-clock only, never tables.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use crate::config::ExperimentConfig;
 use crate::coordinator::SchedulerKind;
 use crate::metrics::RunMetrics;
 use crate::sim::{run, Scenario};
+
+// The deterministic fan-out itself lives in `util::par` now (the sim
+// driver's partition loop shares it); re-exported here because every
+// experiment module — and external callers — historically import it from
+// the runner.
+pub use crate::util::par::{effective_jobs, par_map};
 
 /// One cell of an experiment grid.
 #[derive(Clone, Debug)]
@@ -38,65 +42,6 @@ impl RunSpec {
 pub fn run_one(spec: &RunSpec) -> RunMetrics {
     let sc = Scenario::build(spec.cfg.clone());
     run(&sc, spec.kind)
-}
-
-/// Resolve a `--jobs` request: 0 means "one per hardware thread", and the
-/// worker count never exceeds the number of cells.
-pub fn effective_jobs(jobs: usize, n_cells: usize) -> usize {
-    let hw = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
-    let j = if jobs == 0 { hw } else { jobs };
-    j.clamp(1, n_cells.max(1))
-}
-
-/// Map `f` over `0..n` across `jobs` scoped worker threads (`0` = one per
-/// hardware thread), returning results **in index order** regardless of
-/// completion order. Work-stealing over an atomic cursor: long items
-/// (e.g. the 13-hour diurnal run) don't leave siblings idle behind a
-/// static partition. Shared by the experiment grids and the conformance
-/// fuzzer.
-pub fn par_map<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    let jobs = effective_jobs(jobs, n);
-    if jobs <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut slots: Vec<Option<T>> = Vec::new();
-    slots.resize_with(n, || None);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..jobs)
-            .map(|_| {
-                let next = &next;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut done = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        done.push((i, f(i)));
-                    }
-                    done
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, v) in h.join().expect("parallel worker panicked") {
-                slots[i] = Some(v);
-            }
-        }
-    });
-    slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, s)| s.unwrap_or_else(|| panic!("cell {i} never ran")))
-        .collect()
 }
 
 /// Execute every cell, `jobs` at a time (`0` = all hardware threads), and

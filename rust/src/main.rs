@@ -19,7 +19,7 @@ use octopinf::runtime::{default_artifacts_dir, Runtime};
 use octopinf::serving::{
     serve_front, FilterCfg, FrontDoorCfg, ModelServeCfg, Request,
 };
-use octopinf::sim::{run as sim_run, Scenario};
+use octopinf::sim::Scenario;
 use octopinf::util::cli::Args;
 use octopinf::util::table::{fnum, Table};
 
@@ -28,14 +28,19 @@ const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|s
   simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke|static]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
            [--seed 42] [--duration-min N] [--replan periodic|drift]
+           [--clusters N]  independent edge clusters (sim partitions;
+                           part of the workload, default 1)
+           [--sim-jobs N]  worker threads ticking the partitions (0 = all
+                           cores; pure wall-clock knob — metrics and the
+                           printed digest are byte-identical at any value)
   figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
   fuzz     [--scenarios 50] [--seed0 3735928559] [--jobs N]
-           [--replan periodic|drift]
-           [--repro fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K]]
-  drift    [--per-family 4] [--seed0 3735928559] [--jobs N]
+           [--replan periodic|drift] [--sim-jobs N] [--clusters N]
+           [--repro fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K][:horizon=H][:clusters=C]]
+  drift    [--per-family 4] [--seed0 3735928559] [--jobs N] [--sim-jobs N]
            (fixed-period vs drift-triggered OctopInf per fuzz family)
   chaos    [--storms 8] [--seed0 3299893997] [--jobs N]
-           [--replan periodic|drift] [--help]
+           [--replan periodic|drift] [--sim-jobs N] [--clusters N] [--help]
            (recovery on/off across fault storms; see `chaos --help`)
   serve    [--duration-s 10] [--fps 30] [--slo-ms 200] [--shards 2]
            [--tenants 1] [--tenant-rate R] [--filter on|off] [--help]
@@ -86,8 +91,14 @@ on every run — a storm that loses a query unaccounted fails the sweep.
 options:
   --storms N          fault-storm scenarios per scheduler (default 8)
   --seed0 N           base seed for the storm specs (default 0xC4A0_5EED)
-  --jobs N            worker threads (0 = all cores); output is
-                      byte-identical at any job count
+  --jobs N            worker threads over storm cells (0 = all cores);
+                      output is byte-identical at any job count
+  --sim-jobs N        worker threads over cluster partitions *inside*
+                      each simulation (0 = all cores); equally
+                      byte-identical at any value — CI diffs the digest
+                      line across --sim-jobs 1 and 4
+  --clusters N        independent edge clusters per storm (default 1;
+                      part of the workload and of each repro string)
   --replan MODE       periodic|drift — replan clock both arms run under
 
 recovery-policy knobs (config file `[experiment]` / repro string):
@@ -168,14 +179,19 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.duration_ms = d.parse::<f64>()? * 60_000.0;
     }
     cfg.replan = parse_replan(args)?;
+    cfg.clusters = args.get_usize("clusters", cfg.clusters);
+    cfg.validate().map_err(|e| anyhow!("{e}"))?;
+    let sim_jobs = args.get_usize("sim-jobs", 1);
     let kind = SchedulerKind::parse(args.get_or("scheduler", "octopinf"))
         .ok_or_else(|| anyhow!("unknown scheduler"))?;
     let replan = cfg.replan;
+    let clusters = cfg.clusters;
     let sc = Scenario::build(cfg);
-    let m = sim_run(&sc, kind);
+    let m = octopinf::sim::run_with(&sc, kind, sim_jobs);
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["scheduler".to_string(), kind.label().to_string()]);
     t.row(vec!["replan".into(), replan.label().to_string()]);
+    t.row(vec!["clusters".into(), clusters.to_string()]);
     t.row(vec!["effective_thpt(obj/s)".into(), fnum(m.effective_throughput(), 2)]);
     t.row(vec!["total_thpt(obj/s)".into(), fnum(m.total_throughput(), 2)]);
     t.row(vec!["violation_rate".into(), fnum(m.violation_rate(), 3)]);
@@ -188,6 +204,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     t.row(vec!["filtered".into(), m.filtered.to_string()]);
     println!("{}", t.to_markdown());
     println!("\nlatency histogram: {}", m.latency_hist.sparkline());
+    // Bit-exact run fingerprint — must not move across --sim-jobs values.
+    println!("digest: {:016x}", m.digest());
     Ok(())
 }
 
@@ -229,28 +247,30 @@ fn cmd_figure(args: &Args) -> Result<()> {
 /// any violation; each row carries its one-line repro string.
 fn cmd_fuzz(args: &Args) -> Result<()> {
     use octopinf::experiments::fuzz::{
-        conformance_round_mode, run_conformance_mode,
+        conformance_digest, conformance_round_with, run_conformance_with,
     };
     use octopinf::sim::FuzzSpec;
 
     let mode = parse_replan(args)?;
+    let sim_jobs = args.get_usize("sim-jobs", 1);
     if let Some(r) = args.get("repro") {
         let spec = FuzzSpec::from_repro(r).ok_or_else(|| {
             anyhow!(
-                "bad repro string {r:?} \
-                 (expected fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K])"
+                "bad repro string {r:?} (expected fuzz:v1:seed=N\
+                 [:replan=drift][:faults=M][:order=K][:horizon=H][:clusters=C])"
             )
         })?;
         // A mode embedded in the repro string wins over the --replan flag:
         // the string must replay exactly the failing configuration.
         let mode = if r.contains(":replan=") { spec.cfg.replan } else { mode };
         println!("replaying {spec} [{}]\n", mode.label());
-        let out = conformance_round_mode(&spec, mode);
+        let out = conformance_round_with(&spec, mode, sim_jobs);
         if out.ok() {
             println!(
                 "OK: {} schedulers, {} completions, no violations",
                 out.runs, out.total_completions
             );
+            println!("digest: {:016x}", out.metrics_digest);
             return Ok(());
         }
         return Err(anyhow!("conformance failed:\n{}", out.describe_failures()));
@@ -258,7 +278,9 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
 
     let n = args.get_usize("scenarios", 50);
     let seed0 = args.get_u64("seed0", 0xDEAD_BEEF);
-    let outcomes = run_conformance_mode(seed0, n, args.jobs(), mode);
+    let clusters = args.get_usize("clusters", 1);
+    let outcomes =
+        run_conformance_with(seed0, n, args.jobs(), mode, sim_jobs, clusters);
     let mut t = Table::new(vec!["repro", "class", "completions", "result"]);
     let mut failures = Vec::new();
     for o in &outcomes {
@@ -286,6 +308,9 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         octopinf::coordinator::SchedulerKind::conformance_set().len(),
         failures.len()
     );
+    // Bit-exact sweep fingerprint; ci.sh diffs this line across
+    // --sim-jobs values.
+    println!("digest: {:016x}", conformance_digest(&outcomes));
     if !failures.is_empty() {
         return Err(anyhow!(
             "conformance failures (replay with `octopinf fuzz --repro <string>`):\n{}",
@@ -312,7 +337,16 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     let n = args.get_usize("storms", 8);
     let seed0 = args.get_u64("seed0", 0xC4A0_5EED);
     let mode = parse_replan(args)?;
-    let cmps = experiments::chaos_comparison(seed0, n, args.jobs(), mode);
+    let sim_jobs = args.get_usize("sim-jobs", 1);
+    let clusters = args.get_usize("clusters", 1);
+    let cmps = experiments::chaos_comparison_with(
+        seed0,
+        n,
+        args.jobs(),
+        mode,
+        sim_jobs,
+        clusters,
+    );
     println!("{}", experiments::chaos_table(&cmps).to_markdown());
     let violations: usize = cmps.iter().map(|c| c.violations).sum();
     let lost: u64 = cmps
@@ -329,6 +363,9 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     if violations > 0 {
         return Err(anyhow!("invariant violations during chaos comparison"));
     }
+    // Bit-exact run fingerprint; ci.sh diffs this line across --sim-jobs
+    // values.
+    println!("digest: {:016x}", experiments::chaos_digest(&cmps));
     Ok(())
 }
 
@@ -337,7 +374,12 @@ fn cmd_chaos(args: &Args) -> Result<()> {
 fn cmd_drift(args: &Args) -> Result<()> {
     let per_family = args.get_usize("per-family", 4);
     let seed0 = args.get_u64("seed0", 0xDEAD_BEEF);
-    let cmps = experiments::drift_comparison(seed0, per_family, args.jobs());
+    let cmps = experiments::drift_comparison_with(
+        seed0,
+        per_family,
+        args.jobs(),
+        args.get_usize("sim-jobs", 1),
+    );
     println!("{}", experiments::drift_table(&cmps).to_markdown());
     let violations: usize = cmps.iter().map(|c| c.violations).sum();
     println!(

@@ -137,6 +137,66 @@ impl RunMetrics {
             (self.on_time + self.late + self.filtered) as f64 / all as f64
         }
     }
+
+    /// Fold another cluster's metrics into this fleet view: counters add,
+    /// latency sketch/histogram merge exactly (bucket counts add), memory
+    /// peaks **sum** (each cluster owns its own GPUs, so the fleet peak is
+    /// the sum of per-cluster peaks), and timelines add element-wise with
+    /// the shorter one zero-padded. `duration_ms` is the shared horizon
+    /// and stays as-is; `mean_gpu_util` is a fleet *mean*, which the sim
+    /// driver recomputes after merging — this method leaves it untouched.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        debug_assert_eq!(
+            self.duration_ms.to_bits(),
+            other.duration_ms.to_bits(),
+            "merging runs with different horizons"
+        );
+        self.on_time += other.on_time;
+        self.late += other.late;
+        self.dropped += other.dropped;
+        self.lost_to_fault += other.lost_to_fault;
+        self.filtered += other.filtered;
+        self.latency.merge(&other.latency);
+        self.latency_hist.merge(&other.latency_hist);
+        self.peak_memory_mb += other.peak_memory_mb;
+        if self.timeline.len() < other.timeline.len() {
+            self.timeline.resize(other.timeline.len(), (0.0, 0.0));
+        }
+        for (i, &(w, e)) in other.timeline.iter().enumerate() {
+            self.timeline[i].0 += w;
+            self.timeline[i].1 += e;
+        }
+    }
+
+    /// 64-bit fingerprint of every field — counters, the exact bit
+    /// patterns of all floats, and the full latency sketch/histogram
+    /// contents. Two runs digest equal iff their metrics are
+    /// byte-identical; the determinism gates (`--sim-jobs` sweeps,
+    /// fuzz/chaos digest diffs in CI) compare these.
+    pub fn digest(&self) -> u64 {
+        use crate::util::stats::{fnv1a, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for w in [
+            self.duration_ms.to_bits(),
+            self.on_time,
+            self.late,
+            self.dropped,
+            self.lost_to_fault,
+            self.filtered,
+            self.latency.digest(),
+            self.latency_hist.digest(),
+            self.peak_memory_mb.to_bits(),
+            self.mean_gpu_util.to_bits(),
+            self.timeline.len() as u64,
+        ] {
+            h = fnv1a(h, w);
+        }
+        for &(w, e) in &self.timeline {
+            h = fnv1a(h, w.to_bits());
+            h = fnv1a(h, e.to_bits());
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +259,52 @@ mod tests {
         assert_eq!(m.latency.len(), 10, "filtered units have no latency");
         assert_eq!(m.completed(), 10, "filtered is not an engine completion");
         assert_eq!(m.completion_rate(), 1.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_pads_timelines() {
+        let mut a = RunMetrics::new(10_000.0);
+        a.record_n(Outcome::OnTime, 50.0, 5);
+        a.record_n(Outcome::Dropped, 0.0, 2);
+        a.peak_memory_mb = 100.0;
+        a.timeline = vec![(10.0, 8.0), (12.0, 9.0)];
+        let mut b = RunMetrics::new(10_000.0);
+        b.record_n(Outcome::Late, 400.0, 3);
+        b.lost_to_fault = 4;
+        b.record_filtered(6);
+        b.peak_memory_mb = 40.0;
+        b.timeline = vec![(1.0, 1.0), (1.0, 1.0), (1.0, 1.0)];
+        a.merge(&b);
+        assert_eq!(a.on_time, 5);
+        assert_eq!(a.late, 3);
+        assert_eq!(a.dropped, 2);
+        assert_eq!(a.lost_to_fault, 4);
+        assert_eq!(a.filtered, 6);
+        assert_eq!(a.peak_memory_mb, 140.0, "fleet memory is a sum of peaks");
+        assert_eq!(a.timeline, vec![(11.0, 9.0), (13.0, 10.0), (1.0, 1.0)]);
+        assert_eq!(a.latency.count(), 8);
+        assert_eq!(a.latency_hist.total(), 8);
+    }
+
+    #[test]
+    fn digest_detects_any_field_change() {
+        let mk = || {
+            let mut m = RunMetrics::new(10_000.0);
+            m.record_n(Outcome::OnTime, 50.0, 5);
+            m.timeline = vec![(10.0, 8.0)];
+            m.mean_gpu_util = 0.5;
+            m
+        };
+        assert_eq!(mk().digest(), mk().digest(), "digest is deterministic");
+        let mut m = mk();
+        m.mean_gpu_util = 0.5000001;
+        assert_ne!(m.digest(), mk().digest());
+        let mut m = mk();
+        m.timeline[0].1 += 1.0;
+        assert_ne!(m.digest(), mk().digest());
+        let mut m = mk();
+        m.record(Outcome::Dropped, 0.0);
+        assert_ne!(m.digest(), mk().digest());
     }
 
     #[test]

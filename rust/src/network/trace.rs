@@ -154,6 +154,11 @@ impl BwTrace {
         self.samples_mbps.iter().sum()
     }
 
+    /// The raw 1-second sample array (outage-skip tables, analysis).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples_mbps
+    }
+
     pub fn bandwidth_mbps(&self, t_ms: Ms) -> f64 {
         let idx = (t_ms / self.step_ms).max(0.0) as usize;
         // Loop the trace if simulation outlives it (13 h runs on 30 min

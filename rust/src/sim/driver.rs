@@ -1,0 +1,257 @@
+//! Orchestration layer: [`Simulator`] owns time and steps per-cluster
+//! [`SimPartition`]s through fixed epoch barriers, fanning the ticks
+//! across scoped worker threads with the same deterministic-merge
+//! discipline as the experiment runner (`util::par`).
+//!
+//! Determinism: partitions share nothing while ticking — each owns its
+//! cluster, links, scheduler, RNG streams, and event wheel — so ticking
+//! them concurrently is observationally identical to ticking them one by
+//! one. Everything that crosses a partition boundary (mailbox traffic,
+//! metric/report merging) happens on the driver thread, in partition
+//! order, at a barrier. `--sim-jobs` therefore changes wall-clock only;
+//! see the contract in [`crate::sim`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::SchedulerKind;
+use crate::metrics::RunMetrics;
+use crate::sim::engine::SimPartition;
+use crate::sim::faults::FaultPlan;
+use crate::sim::invariants::InvariantReport;
+use crate::sim::scenario::Scenario;
+use crate::sim::Component;
+use crate::util::par::effective_jobs;
+use crate::Ms;
+
+/// Barrier cadence. Cross-partition state may only move at these
+/// boundaries — matching the control-plane cadence (autoscale period),
+/// well below the 6-min scheduling rounds a future global balancer would
+/// act on, and coarse enough that barrier overhead is noise.
+const EPOCH_MS: Ms = 10_000.0;
+
+/// Tag mixed into replica-cluster seeds (`partition_seed`).
+const PARTITION_TAG: u64 = 0x9A87_171D_0E5F_3C4B;
+
+/// Seed for cluster partition `k`. Partition 0 keeps the scenario seed
+/// untouched — a one-cluster run is bit-identical to the pre-partition
+/// engine — and replicas get splitmix-separated streams so no RNG draw
+/// correlates across clusters.
+pub fn partition_seed(seed: u64, k: usize) -> u64 {
+    if k == 0 {
+        return seed;
+    }
+    seed ^ crate::sim::wheel::mix64(PARTITION_TAG ^ k as u64)
+}
+
+/// The top-level simulator: one [`SimPartition`] per cluster
+/// (`cfg.clusters`, default 1), advanced in lockstep epochs.
+pub struct Simulator {
+    parts: Vec<SimPartition>,
+    horizon: Ms,
+    sim_jobs: usize,
+}
+
+impl Simulator {
+    pub fn new(scenario: &Scenario, kind: SchedulerKind) -> Simulator {
+        let clusters = scenario.cfg.clusters.max(1);
+        let horizon = scenario.cfg.duration_ms;
+        let mut parts = Vec::with_capacity(clusters);
+        // Partition 0 is built from the caller's scenario verbatim (its
+        // content processes and traces included), so `clusters = 1`
+        // reproduces the historical single-engine run byte-for-byte.
+        parts.push(SimPartition::new(scenario, kind));
+        for k in 1..clusters {
+            let mut cfg = scenario.cfg.clone();
+            cfg.seed = partition_seed(scenario.cfg.seed, k);
+            let replica = Scenario::build(cfg);
+            parts.push(SimPartition::new(&replica, kind));
+        }
+        Simulator { parts, horizon, sim_jobs: 1 }
+    }
+
+    /// Worker threads for the partition fan-out (0 = one per hardware
+    /// thread). Purely a wall-clock knob — never part of repro strings or
+    /// fingerprints; results are byte-identical at any value.
+    pub fn set_sim_jobs(&mut self, jobs: usize) {
+        self.sim_jobs = jobs;
+    }
+
+    /// Override the sampled fault schedule (tests and targeted chaos
+    /// runs). Applies to partition 0 — the cluster targeted storms are
+    /// written against; replica clusters keep their seeded plans. Must be
+    /// called before `run`.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.parts[0].set_fault_plan(plan);
+    }
+
+    /// Arm the invariant engine in every partition before `run`.
+    pub fn enable_invariants(&mut self) {
+        for p in &mut self.parts {
+            p.enable_invariants();
+        }
+    }
+
+    /// Take the merged invariant report after `run` (None unless
+    /// enabled). Partition reports fold together in partition order.
+    pub fn take_invariant_report(&mut self) -> Option<InvariantReport> {
+        let mut merged: Option<InvariantReport> = None;
+        for p in &mut self.parts {
+            let Some(r) = p.take_invariant_report() else { continue };
+            match merged.as_mut() {
+                Some(m) => m.merge(r),
+                None => merged = Some(r),
+            }
+        }
+        merged
+    }
+
+    /// Execute every partition to the horizon and return the fleet
+    /// metrics (counters and sketches merged across clusters; GPU
+    /// utilization averaged).
+    pub fn run(&mut self) -> RunMetrics {
+        for p in &mut self.parts {
+            p.start();
+        }
+        let mut t: Ms = 0.0;
+        loop {
+            let until = (t + EPOCH_MS).min(self.horizon);
+            self.tick_all(until);
+            // Barrier: cross-partition traffic moves here, in partition
+            // order, on the driver thread — the only place partitions may
+            // observe each other. Outboxes are empty until federation
+            // (ROADMAP item 1); the exchange points and their ordering
+            // are what this layer pins down.
+            for i in 0..self.parts.len() {
+                let outbox = self.parts[i].drain_outbox();
+                debug_assert!(
+                    outbox.is_empty(),
+                    "cross-partition traffic has no routing table yet"
+                );
+                self.parts[i].deliver(outbox);
+            }
+            for p in &mut self.parts {
+                p.barrier(until);
+            }
+            t = until;
+            if t >= self.horizon {
+                break;
+            }
+        }
+        let n = self.parts.len() as f64;
+        let mut finals = self.parts.iter_mut().map(|p| p.finalize());
+        let mut merged = finals.next().expect("at least one partition");
+        let mut util_sum = merged.mean_gpu_util;
+        for m in finals {
+            util_sum += m.mean_gpu_util;
+            merged.merge(&m);
+        }
+        // Utilization is a fleet *mean*, not a sum (x / 1.0 is exact, so
+        // the one-cluster path stays bit-identical).
+        merged.mean_gpu_util = util_sum / n;
+        merged
+    }
+
+    /// Tick every partition to `until`, `sim_jobs` at a time. Work-steals
+    /// partitions off an atomic cursor under `std::thread::scope`, the
+    /// same discipline as `util::par::par_map` — partitions are mutated
+    /// in place (no results to merge), so a Mutex per slot hands each
+    /// worker exclusive access.
+    fn tick_all(&mut self, until: Ms) {
+        let jobs = effective_jobs(self.sim_jobs, self.parts.len());
+        if jobs <= 1 || self.parts.len() <= 1 {
+            for p in &mut self.parts {
+                p.tick(until);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<&mut SimPartition>> =
+            self.parts.iter_mut().map(Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                let next = &next;
+                let slots = &slots;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    // Uncontended by construction: the cursor hands each
+                    // index to exactly one worker.
+                    let mut part = slots[i].lock().expect("partition mutex");
+                    part.tick(until);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenario::preset;
+
+    #[test]
+    fn partition_seeds_are_stable_and_distinct() {
+        assert_eq!(partition_seed(42, 0), 42);
+        assert_ne!(partition_seed(42, 1), 42);
+        assert_ne!(partition_seed(42, 1), partition_seed(42, 2));
+        assert_eq!(partition_seed(42, 3), partition_seed(42, 3));
+        // Different base seeds never alias onto the same replica seed.
+        assert_ne!(partition_seed(1, 1), partition_seed(2, 1));
+    }
+
+    #[test]
+    fn multi_cluster_run_merges_fleet_metrics() {
+        let mut cfg = preset("smoke").unwrap();
+        cfg.clusters = 2;
+        let sc1 = Scenario::build(cfg.clone());
+        let one = {
+            let mut c = cfg.clone();
+            c.clusters = 1;
+            crate::sim::run(&Scenario::build(c), SchedulerKind::OctopInf)
+        };
+        let two = crate::sim::run(&sc1, SchedulerKind::OctopInf);
+        // Two independent clusters complete roughly twice the work of one
+        // (partition 0 is the identical scenario; the replica adds its
+        // own) and report a fleet-summed memory peak.
+        assert!(two.on_time > one.on_time, "replica cluster added nothing");
+        assert!(two.peak_memory_mb > one.peak_memory_mb);
+        assert!(two.mean_gpu_util <= 1.0);
+    }
+
+    #[test]
+    fn sim_jobs_is_a_pure_wall_clock_knob() {
+        let mut cfg = preset("smoke").unwrap();
+        cfg.clusters = 3;
+        cfg.faults = 2;
+        for jobs in [2usize, 4, 8] {
+            let a = {
+                let sc = Scenario::build(cfg.clone());
+                let mut s = Simulator::new(&sc, SchedulerKind::OctopInf);
+                s.set_sim_jobs(1);
+                s.run()
+            };
+            let b = {
+                let sc = Scenario::build(cfg.clone());
+                let mut s = Simulator::new(&sc, SchedulerKind::OctopInf);
+                s.set_sim_jobs(jobs);
+                s.run()
+            };
+            assert_eq!(a.digest(), b.digest(), "sim-jobs={jobs} diverged");
+        }
+    }
+
+    #[test]
+    fn invariants_hold_across_partition_barriers() {
+        let mut cfg = preset("smoke").unwrap();
+        cfg.clusters = 2;
+        cfg.faults = 3;
+        let sc = Scenario::build(cfg);
+        let (m, r) = crate::sim::run_checked_with(&sc, SchedulerKind::OctopInf, 4);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(m.lost_to_fault, r.lost_to_fault);
+        assert!(m.on_time > 0);
+    }
+}

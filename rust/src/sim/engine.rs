@@ -1,17 +1,21 @@
-//! The discrete-event engine.
+//! The discrete-event engine — component layer.
 //!
-//! Mechanics shared by every scheduler (identical comparison substrate):
-//! frame sources -> per-(pipeline, model) dynamic batchers -> GPU
-//! executors -> routing/fanout -> sinks; FIFO uplinks; periodic
-//! rescheduling (paper: 6 min); autoscaler ticks for the OctopInf
-//! variants; lazy dropping of already-late queries at dispatch.
+//! One [`SimPartition`] is a self-contained edge cluster: mechanics shared
+//! by every scheduler (identical comparison substrate): frame sources ->
+//! per-(pipeline, model) dynamic batchers -> GPU executors ->
+//! routing/fanout -> sinks; FIFO uplinks; periodic rescheduling (paper:
+//! 6 min); autoscaler ticks for the OctopInf variants; lazy dropping of
+//! already-late queries at dispatch. Time lives in a
+//! [`crate::sim::wheel::EventWheel`]; the partition only advances when
+//! the orchestration layer ([`crate::sim::Simulator`]) calls
+//! `tick(until)` — see the determinism contract in [`crate::sim`].
 //!
 //! CORAL-reserved instances execute interference-free inside their duty
 //! cycle (the reservation is the paper's point); spatial-only instances
 //! suffer the co-location interference model when executions overlap.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::autoscaler::{AutoScaler, AutoScalerParams, ScaleAction};
 use crate::coordinator::controller::{make_scheduler, SCHEDULING_PERIOD_MS};
@@ -24,6 +28,8 @@ use crate::sim::faults::{CrashPolicy, FaultEv, FaultPlan};
 use crate::sim::invariants::{InvariantChecker, InvariantReport};
 use crate::sim::link::FifoLink;
 use crate::sim::scenario::Scenario;
+use crate::sim::wheel::{mix64, EventWheel};
+use crate::sim::{Component, CrossMsg};
 use crate::util::Rng;
 use crate::workload::{ArrivalWindow, ContentDynamics, SceneFilter};
 use crate::Ms;
@@ -123,49 +129,10 @@ enum Ev {
     Tick,
 }
 
-struct TimedEvent {
-    t: Ms,
-    /// Same-time ordering key. With `order_seed == 0` this equals `seq`
-    /// (insertion order, the historical behavior); otherwise it is a
-    /// seeded bijective permutation of `seq`, so events sharing a
-    /// timestamp pop in a shuffled — but fully reproducible — order.
-    /// Scheduler-independent quantities must not depend on it.
-    tie: u64,
-    seq: u64,
-    ev: Ev,
-}
-
-/// splitmix64 finalizer: a bijection on u64, so distinct `seq` values can
-/// never collide on `tie` (the `seq` tiebreak below is then unreachable,
-/// but kept as a total-order backstop).
-#[inline]
-fn mix64(mut z: u64) -> u64 {
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
-
-impl PartialEq for TimedEvent {
-    fn eq(&self, o: &Self) -> bool {
-        self.cmp(o) == Ordering::Equal
-    }
-}
-impl Eq for TimedEvent {}
-impl PartialOrd for TimedEvent {
-    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
-        Some(self.cmp(o))
-    }
-}
-impl Ord for TimedEvent {
-    fn cmp(&self, o: &Self) -> Ordering {
-        // Reversed for a min-heap on (t, tie, seq). total_cmp gives NaN
-        // timestamps a fixed (last) position instead of silently
-        // comparing Equal and corrupting event order.
-        o.t.total_cmp(&self.t)
-            .then(o.tie.cmp(&self.tie))
-            .then(o.seq.cmp(&self.seq))
-    }
-}
+// Scheduled engine events are `WheelEntry<Ev>`: the `(t, tie, seq)`
+// ordering key and the seeded same-time permutation live in the
+// time-source layer (`crate::sim::wheel`); the engine only owns the
+// sequence counter feeding it.
 
 /// One running execution on a GPU (for overlap queries).
 #[derive(Clone, Copy)]
@@ -237,6 +204,14 @@ impl GpuRuns {
     fn active_width(&self) -> f64 {
         self.width_sum
     }
+
+    /// Exact Σ width over the heap — the reference the invariant engine
+    /// audits the incremental `width_sum` against (the O(1) aggregate
+    /// feeds the interference multiplier on every dispatch, so silent
+    /// float drift here would skew every contended latency).
+    fn recompute_width_sum(&self) -> f64 {
+        self.heap.iter().map(|r| r.width).sum()
+    }
 }
 
 /// Does the live group already run this assignment? Exact match keeps the
@@ -267,15 +242,15 @@ fn next_occurrence(now: Ms, start_ms: Ms, duty_ms: Ms) -> Ms {
     start_ms + k * duty
 }
 
-pub struct Simulator {
+pub struct SimPartition {
     kind: SchedulerKind,
     sched: Box<dyn Scheduler>,
     // Scenario data (owned copies; content processes are stateful).
     sc: ScenarioData,
     content: Vec<ContentDynamics>,
     links: Vec<FifoLink>,
-    // Event machinery.
-    heap: BinaryHeap<TimedEvent>,
+    // Event machinery (time-source layer).
+    events: EventWheel<Ev>,
     seq: u64,
     now: Ms,
     // Deployment.
@@ -361,8 +336,8 @@ const TICK_MS: Ms = 60_000.0;
 /// Seed tag for the frontend scene filters' dedicated RNG stream.
 const FRONTEND_TAG: u64 = 0xF117E2;
 
-impl Simulator {
-    pub fn new(scenario: &Scenario, kind: SchedulerKind) -> Simulator {
+impl SimPartition {
+    pub fn new(scenario: &Scenario, kind: SchedulerKind) -> SimPartition {
         let sc = ScenarioData {
             cfg: scenario.cfg.clone(),
             cluster: scenario.cluster.clone(),
@@ -393,12 +368,12 @@ impl Simulator {
                 })
             })
             .collect();
-        Simulator {
+        SimPartition {
             kind,
             sched: make_scheduler(kind, scenario.cfg.seed ^ 0xC0FFEE),
             content: scenario.content.clone(),
             links,
-            heap: BinaryHeap::with_capacity(1 << 16),
+            events: EventWheel::new(),
             seq: 0,
             now: 0.0,
             groups: Vec::new(),
@@ -463,7 +438,7 @@ impl Simulator {
 
     /// Queries still queued, inside a running batch, or in transit —
     /// everything the conservation invariant counts as in flight when the
-    /// horizon cuts the run. Walks the remaining event heap once.
+    /// horizon cuts the run. Walks the remaining event wheel once.
     fn in_flight_census(&self) -> u64 {
         let mut n: u64 = self
             .groups
@@ -471,7 +446,7 @@ impl Simulator {
             .flatten()
             .map(|g| g.queue.len() as u64)
             .sum();
-        for te in self.heap.iter() {
+        for te in self.events.iter() {
             match &te.ev {
                 Ev::Arrive { .. } => n += 1,
                 Ev::ExecDone { queries, .. } => n += queries.len() as u64,
@@ -493,7 +468,7 @@ impl Simulator {
         } else {
             mix64(self.seq ^ self.order_seed)
         };
-        self.heap.push(TimedEvent { t, tie, seq: self.seq, ev });
+        self.events.push(t, tie, self.seq, ev);
     }
 
     /// Build the scheduler environment: live telemetry, unless a freeze
@@ -1100,6 +1075,9 @@ impl Simulator {
             let gi = self.gpu_idx(binding.gpu);
             let runs = &mut self.gpu_runs[gi];
             runs.expire(now);
+            if let Some(c) = self.checker.as_deref_mut() {
+                c.on_width_sum(runs.active_width(), runs.recompute_width_sum());
+            }
             let total = runs.active_width() + binding.width;
             let mult =
                 self.interference.multiplier(total, cap, runs.active_count());
@@ -1343,9 +1321,10 @@ impl Simulator {
         self.push(now + 1000.0 / fps, Ev::Frame { pipeline });
     }
 
-    /// Execute the scenario to completion and return metrics.
-    pub fn run(&mut self) -> RunMetrics {
-        // Initial plan + event seeding.
+    /// Install the initial plan and seed every event stream (frame
+    /// sources, control-plane clocks, the fault schedule). Called exactly
+    /// once, before the first `tick`.
+    pub fn start(&mut self) {
         self.reschedule();
         for p in 0..self.sc.pipelines.len() {
             // Stagger sources a little so frames don't align pathologically.
@@ -1365,16 +1344,22 @@ impl Simulator {
             self.push(t, Ev::Fault(fe));
         }
         self.faults = fault_events;
+    }
 
-        let horizon = self.sc.cfg.duration_ms;
+    /// Advance the partition through every event with `t <= until` — the
+    /// component-layer tick the driver calls between epoch barriers.
+    /// Events beyond `until` stay queued (the conservation census still
+    /// sees their in-flight queries), so slicing a run into any sequence
+    /// of increasing `until`s pops the same events in the same order as
+    /// one pass to the horizon.
+    fn tick_until(&mut self, until: Ms) {
         loop {
-            // Peek before popping: events beyond the horizon stay queued so
-            // the conservation census still sees their in-flight queries.
-            match self.heap.peek() {
-                Some(te) if te.t <= horizon => {}
+            // Peek before popping: events beyond the slice stay queued.
+            match self.events.peek() {
+                Some(te) if te.t <= until => {}
                 _ => break,
             }
-            let te = self.heap.pop().unwrap();
+            let te = self.events.pop().unwrap();
             self.now = te.t;
             if let Some(c) = self.checker.as_deref_mut() {
                 c.on_event(te.t);
@@ -1427,7 +1412,36 @@ impl Simulator {
                 }
             }
         }
+    }
 
+    /// Epoch barrier closed at `epoch_end`: hand the invariant engine its
+    /// chance to catch a partition that ran ahead of the driver's clock.
+    pub fn barrier(&mut self, epoch_end: Ms) {
+        if let Some(c) = self.checker.as_deref_mut() {
+            c.on_barrier(epoch_end);
+        }
+    }
+
+    /// Cross-partition traffic produced this epoch. Uninhabited until the
+    /// federation layer (ROADMAP item 1) gives clusters something to say
+    /// to each other — the *when* (only at epoch barriers, in partition
+    /// order) is fixed here, so adding the *what* cannot perturb
+    /// single-cluster determinism.
+    pub fn drain_outbox(&mut self) -> Vec<CrossMsg> {
+        Vec::new()
+    }
+
+    /// Deliver cross-partition traffic merged at the barrier.
+    pub fn deliver(&mut self, msgs: Vec<CrossMsg>) {
+        for msg in msgs {
+            match msg {} // uninhabited — nothing to route yet
+        }
+    }
+
+    /// Close out the run at the scenario horizon: GPU utilization, the
+    /// final conservation census, debug dump, metrics snapshot.
+    pub fn finalize(&mut self) -> RunMetrics {
+        let horizon = self.sc.cfg.duration_ms;
         // Mean GPU utilization over the run.
         let total_width_ms: f64 = self.gpu_busy_width_ms.iter().sum();
         let n_gpus = self.sc.cluster.n_gpus() as f64;
@@ -1460,6 +1474,27 @@ impl Simulator {
             }
         }
         self.metrics.clone()
+    }
+
+    /// Single-partition convenience: execute the scenario to completion
+    /// and return metrics — exactly `start` + one `tick` to the horizon +
+    /// `finalize`, which is also what the driver's epoch slicing reduces
+    /// to for one cluster.
+    pub fn run(&mut self) -> RunMetrics {
+        self.start();
+        let horizon = self.sc.cfg.duration_ms;
+        self.tick_until(horizon);
+        self.finalize()
+    }
+}
+
+impl Component for SimPartition {
+    fn next_tick(&mut self) -> Option<Ms> {
+        self.events.peek().map(|te| te.t)
+    }
+
+    fn tick(&mut self, until: Ms) {
+        self.tick_until(until);
     }
 }
 
@@ -1534,7 +1569,7 @@ mod tests {
 
     /// Flood group (0, 0)'s arrival window so its observed rate dwarfs any
     /// plausible capacity (forces a surge verdict regardless of the plan).
-    fn saturate(sim: &mut Simulator, now: Ms) {
+    fn saturate(sim: &mut SimPartition, now: Ms) {
         for i in 0..20_000 {
             sim.groups[0][0].window.record(now - 2000.0 + i as f64 * 0.1);
         }
@@ -1546,7 +1581,7 @@ mod tests {
         // inline and silently drop `AutoScaler`'s cooldown, flapping on
         // every 10 s tick. Both paths now share `AutoScaler::decide`.
         let sc = Scenario::build(smoke_cfg());
-        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
         sim.reschedule();
         sim.now = 60_000.0;
         saturate(&mut sim, sim.now);
@@ -1578,7 +1613,7 @@ mod tests {
     #[test]
     fn plan_diff_migration_keeps_unchanged_groups_live() {
         let sc = Scenario::build(smoke_cfg());
-        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
         sim.reschedule();
         let epoch0 = sim.groups[0][0].epoch;
         sim.groups[0][0].queue.push_back(Query {
@@ -1625,7 +1660,7 @@ mod tests {
         // pending ExecDone clears it later. Resetting it would let the
         // same instance run overlapping batches right after a migration.
         let sc = Scenario::build(smoke_cfg());
-        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
         sim.reschedule();
         assert!(!sim.groups[0][0].busy.is_empty());
         sim.groups[0][0].busy[0] = true; // simulate an in-flight batch
@@ -1654,7 +1689,7 @@ mod tests {
         // touching self.plan; a replan that leaves the pipeline's
         // assignment unchanged must not revert that surge capacity.
         let sc = Scenario::build(smoke_cfg());
-        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
         sim.reschedule();
         sim.now = 60_000.0;
         saturate(&mut sim, sim.now);
@@ -1675,7 +1710,7 @@ mod tests {
     #[test]
     fn device_crash_losses_are_accounted_exactly() {
         let sc = Scenario::build(smoke_cfg());
-        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
         // Crash source device 1 for 15 s mid-run: frames captured during
         // the window are lost at birth; any in-flight batches die too.
         sim.set_fault_plan(FaultPlan {
@@ -1696,7 +1731,7 @@ mod tests {
     #[test]
     fn straggler_outage_and_freeze_keep_conservation() {
         let sc = Scenario::build(smoke_cfg());
-        let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
         sim.set_fault_plan(FaultPlan {
             events: vec![
                 (5_000.0, FaultEv::TelemetryFreezeStart),

@@ -18,6 +18,14 @@
 //!
 //! Everything is derived from `seed ^ FAULT_PLAN_TAG`, so a repro string
 //! carrying `:faults=M` replays the exact same storm byte-for-byte.
+//!
+//! Under multi-cluster partitioning (`cfg.clusters > 1`) each
+//! [`SimPartition`](crate::sim) samples its *own* plan from its partition
+//! seed (`sim::partition_seed`): replica clusters see statistically
+//! similar but uncorrelated storms, and the `:faults=M` axis stays a pure
+//! function of `(seed, clusters)`. An explicitly injected plan
+//! (`Simulator::set_fault_plan`) targets partition 0 only — the cluster
+//! targeted storms are written against.
 
 use crate::cluster::Cluster;
 use crate::util::Rng;

@@ -190,6 +190,34 @@ impl InvariantChecker {
         }
     }
 
+    /// The GPU-run tracker's incremental Σwidth against an exact
+    /// recompute over its heap. The O(1) aggregate feeds the interference
+    /// multiplier on every contended dispatch, so silent float drift here
+    /// would skew every contended latency in the run.
+    #[inline]
+    pub fn on_width_sum(&mut self, incremental: f64, exact: f64) {
+        if (incremental - exact).abs() > 1e-6 * exact.abs().max(1.0) {
+            self.violation(format!(
+                "gpu width sum drifted: incremental {incremental} vs \
+                 recomputed {exact}"
+            ));
+        }
+    }
+
+    /// An epoch barrier closed at `epoch_end`: every event this partition
+    /// processed must lie at or before it — a partition that ran ahead of
+    /// the driver's clock could observe (or miss) cross-partition traffic
+    /// non-deterministically.
+    #[inline]
+    pub fn on_barrier(&mut self, epoch_end: Ms) {
+        if self.last_event_ms > epoch_end {
+            self.violation(format!(
+                "partition ran past the epoch barrier: last event at {} > {}",
+                self.last_event_ms, epoch_end
+            ));
+        }
+    }
+
     /// A plan swap migrated the live deployment: the engine's in-flight
     /// census (queued + executing + in transit) taken immediately before
     /// and after the install must balance. Today's install path preserves
@@ -448,6 +476,35 @@ pub struct InvariantReport {
 impl InvariantReport {
     pub fn ok(&self) -> bool {
         self.violations.is_empty() && self.suppressed == 0
+    }
+
+    /// Fold another partition's report into this one (the driver merges
+    /// reports in partition order). Counters add; violations concatenate
+    /// under the same reporting cap, overflow counted as suppressed.
+    pub fn merge(&mut self, other: InvariantReport) {
+        self.events += other.events;
+        self.frames += other.frames;
+        self.objects_total += other.objects_total;
+        self.filtered_queries += other.filtered_queries;
+        self.filtered_units += other.filtered_units;
+        self.created += other.created;
+        self.dropped += other.dropped;
+        self.lost_to_fault += other.lost_to_fault;
+        self.routed += other.routed;
+        self.vanished += other.vanished;
+        self.completed_queries += other.completed_queries;
+        self.completed_objects += other.completed_objects;
+        self.in_flight += other.in_flight;
+        self.plans += other.plans;
+        self.migrations += other.migrations;
+        self.suppressed += other.suppressed;
+        for v in other.violations {
+            if self.violations.len() < MAX_VIOLATIONS {
+                self.violations.push(v);
+            } else {
+                self.suppressed += 1;
+            }
+        }
     }
 
     /// Scheduler-independent fingerprint for differential cross-checks:

@@ -3,12 +3,22 @@
 //! (Obs. 2: unstable networks become the pipeline bottleneck).
 
 use crate::network::BwTrace;
+use crate::sim::wheel::OutageSkip;
 use crate::{Bytes, Ms};
+
+/// How far past the deferral's first second boundary a send will wait for
+/// bandwidth before giving up (the historical 600-iteration scan cap:
+/// boundaries `b0 .. b0 + 599 s` are eligible, a later reopen is "never").
+const MAX_DEFER_S: u32 = 599;
 
 /// One edge<->server uplink with FIFO queueing.
 #[derive(Clone, Debug)]
 pub struct FifoLink {
     trace: BwTrace,
+    /// Distance-to-next-bright-second per trace slot, precomputed once —
+    /// outage deferral is an O(1) calendar lookup instead of a
+    /// second-by-second rescan on every send into a blackout.
+    skip: OutageSkip,
     rtt_ms: Ms,
     /// Time the link finishes its currently queued transfers.
     free_at_ms: Ms,
@@ -16,7 +26,8 @@ pub struct FifoLink {
 
 impl FifoLink {
     pub fn new(trace: BwTrace, rtt_ms: Ms) -> FifoLink {
-        FifoLink { trace, rtt_ms, free_at_ms: 0.0 }
+        let skip = OutageSkip::build(trace.samples());
+        FifoLink { trace, skip, rtt_ms, free_at_ms: 0.0 }
     }
 
     pub fn bandwidth_mbps(&self, t_ms: Ms) -> f64 {
@@ -24,22 +35,32 @@ impl FifoLink {
     }
 
     /// Enqueue a transfer at `now`; returns arrival time at the far end.
-    /// During an outage the transfer waits for the next second with
-    /// non-zero bandwidth (bounded scan; trace loops).
+    /// During an outage the transfer jumps straight to the next second
+    /// with non-zero bandwidth via the skip table — same boundaries, same
+    /// 10-minute cap, and bit-identical arrival times as the old
+    /// second-by-second scan (traces loop, boundaries are exact multiples
+    /// of 1000 ms).
     pub fn send(&mut self, now: Ms, bytes: Bytes) -> Ms {
         let mut start = now.max(self.free_at_ms);
-        // Skip outage seconds (bounded to 10 minutes of scanning).
-        let mut guard = 0;
         let mut bw = self.bandwidth_mbps(start);
-        while bw <= 0.0 && guard < 600 {
-            start = (start / 1000.0).floor() * 1000.0 + 1000.0;
-            bw = self.bandwidth_mbps(start);
-            guard += 1;
-        }
         if bw <= 0.0 {
-            // Permanently dark link: deliver never (caller drops on deadline).
-            self.free_at_ms = start;
-            return f64::INFINITY;
+            // First candidate boundary: the next whole second after
+            // `start` (matching the scan, which always stepped once).
+            let b0 = (start / 1000.0).floor() * 1000.0 + 1000.0;
+            let slot = (b0 / 1000.0).max(0.0) as usize;
+            match self.skip.to_next_bright(slot) {
+                Some(d) if d <= MAX_DEFER_S => {
+                    start = b0 + d as f64 * 1000.0;
+                    bw = self.bandwidth_mbps(start);
+                }
+                _ => {
+                    // Dark past the cap (or forever): deliver never —
+                    // the caller drops on deadline. Park free_at where
+                    // the old scan's guard ran out.
+                    self.free_at_ms = b0 + MAX_DEFER_S as f64 * 1000.0;
+                    return f64::INFINITY;
+                }
+            }
         }
         let ser_ms = bytes * 8.0 / (bw * 1000.0);
         self.free_at_ms = start + ser_ms;

@@ -1,4 +1,4 @@
-//! Discrete-event simulator of the edge cluster: frame sources, per-model
+//! Discrete-event simulator of the edge fleet: frame sources, per-model
 //! dynamic batchers, GPU executors with a co-location interference model,
 //! FIFO network links driven by bandwidth traces, periodic rescheduling,
 //! and the autoscaler — the substrate every figure of §IV runs on.
@@ -6,14 +6,52 @@
 //! The simulator consumes the same [`Plan`](crate::coordinator::Plan)s the
 //! real serving stack does, so schedulers are compared end-to-end under
 //! identical mechanics.
+//!
+//! # Engine layering
+//!
+//! The engine is split into three layers:
+//!
+//! 1. **Time source** ([`wheel`]): a calendar-queue [`wheel::EventWheel`]
+//!    holding each partition's pending events in exact `(t, tie, seq)`
+//!    order — `f64::total_cmp` on time, then the seeded `:order=K`
+//!    same-time permutation key, then insertion sequence. Bit-for-bit
+//!    the order the old global `BinaryHeap` produced.
+//! 2. **Component** ([`engine::SimPartition`], via the [`Component`]
+//!    trait): one self-contained edge cluster — devices, links, batchers,
+//!    GPU executors, scheduler, autoscaler, fault plan — advancing only
+//!    inside `tick(until)`. A partition never reads another partition's
+//!    state.
+//! 3. **Orchestration** ([`Simulator`], in `driver`): owns time. It steps
+//!    every partition to the same epoch boundary (10 s), fans the ticks
+//!    across `std::thread::scope` workers, and merges results **in
+//!    partition order** at each barrier.
+//!
+//! # Determinism contract
+//!
+//! Simulation output — `RunMetrics`, workload fingerprints, fuzz/chaos
+//! digests, invariant reports — is a pure function of the scenario config
+//! (seed, `:order=K`, `:faults=M`, `clusters`, …). `--sim-jobs` is a
+//! wall-clock knob only: partitions share nothing while ticking, and
+//! cross-partition traffic moves only at epoch barriers, in partition
+//! order, so any worker count produces byte-identical results. A
+//! one-cluster run is additionally byte-identical to the pre-partition
+//! single-loop engine: partition 0 uses the scenario seed untouched, the
+//! epoch slicing pops the same events in the same order as one pass to
+//! the horizon, and merging one partition's metrics is the identity. The
+//! invariant engine stays armed across barriers (`on_barrier` asserts no
+//! partition ran past the driver's clock; conservation censuses span the
+//! wheel, including events beyond the current epoch).
 
+mod driver;
 mod engine;
 pub mod faults;
 pub mod invariants;
 mod link;
 pub mod scenario;
+pub mod wheel;
 
-pub use engine::{InterferenceModel, Simulator};
+pub use driver::{partition_seed, Simulator};
+pub use engine::InterferenceModel;
 pub use faults::{CrashPolicy, FaultEv, FaultPlan};
 pub use invariants::{InvariantChecker, InvariantReport};
 pub use link::FifoLink;
@@ -23,10 +61,43 @@ pub use scenario::{
 
 use crate::metrics::RunMetrics;
 use crate::coordinator::SchedulerKind;
+use crate::Ms;
 
-/// Run one scheduler over a scenario and return its metrics.
+/// Narrow advancement surface of the component layer: the driver steps
+/// anything implementing this — today the per-cluster partitions — and
+/// never reaches into component state between barriers.
+pub(crate) trait Component {
+    /// Earliest pending event time, if any (drained components return
+    /// `None`). `&mut` because reaching the head may rotate the wheel's
+    /// window forward; no event is consumed.
+    fn next_tick(&mut self) -> Option<Ms>;
+    /// Process every pending event with `t <= until`.
+    fn tick(&mut self, until: Ms);
+}
+
+/// A typed cross-partition message, exchanged only at epoch barriers in
+/// partition order. Uninhabited until the federation layer (ROADMAP
+/// item 1) defines pipeline migrations / global-balancer traffic — the
+/// exchange points and their ordering are already fixed and asserted, so
+/// adding variants cannot perturb single-cluster determinism.
+pub(crate) enum CrossMsg {}
+
+/// Run one scheduler over a scenario and return its metrics
+/// (single-threaded partition fan-out; see [`run_with`]).
 pub fn run(scenario: &Scenario, kind: SchedulerKind) -> RunMetrics {
+    run_with(scenario, kind, 1)
+}
+
+/// Run one scheduler with `sim_jobs` worker threads over the scenario's
+/// cluster partitions (0 = one per hardware thread). Byte-identical to
+/// `sim_jobs = 1` at any value.
+pub fn run_with(
+    scenario: &Scenario,
+    kind: SchedulerKind,
+    sim_jobs: usize,
+) -> RunMetrics {
     let mut sim = Simulator::new(scenario, kind);
+    sim.set_sim_jobs(sim_jobs);
     sim.run()
 }
 
@@ -36,7 +107,18 @@ pub fn run_checked(
     scenario: &Scenario,
     kind: SchedulerKind,
 ) -> (RunMetrics, InvariantReport) {
+    run_checked_with(scenario, kind, 1)
+}
+
+/// [`run_checked`] with `sim_jobs` partition workers; reports from every
+/// partition are merged in partition order.
+pub fn run_checked_with(
+    scenario: &Scenario,
+    kind: SchedulerKind,
+    sim_jobs: usize,
+) -> (RunMetrics, InvariantReport) {
     let mut sim = Simulator::new(scenario, kind);
+    sim.set_sim_jobs(sim_jobs);
     sim.enable_invariants();
     let metrics = sim.run();
     let report = sim

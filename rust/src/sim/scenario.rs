@@ -125,14 +125,22 @@ pub enum FuzzClass {
     /// a seeded [`FaultPlan`](crate::sim::faults::FaultPlan): device
     /// crashes, GPU stragglers, controller outages, telemetry freezes.
     FaultStorm,
+    /// Long-horizon composite: the diurnal curve (entered at a seeded time
+    /// of day) with light blackouts *and* device churn layered on, run for
+    /// an explicit multi-hour/multi-day horizon (`:horizon=H` seconds).
+    /// Hundreds of replan rounds in one scenario — the soak family for
+    /// drift-triggered replanning and partition barriers.
+    LongHaul,
 }
 
 impl FuzzClass {
     /// The seven pure *workload* families the sampler draws from.
-    /// [`FuzzClass::FaultStorm`] is deliberately not in this array: it is
-    /// an orthogonal axis layered onto a base family by
-    /// [`FuzzSpec::sample_storm`] or a `:faults=M` repro modifier, so
-    /// adding it here would re-roll every existing corpus seed.
+    /// [`FuzzClass::FaultStorm`] and [`FuzzClass::LongHaul`] are
+    /// deliberately not in this array: they are orthogonal axes layered
+    /// onto a base seed by [`FuzzSpec::sample_storm`] /
+    /// [`FuzzSpec::sample_long_haul`] or the `:faults=M` / `:horizon=H`
+    /// repro modifiers, so adding them here would re-roll every existing
+    /// corpus seed.
     pub const ALL: [FuzzClass; 7] = [
         FuzzClass::FlashCrowd,
         FuzzClass::DiurnalShift,
@@ -153,6 +161,7 @@ impl FuzzClass {
             FuzzClass::SkewedFanout => "skewed_fanout",
             FuzzClass::Mixed => "mixed",
             FuzzClass::FaultStorm => "fault_storm",
+            FuzzClass::LongHaul => "long_haul",
         }
     }
 }
@@ -172,6 +181,15 @@ const FUZZ_SAMPLE_TAG: u64 = 0xFAB1_0FF5;
 const FUZZ_MUTATE_TAG: u64 = 0x5EED_CAFE;
 /// Stream tag for the storm axis (fault count + ordering seed draws).
 const FUZZ_STORM_TAG: u64 = 0x57AB_F417;
+/// Stream tag for the long-haul composite's mutation draws (its own
+/// stream so the composite never aliases the single-family mutations of
+/// the same seed).
+const FUZZ_LONGHAUL_TAG: u64 = 0x10A6_4A01_D1A2_57EE;
+
+/// Longest long-haul horizon, seconds (3 simulated days ≈ 480 six-minute
+/// replan rounds — far past "hundreds" while keeping trace memory and
+/// runtime bounded).
+pub const MAX_HORIZON_S: u64 = 259_200;
 
 impl FuzzSpec {
     /// Sample a structurally-valid spec from `seed` (total function: every
@@ -223,12 +241,25 @@ impl FuzzSpec {
         spec
     }
 
+    /// Sample the long-haul composite: the same base spec `seed` yields
+    /// (no extra RNG draws — existing corpus seeds replay unchanged),
+    /// stretched to an explicit `horizon_s`-second run on the diurnal
+    /// curve. `horizon_s` is clamped to [1, [`MAX_HORIZON_S`]]. Equivalent
+    /// to the `:horizon=H` repro modifier.
+    pub fn sample_long_haul(seed: u64, horizon_s: u64) -> FuzzSpec {
+        let mut spec = FuzzSpec::sample(seed);
+        spec.class = FuzzClass::LongHaul;
+        spec.cfg.duration_ms = horizon_s.clamp(1, MAX_HORIZON_S) as f64 * 1000.0;
+        spec.cfg.diurnal = true;
+        spec
+    }
+
     /// One-line repro string; feed back through [`FuzzSpec::from_repro`]
     /// (or `octopinf fuzz --repro <string>`) to replay deterministically.
     /// Every non-default axis is part of the repro — a drift-mode,
-    /// fault-storm, or permuted-ordering failure must not silently replay
-    /// without it. Grammar:
-    /// `fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K]`.
+    /// fault-storm, long-haul, or permuted-ordering failure must not
+    /// silently replay without it. Grammar:
+    /// `fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K][:horizon=H][:clusters=C]`.
     pub fn repro(&self) -> String {
         let mut s = format!("fuzz:v1:seed={}", self.seed);
         if self.cfg.replan != ReplanMode::Periodic {
@@ -239,6 +270,12 @@ impl FuzzSpec {
         }
         if self.cfg.order_seed != 0 {
             s.push_str(&format!(":order={}", self.cfg.order_seed));
+        }
+        if self.class == FuzzClass::LongHaul {
+            s.push_str(&format!(":horizon={}", (self.cfg.duration_ms / 1000.0) as u64));
+        }
+        if self.cfg.clusters > 1 {
+            s.push_str(&format!(":clusters={}", self.cfg.clusters));
         }
         s
     }
@@ -257,11 +294,24 @@ impl FuzzSpec {
                 "replan" => spec.cfg.replan = ReplanMode::parse(val)?,
                 "faults" => {
                     spec.cfg.faults = val.parse::<u32>().ok()?;
-                    if spec.cfg.faults > 0 {
+                    // LongHaul wins: a long-haul run with faults stays
+                    // long-haul (the storm rides in on cfg.faults), and
+                    // modifier order on input is free.
+                    if spec.cfg.faults > 0 && spec.class != FuzzClass::LongHaul {
                         spec.class = FuzzClass::FaultStorm;
                     }
                 }
                 "order" => spec.cfg.order_seed = val.parse::<u64>().ok()?,
+                "horizon" => {
+                    let h = val.parse::<u64>().ok()?;
+                    if h == 0 || h > MAX_HORIZON_S {
+                        return None;
+                    }
+                    spec.class = FuzzClass::LongHaul;
+                    spec.cfg.duration_ms = h as f64 * 1000.0;
+                    spec.cfg.diurnal = true;
+                }
+                "clusters" => spec.cfg.clusters = val.parse::<usize>().ok()?,
                 _ => return None,
             }
         }
@@ -281,6 +331,20 @@ impl FuzzSpec {
             base.class = FuzzSpec::sample(self.seed).class;
             return base.build();
         }
+        if self.class == FuzzClass::LongHaul {
+            // The soak composite: diurnal drift × light blackouts × churn,
+            // on its own mutation stream so it never aliases the
+            // single-family scenarios of the same seed.
+            let mut sc = Scenario::build(self.cfg.clone());
+            let mut rng = Rng::new(self.seed ^ FUZZ_LONGHAUL_TAG);
+            diurnal_shift(&mut sc, &mut rng);
+            blackout(&mut sc, &mut rng, true);
+            device_churn(&mut sc, &mut rng);
+            for p in &sc.pipelines {
+                debug_assert!(p.validate().is_ok(), "{}", p.name);
+            }
+            return sc;
+        }
         let mut sc = Scenario::build(self.cfg.clone());
         let mut rng = Rng::new(self.seed ^ FUZZ_MUTATE_TAG);
         match self.class {
@@ -297,7 +361,9 @@ impl FuzzSpec {
                     tight_slo(&mut sc, &mut rng);
                 }
             }
-            FuzzClass::FaultStorm => unreachable!("delegated to base family"),
+            FuzzClass::FaultStorm | FuzzClass::LongHaul => {
+                unreachable!("handled above")
+            }
         }
         for p in &sc.pipelines {
             debug_assert!(p.validate().is_ok(), "{}", p.name);
@@ -624,6 +690,81 @@ mod tests {
             }
         }
         assert!(saw_order, "no storm sampled a non-zero ordering seed");
+    }
+
+    #[test]
+    fn long_haul_repro_roundtrips() {
+        let a = FuzzSpec::sample_long_haul(13, 7_200);
+        assert_eq!(a.class, FuzzClass::LongHaul);
+        assert_eq!(a.cfg.duration_ms, 7_200_000.0);
+        assert!(a.cfg.diurnal, "long haul rides the diurnal curve");
+        assert_eq!(a.repro(), "fuzz:v1:seed=13:horizon=7200");
+        let b = FuzzSpec::from_repro(&a.repro()).expect("horizon parses");
+        assert_eq!(b.class, FuzzClass::LongHaul);
+        assert_eq!(b.cfg.duration_ms, a.cfg.duration_ms);
+        assert!(b.cfg.diurnal);
+        // Horizon bounds: zero and beyond 3 days fail loudly.
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=13:horizon=0").is_none());
+        assert!(
+            FuzzSpec::from_repro("fuzz:v1:seed=13:horizon=259201").is_none()
+        );
+        assert_eq!(
+            FuzzSpec::sample_long_haul(13, u64::MAX).cfg.duration_ms,
+            MAX_HORIZON_S as f64 * 1000.0,
+            "sampler clamps instead of failing"
+        );
+    }
+
+    #[test]
+    fn long_haul_composes_with_faults_and_clusters() {
+        // Faults + horizon stay LongHaul regardless of modifier order; the
+        // storm rides in on cfg.faults.
+        for s in [
+            "fuzz:v1:seed=5:faults=3:horizon=1800:clusters=2",
+            "fuzz:v1:seed=5:horizon=1800:clusters=2:faults=3",
+        ] {
+            let spec = FuzzSpec::from_repro(s).expect("composite parses");
+            assert_eq!(spec.class, FuzzClass::LongHaul, "{s}");
+            assert_eq!(spec.cfg.faults, 3, "{s}");
+            assert_eq!(spec.cfg.clusters, 2, "{s}");
+            assert_eq!(spec.cfg.duration_ms, 1_800_000.0, "{s}");
+        }
+        let spec = FuzzSpec::from_repro(
+            "fuzz:v1:seed=5:faults=3:horizon=1800:clusters=2",
+        )
+        .unwrap();
+        assert_eq!(
+            spec.repro(),
+            "fuzz:v1:seed=5:faults=3:horizon=1800:clusters=2",
+            "canonical emission order"
+        );
+        // Cluster bounds ride the config validator.
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=5:clusters=0").is_none());
+        assert!(FuzzSpec::from_repro("fuzz:v1:seed=5:clusters=65").is_none());
+        let c = FuzzSpec::from_repro("fuzz:v1:seed=5:clusters=4").unwrap();
+        assert_eq!(c.cfg.clusters, 4);
+        assert_ne!(c.class, FuzzClass::LongHaul, "clusters alone is not a class");
+    }
+
+    #[test]
+    fn long_haul_build_darkens_links_and_keeps_pipelines_valid() {
+        // Short horizon keeps the build cheap; the composite mutations
+        // still apply (device 1 is always churned, so some in-horizon
+        // second must be dark).
+        let spec = FuzzSpec::sample_long_haul(3, 600);
+        let sc = spec.build();
+        for p in &sc.pipelines {
+            assert!(p.validate().is_ok(), "{}", p.name);
+        }
+        let (dark, bright) = in_horizon_profile(&sc, 1);
+        assert!(dark > 0, "churn/blackout left device 1 untouched");
+        assert!(dark + bright == 600);
+        // Same repro, same scenario.
+        let again = FuzzSpec::from_repro(&spec.repro()).unwrap().build();
+        assert_eq!(
+            scenario_env_bw(&sc, 123_000.0),
+            scenario_env_bw(&again, 123_000.0)
+        );
     }
 
     #[test]

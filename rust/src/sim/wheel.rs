@@ -1,0 +1,368 @@
+//! Time-source layer: a hierarchical calendar queue ("timing wheel") for
+//! the simulator's event stream, plus the outage-skip table `FifoLink`
+//! uses to jump bandwidth blackouts in O(1).
+//!
+//! The wheel replaces the engine's former global `BinaryHeap<TimedEvent>`
+//! (flagged the hottest remaining structure since PR 1). The contract is
+//! exact: events pop in ascending `(t, tie, seq)` order — `total_cmp` on
+//! time, then the same-time permutation key, then the insertion sequence —
+//! bit-for-bit identical to the heap, including the seeded `:order=K`
+//! same-time shuffle. The win is structural: the near future lives in
+//! fixed-width buckets (push is O(1) bucket append for the common case —
+//! frames, flushes, exec completions all land within the window), and only
+//! the currently-draining bucket pays a heap's `log n`. Far-future events
+//! (control-plane clocks, fault schedules) overflow into a small heap and
+//! migrate forward as the window advances.
+//!
+//! Determinism notes:
+//! - Bucketing never reorders anything: buckets partition events by
+//!   `floor(t / WIDTH)`, strictly coarser than the `(t, tie, seq)` order,
+//!   and the active bucket is itself a heap on the full key.
+//! - `iter` walks every queued event in unspecified order — it exists for
+//!   the engine's in-flight census, which only counts.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::Ms;
+
+/// splitmix64 finalizer: a bijection on u64, so distinct `seq` values can
+/// never collide on `tie` (the `seq` tiebreak below is then unreachable,
+/// but kept as a total-order backstop).
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One scheduled event: timestamp, same-time ordering key, insertion
+/// sequence, payload. With `order_seed == 0` the engine sets `tie = seq`
+/// (insertion order, the historical behavior); otherwise `tie` is a seeded
+/// bijective permutation of `seq`, so events sharing a timestamp pop in a
+/// shuffled — but fully reproducible — order. Scheduler-independent
+/// quantities must not depend on it.
+pub struct WheelEntry<E> {
+    pub t: Ms,
+    pub tie: u64,
+    pub seq: u64,
+    pub ev: E,
+}
+
+impl<E> PartialEq for WheelEntry<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl<E> Eq for WheelEntry<E> {}
+impl<E> PartialOrd for WheelEntry<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for WheelEntry<E> {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reversed for a min-heap on (t, tie, seq). total_cmp gives NaN
+        // timestamps a fixed (last) position instead of silently
+        // comparing Equal and corrupting event order.
+        o.t.total_cmp(&self.t)
+            .then(o.tie.cmp(&self.tie))
+            .then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// Ring slots in the near-future window.
+const NB: usize = 256;
+/// Bucket width in ms. NB × WIDTH = 4.096 s of window: frames (tens of
+/// ms apart), flush timers (≤ SLO/2) and exec completions (ms-scale) all
+/// land inside it; only the 5–60 s control clocks and fault schedules
+/// overflow.
+const WIDTH: Ms = 16.0;
+
+/// Calendar queue over [`WheelEntry`]s with the exact pop order of a
+/// `BinaryHeap` on `(t, tie, seq)`.
+pub struct EventWheel<E> {
+    /// Absolute index of the bucket currently being drained.
+    cur_idx: u64,
+    /// Events of the active bucket (plus any pushed at or before it),
+    /// ordered on the full key.
+    current: BinaryHeap<WheelEntry<E>>,
+    /// Near-future ring: slot `i % NB` holds the events of absolute bucket
+    /// `i` for `cur_idx < i < cur_idx + NB` (unsorted — sorted lazily when
+    /// the bucket becomes active).
+    ring: Vec<Vec<WheelEntry<E>>>,
+    ring_count: usize,
+    /// Far future (bucket ≥ cur_idx + NB at push time); migrates into the
+    /// active bucket as the window advances past it.
+    overflow: BinaryHeap<WheelEntry<E>>,
+    len: usize,
+}
+
+#[inline]
+fn bucket_of(t: Ms) -> u64 {
+    // Saturating f64→u64 cast: negatives clamp to bucket 0, +inf / NaN to
+    // u64::MAX (parked in overflow until everything finite drains).
+    (t / WIDTH) as u64
+}
+
+impl<E> EventWheel<E> {
+    pub fn new() -> EventWheel<E> {
+        EventWheel {
+            cur_idx: 0,
+            current: BinaryHeap::new(),
+            ring: (0..NB).map(|_| Vec::new()).collect(),
+            ring_count: 0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule an event. `tie` and `seq` come from the caller (the engine
+    /// owns the sequence counter and the `:order=K` permutation).
+    pub fn push(&mut self, t: Ms, tie: u64, seq: u64, ev: E) {
+        let idx = bucket_of(t);
+        let entry = WheelEntry { t, tie, seq, ev };
+        self.len += 1;
+        if idx <= self.cur_idx {
+            // At (or, defensively, before) the active bucket: join the
+            // ordered drain directly — always safe, the heap re-sorts.
+            self.current.push(entry);
+        } else if idx - self.cur_idx < NB as u64 {
+            self.ring[(idx % NB as u64) as usize].push(entry);
+            self.ring_count += 1;
+        } else {
+            self.overflow.push(entry);
+        }
+    }
+
+    /// Advance `cur_idx` to the earliest non-empty bucket and pull its
+    /// events into `current`. Caller guarantees `current` is empty and at
+    /// least one event is queued in the ring or overflow.
+    fn advance(&mut self) {
+        let mut next: Option<u64> = None;
+        if self.ring_count > 0 {
+            // Ring entries all live in (cur_idx, cur_idx + NB): the first
+            // non-empty slot in that scan order is the earliest bucket.
+            for j in 1..NB as u64 {
+                let idx = self.cur_idx + j;
+                if !self.ring[(idx % NB as u64) as usize].is_empty() {
+                    next = Some(idx);
+                    break;
+                }
+            }
+        }
+        if let Some(top) = self.overflow.peek() {
+            let o = bucket_of(top.t);
+            next = Some(match next {
+                Some(r) => r.min(o),
+                None => o,
+            });
+        }
+        let Some(next_idx) = next else { return };
+        self.cur_idx = next_idx;
+        // The slot for `next_idx` holds only events of that absolute bucket
+        // (the window is exactly NB wide), so draining it is exact.
+        let slot = (next_idx % NB as u64) as usize;
+        for e in self.ring[slot].drain(..) {
+            self.ring_count -= 1;
+            self.current.push(e);
+        }
+        // Overflow events whose bucket has arrived migrate in with it.
+        while let Some(top) = self.overflow.peek() {
+            if bucket_of(top.t) != next_idx {
+                break;
+            }
+            self.current.push(self.overflow.pop().unwrap());
+        }
+    }
+
+    /// Earliest queued event, if any. `&mut` because reaching it may
+    /// rotate the window forward (no event is consumed).
+    pub fn peek(&mut self) -> Option<&WheelEntry<E>> {
+        while self.current.is_empty() {
+            if self.len == 0 {
+                return None;
+            }
+            self.advance();
+        }
+        self.current.peek()
+    }
+
+    /// Pop the earliest event in `(t, tie, seq)` order.
+    pub fn pop(&mut self) -> Option<WheelEntry<E>> {
+        self.peek()?;
+        self.len -= 1;
+        self.current.pop()
+    }
+
+    /// Walk every queued event (unspecified order) — the engine's
+    /// in-flight conservation census only counts, it never orders.
+    pub fn iter(&self) -> impl Iterator<Item = &WheelEntry<E>> {
+        self.current
+            .iter()
+            .chain(self.ring.iter().flatten())
+            .chain(self.overflow.iter())
+    }
+}
+
+impl<E> Default for EventWheel<E> {
+    fn default() -> Self {
+        EventWheel::new()
+    }
+}
+
+/// Outage-skip table for a looping 1-second bandwidth trace: the same
+/// calendar idea (one slot per second) applied to `FifoLink`'s blackout
+/// deferral, replacing the second-by-second rescan on every send.
+#[derive(Clone, Debug)]
+pub struct OutageSkip {
+    /// `next_up[i]` = smallest k ≥ 0 with `samples[(i + k) % len] > 0`,
+    /// or `u32::MAX` when the trace is permanently dark.
+    next_up: Vec<u32>,
+}
+
+impl OutageSkip {
+    pub fn build(samples: &[f64]) -> OutageSkip {
+        let n = samples.len();
+        let mut next_up = vec![u32::MAX; n];
+        // One reverse pass over the doubled index space handles the wrap
+        // (the trace loops: `idx % len`).
+        let mut dist = u32::MAX;
+        for i in (0..2 * n).rev() {
+            let idx = i % n;
+            if samples[idx] > 0.0 {
+                dist = 0;
+            } else if dist != u32::MAX {
+                dist += 1;
+            }
+            if i < n {
+                next_up[idx] = dist;
+            }
+        }
+        OutageSkip { next_up }
+    }
+
+    /// Whole seconds from sample slot `idx` to the next slot with
+    /// bandwidth (0 when the slot itself is bright); `None` when the trace
+    /// has no bright second at all.
+    pub fn to_next_bright(&self, idx: usize) -> Option<u32> {
+        let d = self.next_up[idx % self.next_up.len()];
+        (d != u32::MAX).then_some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut EventWheel<u32>) -> Vec<(f64, u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = w.pop() {
+            out.push((e.t, e.tie, e.seq));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_tie_order() {
+        let mut w = EventWheel::new();
+        w.push(50.0, 3, 3, 0);
+        w.push(10.0, 1, 1, 0);
+        w.push(50.0, 2, 2, 0);
+        w.push(10.0, 4, 4, 0);
+        let order = drain(&mut w);
+        assert_eq!(
+            order,
+            vec![(10.0, 1, 1), (10.0, 4, 4), (50.0, 2, 2), (50.0, 3, 3)]
+        );
+    }
+
+    #[test]
+    fn far_future_overflow_migrates_forward() {
+        let mut w = EventWheel::new();
+        w.push(600_000.0, 2, 2, 0); // far beyond the ring window
+        w.push(5.0, 1, 1, 0);
+        w.push(1_200_000.0, 3, 3, 0);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.pop().unwrap().t, 5.0);
+        assert_eq!(w.pop().unwrap().t, 600_000.0);
+        // Push into the (now advanced) near window between pops.
+        w.push(600_100.0, 4, 4, 0);
+        assert_eq!(w.pop().unwrap().t, 600_100.0);
+        assert_eq!(w.pop().unwrap().t, 1_200_000.0);
+        assert!(w.pop().is_none());
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut w = EventWheel::new();
+        w.push(100.0, 1, 1, 0);
+        w.push(40_000.0, 2, 2, 0);
+        assert_eq!(w.pop().unwrap().t, 100.0);
+        // Now at bucket of t=100; push later events, including same-bucket.
+        w.push(105.0, 3, 3, 0);
+        w.push(20_000.0, 4, 4, 0);
+        assert_eq!(w.pop().unwrap().t, 105.0);
+        assert_eq!(w.pop().unwrap().t, 20_000.0);
+        assert_eq!(w.pop().unwrap().t, 40_000.0);
+    }
+
+    #[test]
+    fn infinite_timestamps_park_in_overflow() {
+        let mut w = EventWheel::new();
+        w.push(f64::INFINITY, 2, 2, 0);
+        w.push(1.0, 1, 1, 0);
+        assert_eq!(w.iter().count(), 2);
+        assert_eq!(w.pop().unwrap().t, 1.0);
+        assert_eq!(w.peek().unwrap().t, f64::INFINITY);
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn iter_sees_every_region() {
+        let mut w = EventWheel::new();
+        w.push(1.0, 1, 1, 0); // current-ish bucket
+        w.push(1000.0, 2, 2, 0); // ring
+        w.push(900_000.0, 3, 3, 0); // overflow
+        assert_eq!(w.iter().count(), 3);
+        let _ = w.pop();
+        assert_eq!(w.iter().count(), 2);
+    }
+
+    #[test]
+    fn outage_skip_matches_linear_scan() {
+        let samples = [0.0, 0.0, 3.0, 0.0, 1.0, 0.0];
+        let skip = OutageSkip::build(&samples);
+        for i in 0..samples.len() {
+            let expect = (0..samples.len() as u32)
+                .find(|&k| samples[(i + k as usize) % samples.len()] > 0.0);
+            assert_eq!(skip.to_next_bright(i), expect, "slot {i}");
+        }
+        // Wrap: slot 5 is dark, next bright is slot 2 of the next loop.
+        assert_eq!(skip.to_next_bright(5), Some(3));
+    }
+
+    #[test]
+    fn all_dark_trace_has_no_bright_second() {
+        let skip = OutageSkip::build(&[0.0, 0.0, 0.0]);
+        for i in 0..3 {
+            assert_eq!(skip.to_next_bright(i), None);
+        }
+    }
+
+    #[test]
+    fn mix64_is_deterministic_and_spreads() {
+        assert_eq!(mix64(1), mix64(1));
+        assert_ne!(mix64(1), mix64(2));
+        assert_eq!(mix64(0), 0); // the finalizer's one fixed point
+    }
+}

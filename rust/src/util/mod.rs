@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,68 @@
+//! Deterministic fan-out across scoped worker threads.
+//!
+//! The one parallelism discipline the whole crate uses: work-stealing
+//! over an atomic cursor, results merged back **in input order**, so any
+//! `--jobs` / `--sim-jobs` value is byte-identical to sequential —
+//! parallelism changes wall-clock only, never output. Shared by the
+//! experiment grids (`experiments::runner`), the conformance fuzzer, and
+//! the sim driver's partition fan-out (`sim::Simulator`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve a jobs request: 0 means "one per hardware thread", and the
+/// worker count never exceeds the number of cells.
+pub fn effective_jobs(jobs: usize, n_cells: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = if jobs == 0 { hw } else { jobs };
+    j.clamp(1, n_cells.max(1))
+}
+
+/// Map `f` over `0..n` across `jobs` scoped worker threads (`0` = one per
+/// hardware thread), returning results **in index order** regardless of
+/// completion order. Work-stealing over an atomic cursor: long items
+/// (e.g. the 13-hour diurnal run) don't leave siblings idle behind a
+/// static partition.
+pub fn par_map<T, F>(n: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = effective_jobs(jobs, n);
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        done.push((i, f(i)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("parallel worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("cell {i} never ran")))
+        .collect()
+}

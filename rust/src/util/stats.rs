@@ -2,6 +2,20 @@
 //! fixed-bucket histograms, and the burstiness measure (coefficient of
 //! variation of inter-arrival times) that drives CWD's Insight 1.
 
+/// FNV-1a offset basis — seed for the digest accumulators below and for
+/// [`crate::metrics::RunMetrics::digest`].
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a accumulation step over a 64-bit word (byte-at-a-time, so
+/// digests are identical across endianness of the accumulating order).
+pub(crate) fn fnv1a(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// Streaming mean/variance/min/max (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -316,6 +330,25 @@ impl QuantileSketch {
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
+
+    /// Order-independent 64-bit fingerprint of the sketch contents. Only
+    /// non-empty buckets are hashed, so a never-pushed sketch and one
+    /// whose bucket array was allocated but stayed zero digest equal.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, self.n);
+        h = fnv1a(h, self.low);
+        h = fnv1a(h, self.sum.to_bits());
+        h = fnv1a(h, self.min.to_bits());
+        h = fnv1a(h, self.max.to_bits());
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                h = fnv1a(h, i as u64);
+                h = fnv1a(h, c);
+            }
+        }
+        h
+    }
 }
 
 /// Fixed-width bucket histogram for latency distributions (Fig. 6b/10b).
@@ -368,6 +401,35 @@ impl Histogram {
 
     pub fn bucket_edges(&self, i: usize) -> (f64, f64) {
         (self.lo + i as f64 * self.width, self.lo + (i + 1) as f64 * self.width)
+    }
+
+    /// Fold another histogram of the identical shape into this one
+    /// (bucket counts add exactly; fleet-metric merging).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.lo == other.lo
+                && self.width == other.width
+                && self.buckets.len() == other.buckets.len(),
+            "histogram shapes differ"
+        );
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.underflow += other.underflow;
+    }
+
+    /// 64-bit fingerprint of the full bucket state (shape included).
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, self.lo.to_bits());
+        h = fnv1a(h, self.width.to_bits());
+        h = fnv1a(h, self.underflow);
+        h = fnv1a(h, self.overflow);
+        for &b in &self.buckets {
+            h = fnv1a(h, b);
+        }
+        h
     }
 
     /// Render a compact ASCII sparkline of bucket densities.
@@ -563,6 +625,49 @@ mod tests {
         assert_eq!(h.buckets()[0], 1);
         assert_eq!(h.buckets()[1], 2);
         assert_eq!(h.buckets()[9], 1);
+    }
+
+    #[test]
+    fn histogram_merge_equals_single_histogram() {
+        let mut whole = Histogram::new(0.0, 100.0, 20);
+        let mut a = Histogram::new(0.0, 100.0, 20);
+        let mut b = Histogram::new(0.0, 100.0, 20);
+        let mut rng = crate::util::Rng::new(17);
+        for i in 0..300 {
+            let x = rng.range(-10.0, 150.0);
+            whole.push(x);
+            if i % 3 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), whole.total());
+        assert_eq!(a.buckets(), whole.buckets());
+        assert_eq!(a.digest(), whole.digest());
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram shapes differ")]
+    fn histogram_merge_rejects_mismatched_shapes() {
+        let mut a = Histogram::new(0.0, 100.0, 20);
+        a.merge(&Histogram::new(0.0, 100.0, 10));
+    }
+
+    #[test]
+    fn digests_are_stable_and_content_sensitive() {
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        assert_eq!(a.digest(), b.digest(), "empty sketches digest equal");
+        a.push(42.0);
+        b.push(42.0);
+        assert_eq!(a.digest(), b.digest());
+        b.push(43.0);
+        assert_ne!(a.digest(), b.digest());
+
+        let mut h1 = Histogram::new(0.0, 10.0, 10);
+        let mut h2 = Histogram::new(0.0, 10.0, 10);
+        assert_eq!(h1.digest(), h2.digest());
+        h1.push(1.0);
+        h2.push(2.0);
+        assert_ne!(h1.digest(), h2.digest(), "different buckets, same total");
     }
 
     #[test]

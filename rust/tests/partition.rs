@@ -1,0 +1,148 @@
+//! Engine-split acceptance: the timing wheel against the old global-heap
+//! discipline, partition-merge determinism across `--sim-jobs`, and the
+//! long-horizon fuzz family surviving hundreds of replan rounds with the
+//! invariant engine armed.
+
+use std::collections::BinaryHeap;
+
+use octopinf::coordinator::{ReplanMode, SchedulerKind};
+use octopinf::sim::wheel::{mix64, EventWheel, WheelEntry};
+use octopinf::sim::{preset, run_checked_with, run_with, FuzzSpec, Scenario};
+use octopinf::util::prop::{check, forall, vec_of};
+use octopinf::util::Rng;
+
+/// One step of a random interleaving: `Some(t)` pushes at time `t`,
+/// `None` pops from both queues and compares.
+fn gen_steps(r: &mut Rng) -> Vec<Option<f64>> {
+    vec_of(r, 20, 400, |r| {
+        if r.chance(0.35) {
+            None
+        } else if r.chance(0.1) {
+            // Far future: exercises the overflow heap and its migration
+            // back into the window as the wheel advances.
+            Some(r.range(0.0, 1_000_000.0))
+        } else {
+            // Coarse grid: forces exact same-time ties (the `:order=K`
+            // battleground) and same-bucket neighbors.
+            Some((r.below(64) as f64) * 8.0)
+        }
+    })
+}
+
+/// The wheel's contract: for any interleaving of pushes and pops, pop
+/// order is bit-for-bit the old `BinaryHeap` order on `(t, tie, seq)` —
+/// under insertion-order ties (`K = 0`) and seeded permutations alike.
+#[test]
+fn prop_wheel_pops_exactly_like_the_old_heap() {
+    for order_k in [0u64, 0x9E37_79B9_7F4A_7C15, 0x0DD_BA11_5EED] {
+        forall(0x911 ^ order_k, 40, gen_steps, |steps| {
+            let mut wheel: EventWheel<u64> = EventWheel::new();
+            let mut heap: BinaryHeap<WheelEntry<u64>> = BinaryHeap::new();
+            let mut seq = 0u64;
+            let compare = |a: Option<WheelEntry<u64>>,
+                               b: Option<WheelEntry<u64>>|
+             -> Result<(), String> {
+                match (a, b) {
+                    (None, None) => Ok(()),
+                    (Some(x), Some(y)) => {
+                        check(
+                            x.t.to_bits() == y.t.to_bits()
+                                && x.tie == y.tie
+                                && x.seq == y.seq
+                                && x.ev == y.ev,
+                            format!(
+                                "pop diverged: wheel ({}, {}, {}) vs heap ({}, {}, {})",
+                                x.t, x.tie, x.seq, y.t, y.tie, y.seq
+                            ),
+                        )
+                    }
+                    (a, b) => Err(format!(
+                        "one queue drained early: wheel {:?} heap {:?}",
+                        a.map(|e| e.seq),
+                        b.map(|e| e.seq)
+                    )),
+                }
+            };
+            for step in steps {
+                match *step {
+                    Some(t) => {
+                        let tie =
+                            if order_k == 0 { seq } else { mix64(order_k ^ seq) };
+                        wheel.push(t, tie, seq, seq);
+                        heap.push(WheelEntry { t, tie, seq, ev: seq });
+                        seq += 1;
+                    }
+                    None => compare(wheel.pop(), heap.pop())?,
+                }
+                check(wheel.len() == heap.len(), "length drift")?;
+            }
+            loop {
+                let (a, b) = (wheel.pop(), heap.pop());
+                let done = a.is_none() && b.is_none();
+                compare(a, b)?;
+                if done {
+                    return Ok(());
+                }
+            }
+        });
+    }
+}
+
+/// `--sim-jobs` is a pure wall-clock knob: a 4-partition run produces a
+/// byte-identical digest (and timeline) at every worker count.
+#[test]
+fn digests_identical_across_sim_jobs() {
+    let mut cfg = preset("smoke").unwrap();
+    cfg.clusters = 4;
+    let sc = Scenario::build(cfg);
+    let base = run_with(&sc, SchedulerKind::OctopInf, 1);
+    assert!(base.on_time > 0, "smoke run produced no on-time work");
+    for jobs in [2usize, 4, 8] {
+        let m = run_with(&sc, SchedulerKind::OctopInf, jobs);
+        assert_eq!(
+            m.digest(),
+            base.digest(),
+            "--sim-jobs {jobs} changed the run digest"
+        );
+        assert_eq!(m.timeline, base.timeline, "--sim-jobs {jobs} timeline");
+    }
+}
+
+/// Same sweep with the invariant engine armed: every partition's census
+/// closes, the merged report is identical, and arming changes no metrics.
+#[test]
+fn invariants_stay_armed_across_partition_barriers() {
+    let mut cfg = preset("smoke").unwrap();
+    cfg.clusters = 4;
+    let sc = Scenario::build(cfg);
+    let plain = run_with(&sc, SchedulerKind::OctopInf, 1).digest();
+    let (m1, r1) = run_checked_with(&sc, SchedulerKind::OctopInf, 1);
+    assert!(r1.ok(), "violations:\n{}", r1.violations.join("\n"));
+    assert_eq!(m1.digest(), plain, "arming invariants changed the run");
+    let (m8, r8) = run_checked_with(&sc, SchedulerKind::OctopInf, 8);
+    assert!(r8.ok(), "violations:\n{}", r8.violations.join("\n"));
+    assert_eq!(m8.digest(), plain, "sim-jobs 8 diverged under invariants");
+    assert_eq!(r8.completed_queries, r1.completed_queries);
+    assert_eq!(r8.plans, r1.plans);
+}
+
+/// The long-haul fuzz family: an hour-plus composite horizon driven from
+/// its repro string, drift-triggered replanning layered on the 6-minute
+/// clock, invariants armed end to end.
+#[test]
+fn long_haul_repro_runs_many_replan_rounds_clean() {
+    let mut spec = FuzzSpec::from_repro("fuzz:v1:seed=4242:horizon=3600")
+        .expect("long-haul repro parses");
+    spec.cfg.replan = ReplanMode::Drift;
+    let (m, r) = run_checked_with(&spec.build(), SchedulerKind::OctopInf, 2);
+    assert!(
+        r.ok(),
+        "{}: invariant violations:\n{}",
+        spec.repro(),
+        r.violations.join("\n")
+    );
+    assert!(m.on_time + m.late > 0, "long-haul run completed nothing");
+    // 3600 s = 10 fixed six-minute rounds; drift triggers fire on top of
+    // them through the diurnal swing, so the floor is conservative.
+    assert!(r.plans >= 8, "only {} plans over an hour-long horizon", r.plans);
+}
