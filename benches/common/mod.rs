@@ -101,6 +101,63 @@ impl Recorder {
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
     }
+
+    /// Merge the collected entries into an existing `BENCH_<bench>.json`
+    /// (same-name entries are replaced, others preserved), or write a
+    /// fresh file if none exists. Lets several bench binaries contribute
+    /// to one tracked file — the planner bench records into
+    /// `BENCH_hotpath.json` so the perf_regression gate covers both.
+    pub fn write_merged(&self) {
+        let path = format!("BENCH_{}.json", self.bench);
+        let mut entries: Vec<Entry> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for e in parse_entries(&text) {
+                if !self.entries.iter().any(|n| n.name == e.name) {
+                    entries.push(e);
+                }
+            }
+        }
+        for e in &self.entries {
+            entries.push(Entry {
+                name: e.name.clone(),
+                iters: e.iters,
+                ns_per_iter: e.ns_per_iter,
+            });
+        }
+        let all = Recorder { bench: self.bench.clone(), entries };
+        match std::fs::write(&path, all.to_json()) {
+            Ok(()) => println!("\nmerged into {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Parse a Recorder JSON back into entries — the inverse of `to_json`
+/// (one result object per line; names are plain ASCII, no serde needed).
+fn parse_entries(text: &str) -> Vec<Entry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(npos) = line.find("\"name\": \"") else { continue };
+        let rest = &line[npos + 9..];
+        let Some(endq) = rest.find('"') else { continue };
+        let name = rest[..endq].to_string();
+        let grab = |key: &str| -> Option<f64> {
+            let p = line.find(key)?;
+            let tail = &line[p + key.len()..];
+            let num: String = tail
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+                .collect();
+            num.parse().ok()
+        };
+        let (Some(iters), Some(ns)) =
+            (grab("\"iters\": "), grab("\"ns_per_iter\": "))
+        else {
+            continue;
+        };
+        out.push(Entry { name, iters: iters as usize, ns_per_iter: ns });
+    }
+    out
 }
 
 /// Minimal JSON string escaping (names are plain ASCII identifiers).

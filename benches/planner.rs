@@ -1,0 +1,95 @@
+//! Control-plane micro-benchmarks: full CWD+CORAL planning, subset
+//! repair, and placement alone, each next to its retained naive
+//! reference so the incremental-workspace speedup is visible in the
+//! numbers. Records into `BENCH_hotpath.json` (merged, not clobbered)
+//! so the perf_regression gate tracks planner entries too — run the
+//! `hotpath` bench first; it writes the file this one merges into.
+
+mod common;
+
+use octopinf::cluster::Cluster;
+use octopinf::coordinator::coral::{coral_repair_ws, coral_ws};
+use octopinf::coordinator::cwd::{cwd_subset_ws, cwd_ws, CwdParams};
+use octopinf::coordinator::reference::{
+    coral_reference, coral_repair_reference, cwd_reference,
+    cwd_subset_reference,
+};
+use octopinf::coordinator::{PlannerWorkspace, SchedEnv, StageCfg};
+use octopinf::pipeline::standard_pipelines;
+use octopinf::profiles::ProfileStore;
+
+fn main() {
+    let mut rec = common::Recorder::new("hotpath");
+
+    // Paper testbed (server + 9 edge boxes) under a heavy tenant count:
+    // 24 pipelines, sources cycling over the edge devices.
+    let cluster = Cluster::paper_testbed();
+    let profiles = ProfileStore::analytic();
+    let pipelines: Vec<_> = standard_pipelines(24)
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut p)| {
+            p.source_device = 1 + (i % (cluster.devices.len() - 1));
+            p
+        })
+        .collect();
+    let bws = vec![100.0; cluster.devices.len()];
+    let env = SchedEnv::bootstrap(&cluster, &profiles, &pipelines, bws.clone());
+    let params = CwdParams::default();
+
+    let mut ws = PlannerWorkspace::new();
+    let mut out: Vec<(usize, Vec<StageCfg>)> = Vec::new();
+
+    // Full round: CWD over all pipelines, then CORAL placement.
+    rec.micro("planner full plan 24p", 200, || {
+        cwd_ws(&env, &params, &mut ws, &mut out);
+        let cfgs: Vec<Vec<StageCfg>> =
+            out.drain(..).map(|(_, c)| c).collect();
+        std::hint::black_box(coral_ws(&env, &cfgs, &mut ws));
+    });
+    rec.micro("planner full plan 24p reference", 50, || {
+        let cfgs: Vec<Vec<StageCfg>> = cwd_reference(&env, &params)
+            .into_iter()
+            .map(|r| r.cfg)
+            .collect();
+        std::hint::black_box(coral_reference(&env, &cfgs));
+    });
+
+    // Fixtures for the subset / placement entries.
+    cwd_ws(&env, &params, &mut ws, &mut out);
+    let cfgs: Vec<Vec<StageCfg>> = out.drain(..).map(|(_, c)| c).collect();
+    let plan = coral_ws(&env, &cfgs, &mut ws);
+
+    // One pipeline surges; replan it alone against the standing plan.
+    let target = 7usize;
+    let mut surged =
+        SchedEnv::bootstrap(&cluster, &profiles, &pipelines, bws);
+    for o in surged.obs[target].iter_mut() {
+        o.rate_qps *= 2.5;
+    }
+    let kept: Vec<(usize, Vec<StageCfg>)> = cfgs
+        .iter()
+        .enumerate()
+        .filter(|&(p, _)| p != target)
+        .map(|(p, c)| (p, c.clone()))
+        .collect();
+    let targets = [target];
+    rec.micro("planner subset repair 1of24", 500, || {
+        cwd_subset_ws(&surged, &params, &targets, &kept, &mut ws, &mut out);
+        std::hint::black_box(coral_repair_ws(&surged, &plan, &out, &mut ws));
+    });
+    rec.micro("planner subset repair 1of24 reference", 100, || {
+        let sub = cwd_subset_reference(&surged, &params, &targets, &kept);
+        std::hint::black_box(coral_repair_reference(&surged, &plan, &sub));
+    });
+
+    // Placement alone (CORAL stream packing, no CWD).
+    rec.micro("planner placement 24p", 500, || {
+        std::hint::black_box(coral_ws(&env, &cfgs, &mut ws));
+    });
+    rec.micro("planner placement 24p reference", 100, || {
+        std::hint::black_box(coral_reference(&env, &cfgs));
+    });
+
+    rec.write_merged();
+}

@@ -11,9 +11,11 @@
 #   partition determinism: fuzz + chaos smokes re-run at --sim-jobs 1 and
 #               --sim-jobs 4 over 2-cluster scenarios; the printed digest
 #               lines must match byte-for-byte or CI exits non-zero
-#   perf:       cargo bench --bench hotpath -> BENCH_hotpath.json; the
-#               first run captures BENCH_hotpath.baseline.json (commit it),
-#               later runs gate >25 % per-entry regressions
+#   perf:       cargo bench --bench hotpath -> BENCH_hotpath.json, then
+#               cargo bench --bench planner merges its control-plane
+#               entries into the same file; the first run captures
+#               BENCH_hotpath.baseline.json (commit it), later runs gate
+#               >25 % per-entry regressions
 #               (rust/tests/perf_regression.rs). SKIP_BENCH=1 to skip.
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -68,7 +70,10 @@ det_gate chaos cargo run --release --quiet -- chaos \
 cargo run --release --quiet -- frontdoor --quick
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
+  # Order matters: hotpath writes BENCH_hotpath.json fresh, planner
+  # merges its entries into it; only then is the file baseline-complete.
   cargo bench --bench hotpath
+  cargo bench --bench planner
   if [ ! -f BENCH_hotpath.baseline.json ]; then
     cp BENCH_hotpath.json BENCH_hotpath.baseline.json
     echo "captured new hot-path baseline: BENCH_hotpath.baseline.json (commit it)"

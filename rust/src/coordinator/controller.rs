@@ -6,12 +6,18 @@
 //! 4. Communicate the plan to Device Agents (the simulator / serving
 //!    stack consumes the `Plan` directly).
 //! 5. Metrics flow back into the KB; the AutoScaler reacts between rounds.
+//!
+//! The Controller owns a [`PlannerWorkspace`] and threads it through every
+//! CWD/CORAL call, so successive rounds (full plans, drift replans, fault
+//! replans) recycle all planner scratch. Plans are bit-identical to what
+//! the throwaway-workspace wrappers produce.
 
 use super::autoscaler::{AutoScaler, AutoScalerParams};
 use super::baselines::bestfit::spread;
-use super::coral::{coral, coral_repair};
-use super::cwd::{cwd, cwd_subset, CwdParams};
-use super::types::{Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg};
+use super::coral::{coral_repair_ws, coral_ws};
+use super::cwd::{cwd_subset_ws, cwd_ws, CwdParams};
+use super::types::{Plan, SchedEnv, Scheduler, SchedulerKind};
+use super::workspace::PlannerWorkspace;
 use crate::Ms;
 
 /// Scheduling period between full CWD+CORAL rounds (paper §IV-A5: 6 min).
@@ -21,6 +27,9 @@ pub const SCHEDULING_PERIOD_MS: Ms = 6.0 * 60.0 * 1000.0;
 pub struct Controller {
     kind: SchedulerKind,
     pub autoscaler: AutoScaler,
+    /// Reusable planner scratch; every plan/replan round resets what it
+    /// reads and recycles the rest (see [`PlannerWorkspace`]).
+    ws: PlannerWorkspace,
 }
 
 impl Controller {
@@ -28,6 +37,7 @@ impl Controller {
         Controller {
             kind,
             autoscaler: AutoScaler::new(AutoScalerParams::default()),
+            ws: PlannerWorkspace::new(),
         }
     }
 
@@ -55,16 +65,31 @@ impl Scheduler for Controller {
     }
 
     fn plan(&mut self, env: &SchedEnv) -> Plan {
-        // Step 2: CWD.
-        let mut cfgs: Vec<_> = cwd(env, &self.cwd_params())
-            .into_iter()
-            .map(|r| r.cfg)
-            .collect();
+        let params = self.cwd_params();
+        // Step 2: CWD, into recycled rows.
+        let mut pairs = std::mem::take(&mut self.ws.new_cfgs);
+        for (_, row) in pairs.drain(..) {
+            self.ws.row_pool.push(row);
+        }
+        cwd_ws(env, &params, &mut self.ws, &mut pairs);
+        // Re-shape the (p, cfg) pairs — emitted in pipeline order — into
+        // the dense per-pipeline table CORAL indexes, recycling last
+        // round's rows.
+        let mut cfgs = std::mem::take(&mut self.ws.plan_cfgs);
+        for row in cfgs.drain(..) {
+            self.ws.row_pool.push(row);
+        }
+        for (_, row) in pairs.drain(..) {
+            cfgs.push(row);
+        }
+        self.ws.new_cfgs = pairs;
         // Step 3: CORAL (or the spatial spreader for the ablation).
         if !self.use_coral() {
-            return spread(env, &cfgs);
+            let plan = spread(env, &cfgs);
+            self.ws.plan_cfgs = cfgs;
+            return plan;
         }
-        let mut plan = coral(env, &cfgs);
+        let mut plan = coral_ws(env, &cfgs, &mut self.ws);
         // Feasibility feedback: if CORAL could not reserve portions for
         // some edge-placed stages (stream time exhausted), pull those
         // stages back to the server and re-run CORAL once. This is the
@@ -82,9 +107,10 @@ impl Scheduler for Controller {
                 }
             }
             if changed {
-                plan = coral(env, &cfgs);
+                plan = coral_ws(env, &cfgs, &mut self.ws);
             }
         }
+        self.ws.plan_cfgs = cfgs;
         plan
     }
 
@@ -102,24 +128,50 @@ impl Scheduler for Controller {
         if !self.use_coral() {
             return self.plan(env); // spatial-only ablation: rounds are cheap
         }
-        let mut targets: Vec<usize> = drifted.to_vec();
+        let mut targets = std::mem::take(&mut self.ws.replan_targets);
+        targets.clear();
+        targets.extend_from_slice(drifted);
         targets.sort_unstable();
         targets.dedup();
-        let mut kept: Vec<(usize, Vec<StageCfg>)> = Vec::new();
-        for p in 0..env.pipelines.len() {
-            if targets.contains(&p) {
+        let mut kept = std::mem::take(&mut self.ws.kept);
+        for (_, row) in kept.drain(..) {
+            self.ws.row_pool.push(row);
+        }
+        // A kept pipeline missing from the old plan means the plan is
+        // stale/partial; flag it and fall through to a full round with all
+        // scratch restored (never early-return with buffers taken out).
+        let mut stale = false;
+        'keep: for p in 0..env.pipelines.len() {
+            if targets.binary_search(&p).is_ok() {
                 continue;
             }
-            let mut cfg = Vec::with_capacity(env.pipelines[p].len());
+            let mut cfg = self.ws.take_row();
             for m in 0..env.pipelines[p].len() {
                 match old.assignment(p, m) {
                     Some(a) => cfg.push(a.cfg),
-                    None => return self.plan(env), // stale/partial old plan
+                    None => {
+                        self.ws.row_pool.push(cfg);
+                        stale = true;
+                        break 'keep;
+                    }
                 }
             }
             kept.push((p, cfg));
         }
-        let mut new_cfgs = cwd_subset(env, &self.cwd_params(), &targets, &kept);
+        if stale {
+            for (_, row) in kept.drain(..) {
+                self.ws.row_pool.push(row);
+            }
+            self.ws.kept = kept;
+            self.ws.replan_targets = targets;
+            return self.plan(env);
+        }
+        let params = self.cwd_params();
+        let mut new_cfgs = std::mem::take(&mut self.ws.new_cfgs);
+        for (_, row) in new_cfgs.drain(..) {
+            self.ws.row_pool.push(row);
+        }
+        cwd_subset_ws(env, &params, &targets, &kept, &mut self.ws, &mut new_cfgs);
         // Capacity ratchet: between full rounds an incremental replan
         // never shrinks a stage that keeps its device and batch. Drift
         // checks sample the arrival window mid-burst-cycle; sizing down to
@@ -135,7 +187,13 @@ impl Scheduler for Controller {
                 }
             }
         }
-        let repaired = coral_repair(env, old, &new_cfgs);
+        let repaired = coral_repair_ws(env, old, &new_cfgs, &mut self.ws);
+        for (_, row) in kept.drain(..) {
+            self.ws.row_pool.push(row);
+        }
+        self.ws.kept = kept;
+        self.ws.replan_targets = targets;
+        self.ws.new_cfgs = new_cfgs;
         if repaired.unplaced > old.unplaced {
             self.plan(env)
         } else {
@@ -324,5 +382,29 @@ mod tests {
             let plan = s.plan(&env);
             assert!(!plan.assignments.is_empty());
         }
+    }
+
+    /// A controller that has already been through full plan + surge replan
+    /// + fault replan (workspace warm and full of recycled state) must
+    /// produce rounds bit-identical to a freshly-built controller's.
+    #[test]
+    fn warm_controller_matches_fresh_controller_bit_for_bit() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let mut warm = Controller::new(SchedulerKind::OctopInf);
+        let old = warm.plan(&env);
+        let mut surged = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        for o in surged.obs[1].iter_mut() {
+            o.rate_qps *= 2.5;
+        }
+        let warm_replan = warm.replan(&surged, &old, &[1]);
+        let warm_full = warm.plan(&env);
+
+        let fresh_full = Controller::new(SchedulerKind::OctopInf).plan(&env);
+        assert!(warm_full.bit_eq(&fresh_full), "warm full round diverged");
+        let mut fresh = Controller::new(SchedulerKind::OctopInf);
+        let fresh_old = fresh.plan(&env);
+        let fresh_replan = fresh.replan(&surged, &fresh_old, &[1]);
+        assert!(warm_replan.bit_eq(&fresh_replan), "warm replan diverged");
     }
 }

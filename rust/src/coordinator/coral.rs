@@ -13,62 +13,109 @@
 //! Scheduling is round-robin across pipelines — one instance of each model
 //! per round — so every pipeline keeps at least one active instance
 //! (fairness, §III-C2).
+//!
+//! Placement state lives in the caller's [`PlannerWorkspace`]: the GPU
+//! stream pool is recycled across rounds, the per-device index restricts
+//! every scan to the target device's contiguous GPU range (the naive code
+//! filtered all GPUs per instance), plan replay resolves `GpuId`s in
+//! O(1), and the free-gap search walks each stream's sorted portions with
+//! a cursor instead of materializing a free-portion list per candidate.
+//! All of it bit-identical to the naive twin in [`super::reference`].
 
-use std::collections::HashMap;
-
-use super::stream::{GpuStreams, Portion};
+use super::stream::Portion;
 use super::types::{
     Assignment, GpuBinding, GpuId, Plan, SchedEnv, StageCfg, TemporalSlot,
 };
+use super::workspace::{GpuPool, PlannerWorkspace};
 use crate::Ms;
 
 /// CORAL over CWD's per-pipeline configs -> full `Plan`.
+/// Convenience wrapper over [`coral_ws`] with a throwaway workspace.
 pub fn coral(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
-    let mut gpus = build_gpu_state(env);
-    let work: Vec<(usize, &[StageCfg])> =
-        cfgs.iter().enumerate().map(|(p, c)| (p, c.as_slice())).collect();
-    let (assignments, unplaced) = place_pipelines(env, &mut gpus, &work);
+    coral_ws(env, cfgs, &mut PlannerWorkspace::new())
+}
+
+/// Workspace-backed CORAL: places `cfgs[p]` for every pipeline `p` into
+/// freshly-reset (recycled) GPU stream state.
+pub fn coral_ws(
+    env: &SchedEnv,
+    cfgs: &[Vec<StageCfg>],
+    ws: &mut PlannerWorkspace,
+) -> Plan {
+    ws.gpus.reset(env);
+    ws.reset_stage_end(env);
+    let (assignments, unplaced) = place_pipelines(env, ws, Work::Dense(cfgs));
     Plan { assignments, unplaced }
 }
 
-/// The round-robin placement core shared by [`coral`] (all pipelines over
-/// empty GPUs) and [`coral_repair`] (drifted pipelines over the kept
-/// plan's remaining free portions). `work` pairs each pipeline id with its
-/// per-stage configs.
+/// The work list the placement core iterates round-robin. Full rounds
+/// place every pipeline (`Dense`: index = pipeline id); repairs place the
+/// drifted subset (`Pairs`). Neither form allocates.
+enum Work<'a> {
+    Dense(&'a [Vec<StageCfg>]),
+    Pairs(&'a [(usize, Vec<StageCfg>)]),
+}
+
+impl<'a> Work<'a> {
+    fn len(&self) -> usize {
+        match self {
+            Work::Dense(c) => c.len(),
+            Work::Pairs(c) => c.len(),
+        }
+    }
+
+    fn get(&self, i: usize) -> (usize, &'a [StageCfg]) {
+        match self {
+            Work::Dense(c) => (i, c[i].as_slice()),
+            Work::Pairs(c) => (c[i].0, c[i].1.as_slice()),
+        }
+    }
+}
+
+/// The round-robin placement core shared by [`coral_ws`] (all pipelines
+/// over empty GPUs) and [`coral_repair_ws`] (drifted pipelines over the
+/// kept plan's remaining free portions). Requires `ws.gpus` to hold the
+/// starting GPU state and `ws.stage_end`/`ws.stage_off` to be reset.
 fn place_pipelines(
     env: &SchedEnv,
-    gpus: &mut [GpuStreams],
-    work: &[(usize, &[StageCfg])],
+    ws: &mut PlannerWorkspace,
+    work: Work,
 ) -> (Vec<Assignment>, usize) {
-    // Upstream portion end per (pipeline, model): downstream instances must
-    // start after their upstream finished (Fig. 5a natural order).
-    let mut stage_end: HashMap<(usize, usize), Ms> = HashMap::new();
-
-    let mut assignments: Vec<Assignment> = work
-        .iter()
-        .flat_map(|&(p, cfg)| {
-            cfg.iter().enumerate().map(move |(m, &c)| Assignment {
+    // One assignment per (pipeline, model) in work × stage order; the
+    // offset table makes the per-instance lookup O(1) (the naive core
+    // re-found the assignment by linear scan every instance).
+    ws.asg_off.clear();
+    let mut assignments: Vec<Assignment> = Vec::new();
+    for i in 0..work.len() {
+        let (p, cfg) = work.get(i);
+        ws.asg_off.push(assignments.len());
+        for (m, &c) in cfg.iter().enumerate() {
+            assignments.push(Assignment {
                 pipeline: p,
                 model: m,
                 cfg: c,
                 bindings: Vec::new(),
-            })
-        })
-        .collect();
+            });
+        }
+    }
     let mut unplaced = 0usize;
 
     // Round-robin: instance k of every (pipeline, model) per round.
-    let max_instances = work
-        .iter()
-        .flat_map(|(_, c)| c.iter())
-        .map(|c| c.instances)
-        .max()
-        .unwrap_or(0);
+    let mut max_instances = 0;
+    for i in 0..work.len() {
+        for c in work.get(i).1 {
+            max_instances = max_instances.max(c.instances);
+        }
+    }
     for instance in 0..max_instances {
-        for &(p, cfg) in work {
+        for i in 0..work.len() {
+            let (p, cfg) = work.get(i);
             let dag = &env.pipelines[p];
             let duty = dag.slo_ms / 2.0; // paper: duty cycle = SLO/2
-            for m in dag.topo_order() {
+            let off = ws.stage_off[p];
+            // `0..len` IS the topo order (stages are stored topologically;
+            // `PipelineDag::topo_order` returns the identity permutation).
+            for m in 0..dag.len() {
                 let c = cfg[m];
                 if instance >= c.instances {
                     continue;
@@ -76,28 +123,33 @@ fn place_pipelines(
                 let spec = &dag.models[m].spec;
                 let class = env.cluster.device(c.device).class;
                 let dur = env.profiles.batch_latency(spec, class, c.batch);
-                let earliest = dag
-                    .upstream(m)
-                    .and_then(|u| stage_end.get(&(p, u)).copied())
-                    .unwrap_or(0.0);
+                // Upstream portion end per (pipeline, model): downstream
+                // instances start after their upstream finished (Fig. 5a).
+                // NEG_INFINITY = "no portion yet" (ends are always >= 0).
+                let earliest = match dag.upstream(m) {
+                    Some(u) => {
+                        let e = ws.stage_end[off + u];
+                        if e == f64::NEG_INFINITY {
+                            0.0
+                        } else {
+                            e
+                        }
+                    }
+                    None => 0.0,
+                };
                 let weight = spec.weight_mem_mb;
                 let inter = spec.inter_mem_mb * c.batch as f64;
                 let width = spec.util_width;
 
                 let slot = place_instance(
-                    gpus, c.device, earliest, dur, duty, weight, inter, width,
-                    (p, m, instance),
+                    &mut ws.gpus, c.device, earliest, dur, duty, weight,
+                    inter, width, (p, m, instance),
                 );
-                let a = assignments
-                    .iter_mut()
-                    .find(|a| a.pipeline == p && a.model == m)
-                    .unwrap();
+                let a = &mut assignments[ws.asg_off[i] + m];
                 match slot {
                     Some((gpu, t)) => {
-                        stage_end
-                            .entry((p, m))
-                            .and_modify(|e| *e = e.max(t.start_ms + dur))
-                            .or_insert(t.start_ms + dur);
+                        let e = &mut ws.stage_end[off + m];
+                        *e = e.max(t.start_ms + dur);
                         a.bindings.push(GpuBinding {
                             gpu,
                             width,
@@ -108,11 +160,9 @@ fn place_pipelines(
                         // line 26: not found — run contended (no
                         // reservation) on the least-loaded GPU.
                         unplaced += 1;
-                        let gpu = least_loaded_gpu(gpus, c.device);
-                        if let Some(g) =
-                            gpus.iter_mut().find(|g| g.gpu == gpu)
-                        {
-                            g.weight_mb += weight;
+                        let gpu = least_loaded_gpu(&ws.gpus, c.device);
+                        if let Some(gi) = ws.gpus.gpu_index(gpu) {
+                            ws.gpus.gpus[gi].weight_mb += weight;
                         }
                         a.bindings.push(GpuBinding {
                             gpu,
@@ -136,28 +186,49 @@ fn place_pipelines(
 /// in-flight work) stay untouched. The budget state of the old plan is
 /// replayed onto fresh GPU stream sets, the drifted pipelines' portions
 /// are released back into free stream time
-/// ([`GpuStreams::release_pipeline`]), and only the drifted pipelines'
-/// new configs are placed into what remains.
+/// ([`super::stream::GpuStreams::release_pipeline`]), and only the
+/// drifted pipelines' new configs are placed into what remains.
 ///
 /// `new_cfgs` pairs each drifted pipeline with its re-run CWD config; a
 /// pipeline absent from it keeps its old assignment.
+/// Convenience wrapper over [`coral_repair_ws`] with a throwaway workspace.
 pub fn coral_repair(
     env: &SchedEnv,
     old: &Plan,
     new_cfgs: &[(usize, Vec<StageCfg>)],
 ) -> Plan {
-    let mut gpus = build_gpu_state(env);
-    let drifted: Vec<usize> = new_cfgs.iter().map(|&(p, _)| p).collect();
-    let is_drifted = |p: usize| drifted.contains(&p);
+    coral_repair_ws(env, old, new_cfgs, &mut PlannerWorkspace::new())
+}
+
+/// Workspace-backed CORAL repair (see [`coral_repair`]).
+pub fn coral_repair_ws(
+    env: &SchedEnv,
+    old: &Plan,
+    new_cfgs: &[(usize, Vec<StageCfg>)],
+    ws: &mut PlannerWorkspace,
+) -> Plan {
+    ws.gpus.reset(env);
+    // Drifted-pipeline membership as a flag table (the naive code probed
+    // a Vec with `contains` per assignment).
+    let n_flags = new_cfgs.iter().map(|&(p, _)| p + 1).max().unwrap_or(0);
+    ws.drift_flag.clear();
+    ws.drift_flag.resize(n_flags, false);
+    for &(p, _) in new_cfgs {
+        ws.drift_flag[p] = true;
+    }
+    let is_drifted =
+        |flags: &[bool], p: usize| flags.get(p).copied().unwrap_or(false);
 
     // Replay the old plan's exact budget state: every instance's weight
-    // memory, every reservation's portion.
+    // memory, every reservation's portion. `gpu_index` rejects stale ids
+    // (hardware this cluster lacks) exactly like the naive linear find.
     for a in &old.assignments {
         let spec = &env.pipelines[a.pipeline].models[a.model].spec;
         for (i, b) in a.bindings.iter().enumerate() {
-            let Some(g) = gpus.iter_mut().find(|g| g.gpu == b.gpu) else {
+            let Some(gi) = ws.gpus.gpu_index(b.gpu) else {
                 continue;
             };
+            let g = &mut ws.gpus.gpus[gi];
             g.weight_mb += spec.weight_mem_mb;
             let Some(t) = b.temporal else { continue };
             if t.stream >= g.streams.len() {
@@ -178,17 +249,22 @@ pub fn coral_repair(
 
     // Free the drifted pipelines' reservations (and the weight memory of
     // their contended instances, which hold no portions).
-    for &p in &drifted {
-        for g in gpus.iter_mut() {
+    for &(p, _) in new_cfgs {
+        for g in ws.gpus.gpus.iter_mut() {
             g.release_pipeline(p, &|model| {
                 env.pipelines[p].models[model].spec.weight_mem_mb
             });
         }
     }
-    for a in old.assignments.iter().filter(|a| is_drifted(a.pipeline)) {
+    for a in old
+        .assignments
+        .iter()
+        .filter(|a| is_drifted(&ws.drift_flag, a.pipeline))
+    {
         let spec = &env.pipelines[a.pipeline].models[a.model].spec;
         for b in a.bindings.iter().filter(|b| b.temporal.is_none()) {
-            if let Some(g) = gpus.iter_mut().find(|g| g.gpu == b.gpu) {
+            if let Some(gi) = ws.gpus.gpu_index(b.gpu) {
+                let g = &mut ws.gpus.gpus[gi];
                 g.weight_mb = (g.weight_mb - spec.weight_mem_mb).max(0.0);
             }
         }
@@ -199,7 +275,7 @@ pub fn coral_repair(
     let mut assignments: Vec<Assignment> = old
         .assignments
         .iter()
-        .filter(|a| !is_drifted(a.pipeline))
+        .filter(|a| !is_drifted(&ws.drift_flag, a.pipeline))
         .cloned()
         .collect();
     let kept_unplaced: usize = assignments
@@ -208,20 +284,22 @@ pub fn coral_repair(
         .filter(|b| b.temporal.is_none())
         .count();
 
-    let work: Vec<(usize, &[StageCfg])> =
-        new_cfgs.iter().map(|(p, c)| (*p, c.as_slice())).collect();
-    let (mut repaired, new_unplaced) = place_pipelines(env, &mut gpus, &work);
+    ws.reset_stage_end(env);
+    let (mut repaired, new_unplaced) =
+        place_pipelines(env, ws, Work::Pairs(new_cfgs));
     assignments.append(&mut repaired);
     assignments.sort_by_key(|a| (a.pipeline, a.model));
     Plan { assignments, unplaced: kept_unplaced + new_unplaced }
 }
 
-/// All GPUs of the cluster as empty stream sets.
-pub fn build_gpu_state(env: &SchedEnv) -> Vec<GpuStreams> {
+/// All GPUs of the cluster as empty stream sets (allocating variant kept
+/// for the naive reference and one-shot callers; the workspace recycles
+/// the same build order through `GpuPool::reset`).
+pub fn build_gpu_state(env: &SchedEnv) -> Vec<super::stream::GpuStreams> {
     let mut gpus = Vec::new();
     for d in &env.cluster.devices {
         for (gi, g) in d.gpus.iter().enumerate() {
-            gpus.push(GpuStreams::new(
+            gpus.push(super::stream::GpuStreams::new(
                 GpuId { device: d.id, gpu: gi },
                 g.mem_mb,
                 g.util_cap,
@@ -232,9 +310,12 @@ pub fn build_gpu_state(env: &SchedEnv) -> Vec<GpuStreams> {
     gpus
 }
 
-fn least_loaded_gpu(gpus: &[GpuStreams], device: usize) -> GpuId {
-    gpus.iter()
-        .filter(|g| g.gpu.device == device)
+fn least_loaded_gpu(pool: &GpuPool, device: usize) -> GpuId {
+    let (s, e) = pool.device_range(device);
+    // Same first-minimum tie-break as the naive filter over all GPUs:
+    // the device's GPUs are contiguous and in identical relative order.
+    pool.gpus[s..e]
+        .iter()
         .min_by(|a, b| {
             (a.weight_mb + a.inter_mb())
                 .partial_cmp(&(b.weight_mb + b.inter_mb()))
@@ -246,9 +327,13 @@ fn least_loaded_gpu(gpus: &[GpuStreams], device: usize) -> GpuId {
 
 /// Best-fit search over free portions of the device's GPUs
 /// (Algorithm 2 lines 10-25). Returns the chosen (gpu, slot).
+///
+/// Scans only the device's contiguous GPU range and walks each stream's
+/// sorted portions with a cursor — the gaps visited, in order, are
+/// exactly the free-portion list the naive code materialized per stream.
 #[allow(clippy::too_many_arguments)]
 fn place_instance(
-    gpus: &mut [GpuStreams],
+    pool: &mut GpuPool,
     device: usize,
     earliest: Ms,
     dur: Ms,
@@ -258,12 +343,11 @@ fn place_instance(
     width: f64,
     owner: (usize, usize, u32),
 ) -> Option<(GpuId, TemporalSlot)> {
-    // Collect candidate (gpu_idx, stream, start, slack) over free portions.
+    let (gs, ge) = pool.device_range(device);
+    // Candidate (gpu_idx, stream, start, slack) over free gaps.
     let mut best: Option<(usize, usize, Ms, Ms)> = None;
-    for (gi, g) in gpus.iter().enumerate() {
-        if g.gpu.device != device {
-            continue;
-        }
+    for gi in gs..ge {
+        let g = &pool.gpus[gi];
         for s in &g.streams {
             // line 18: stream duty cycle must not exceed the pipeline's.
             if s.duty_cycle_ms > 0.0 && s.duty_cycle_ms > duty + 1e-9 {
@@ -274,31 +358,45 @@ fn place_instance(
                 continue;
             }
             // Portions must complete within the duty cycle.
-            let horizon = if s.duty_cycle_ms > 0.0 { s.duty_cycle_ms } else { duty };
-            for f in s.free_portions(horizon) {
-                if f.end_ms > horizon + 1e-9 {
-                    continue;
+            let horizon =
+                if s.duty_cycle_ms > 0.0 { s.duty_cycle_ms } else { duty };
+            let mut consider = |f_start: Ms, f_end: Ms,
+                                best: &mut Option<(usize, usize, Ms, Ms)>| {
+                if f_end > horizon + 1e-9 {
+                    return;
                 }
-                if let Some(start) = f.fit(earliest, dur) {
+                let start = f_start.max(earliest);
+                if start + dur <= f_end + 1e-9 {
                     // Best fit: minimal leftover slack (line: "fully
                     // contains r's portion with minimal empty space").
-                    let slack = f.len() - dur;
-                    let better = match best {
+                    let slack = (f_end - f_start) - dur;
+                    let better = match *best {
                         None => true,
                         Some((_, _, bstart, bslack)) => {
                             slack < bslack - 1e-9
-                                || (slack - bslack).abs() <= 1e-9 && start < bstart
+                                || (slack - bslack).abs() <= 1e-9
+                                    && start < bstart
                         }
                     };
                     if better {
-                        best = Some((gi, s.index, start, slack));
+                        *best = Some((gi, s.index, start, slack));
                     }
                 }
+            };
+            let mut cursor = 0.0;
+            for q in &s.portions {
+                if q.start_ms > cursor + 1e-9 {
+                    consider(cursor, q.start_ms, &mut best);
+                }
+                cursor = cursor.max(q.end_ms);
+            }
+            if cursor + 1e-9 < horizon {
+                consider(cursor, horizon, &mut best);
             }
         }
     }
     let (gi, si, start, _) = best?;
-    let g = &mut gpus[gi];
+    let g = &mut pool.gpus[gi];
     // lines 19-22: claim stream, set duty cycle, update budgets.
     if g.streams[si].duty_cycle_ms <= 0.0 {
         g.streams[si].duty_cycle_ms = duty;
@@ -586,5 +684,54 @@ mod tests {
             cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
         let plan = coral(&env, &cfgs);
         assert!(plan.unplaced > 0, "expected contention at 100x workload");
+    }
+
+    /// One workspace through full plan → repair → full plan on a different
+    /// env must match throwaway-workspace output bit for bit.
+    #[test]
+    fn workspace_reuse_across_plan_and_repair() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let cfgs: Vec<Vec<StageCfg>> =
+            cwd(&env, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+
+        let mut ws = PlannerWorkspace::new();
+        let full = coral_ws(&env, &cfgs, &mut ws);
+        assert!(full.bit_eq(&coral(&env, &cfgs)));
+
+        let kept: Vec<(usize, Vec<StageCfg>)> =
+            [0usize, 2].iter().map(|&p| (p, cfgs[p].clone())).collect();
+        let new_cfgs =
+            cwd_subset_for_test(&env, &[1], &kept);
+        let rep = coral_repair_ws(&env, &full, &new_cfgs, &mut ws);
+        assert!(rep.bit_eq(&coral_repair(&env, &full, &new_cfgs)));
+
+        // Third round on a smaller cluster: stale pool state must not leak.
+        let cl2 = Cluster::small();
+        let pl2: Vec<_> = standard_pipelines(2)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        let env2 = SchedEnv::bootstrap(&cl2, &pf, &pl2, vec![50.0; 3]);
+        let cfgs2: Vec<Vec<StageCfg>> =
+            cwd(&env2, &CwdParams::default()).into_iter().map(|r| r.cfg).collect();
+        let full2 = coral_ws(&env2, &cfgs2, &mut ws);
+        assert!(full2.bit_eq(&coral(&env2, &cfgs2)));
+    }
+
+    fn cwd_subset_for_test(
+        env: &SchedEnv,
+        targets: &[usize],
+        kept: &[(usize, Vec<StageCfg>)],
+    ) -> Vec<(usize, Vec<StageCfg>)> {
+        crate::coordinator::cwd::cwd_subset(
+            env,
+            &CwdParams::default(),
+            targets,
+            kept,
+        )
     }
 }

@@ -12,9 +12,19 @@
 //!    edge device, keeping a stage there only if its output traffic is
 //!    lighter than its input traffic by factor α and no downstream serves
 //!    as a better split (lines 21-28; Insights 2-3).
+//!
+//! The feasibility filters (device memory headroom, stream-time budget)
+//! run against [`DeviceLoads`] running aggregates instead of rescanning
+//! every already-placed pipeline per candidate: committed pipelines fold
+//! into the per-device totals once, in commit order, and each candidate
+//! continues that exact fold over only the current pipeline's stages —
+//! O(stages) instead of O(all placed stages), with bit-identical floats
+//! (the naive twin lives in [`super::reference`] and the identity is
+//! enforced by `rust/tests/planner.rs`).
 
 use super::estimator::{est_gpu_cost, est_latency, est_throughput, stage_memory_mb};
 use super::types::{SchedEnv, StageCfg};
+use super::workspace::{DeviceLoads, PlannerWorkspace};
 use crate::profiles::BATCH_SIZES;
 
 /// Result of CWD for one pipeline.
@@ -54,7 +64,13 @@ impl Default for CwdParams {
 /// sustainable rate is `bz / duty` — usually tighter than the raw batch
 /// curve's `bz / L(bz)`. CWD sizes for the duty-cycled capacity so the
 /// temporal plan is feasible.
-fn instances_needed(env: &SchedEnv, pipeline: usize, model: usize, device: usize, bz: u32) -> u32 {
+pub(crate) fn instances_needed(
+    env: &SchedEnv,
+    pipeline: usize,
+    model: usize,
+    device: usize,
+    bz: u32,
+) -> u32 {
     let dag = &env.pipelines[pipeline];
     let spec = &dag.models[model].spec;
     let class = env.cluster.device(device).class;
@@ -72,71 +88,39 @@ fn instances_needed(env: &SchedEnv, pipeline: usize, model: usize, device: usize
     ((rate / cap.max(1e-9)).ceil() as u32).clamp(1, 16)
 }
 
-/// Remaining GPU memory on a device given config already assigned there.
-fn device_mem_headroom(env: &SchedEnv, device: usize, cfg_all: &[(usize, Vec<StageCfg>)]) -> f64 {
-    let total: f64 = env.cluster.device(device).gpus.iter().map(|g| g.mem_mb).sum();
-    let mut used = 0.0;
-    for (p, cfg) in cfg_all {
-        for (m, c) in cfg.iter().enumerate() {
-            if c.device == device {
-                used += stage_memory_mb(env, *p, m, *c);
-            }
-        }
-    }
-    total - used
-}
-
-/// Total stream-time demand (ms per duty cycle) already committed on a
-/// device across all scheduled pipelines plus the one being built.
-/// CORAL can only reserve `streams × duty` ms per cycle; CWD filters
-/// placements that would blow that budget (the "unfruitful configurations"
-/// Insight-2 filtering removes).
-fn device_stream_time(
-    env: &SchedEnv,
-    device: usize,
-    cfg_all: &[(usize, Vec<StageCfg>)],
-) -> f64 {
-    let class = env.cluster.device(device).class;
-    let mut total = 0.0;
-    for (p, cfg) in cfg_all {
-        let dag = &env.pipelines[*p];
-        for (m, c) in cfg.iter().enumerate() {
-            if c.device == device {
-                let lat = env.profiles.batch_latency(&dag.models[m].spec, class, c.batch);
-                total += lat * c.instances as f64;
-            }
-        }
-    }
-    total
-}
-
-/// Stream-time budget of a device per duty cycle (streams × shortest duty
-/// among pipelines using it), with a safety margin for portion packing.
-fn device_stream_budget(env: &SchedEnv, device: usize, duty_ms: f64) -> f64 {
-    let d = env.cluster.device(device);
-    let streams: usize = d.gpus.iter().map(|g| g.streams).sum();
-    streams as f64 * duty_ms * 0.9
-}
-
 /// Network overhead (bytes/s) of a stage's *input* crossing the link.
-fn input_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
+pub(crate) fn input_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
     let spec = &env.pipelines[pipeline].models[model].spec;
     env.rate(pipeline, model) * spec.input_bytes
 }
 
 /// Network overhead (bytes/s) of a stage's *output* crossing the link.
-fn output_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
+pub(crate) fn output_overhead(env: &SchedEnv, pipeline: usize, model: usize) -> f64 {
     let spec = &env.pipelines[pipeline].models[model].spec;
     env.rate(pipeline, model) * spec.fanout_mean * spec.output_bytes
 }
 
 /// Run CWD for every pipeline; `scheduled[p]` is the per-stage config.
+/// Convenience wrapper over [`cwd_ws`] with a throwaway workspace.
 pub fn cwd(env: &SchedEnv, params: &CwdParams) -> Vec<CwdResult> {
-    let targets: Vec<usize> = (0..env.pipelines.len()).collect();
-    cwd_subset(env, params, &targets, &[])
-        .into_iter()
-        .map(|(_, cfg)| CwdResult { cfg })
-        .collect()
+    let mut ws = PlannerWorkspace::new();
+    let mut out = Vec::new();
+    cwd_ws(env, params, &mut ws, &mut out);
+    out.into_iter().map(|(_, cfg)| CwdResult { cfg }).collect()
+}
+
+/// Full CWD round into a caller-supplied buffer, reusing `ws` scratch.
+pub fn cwd_ws(
+    env: &SchedEnv,
+    params: &CwdParams,
+    ws: &mut PlannerWorkspace,
+    out: &mut Vec<(usize, Vec<StageCfg>)>,
+) {
+    let mut targets = std::mem::take(&mut ws.full_targets);
+    targets.clear();
+    targets.extend(0..env.pipelines.len());
+    cwd_subset_ws(env, params, &targets, &[], ws, out);
+    ws.full_targets = targets;
 }
 
 /// Incremental CWD: re-plan only `targets`, treating `kept` — the
@@ -145,31 +129,57 @@ pub fn cwd(env: &SchedEnv, params: &CwdParams) -> Vec<CwdResult> {
 /// feasibility filters. Returns (pipeline, cfg) pairs for the targets in
 /// the order given. This is the drift-replan entry: drifted pipelines get
 /// fresh workload-aware configs while everything else stays put.
+/// Convenience wrapper over [`cwd_subset_ws`] with a throwaway workspace.
 pub fn cwd_subset(
     env: &SchedEnv,
     params: &CwdParams,
     targets: &[usize],
     kept: &[(usize, Vec<StageCfg>)],
 ) -> Vec<(usize, Vec<StageCfg>)> {
-    let mut scheduled: Vec<(usize, Vec<StageCfg>)> = kept.to_vec();
-    let n_kept = scheduled.len();
+    let mut ws = PlannerWorkspace::new();
+    let mut out = Vec::new();
+    cwd_subset_ws(env, params, targets, kept, &mut ws, &mut out);
+    out
+}
+
+/// Workspace-backed subset CWD. `kept` pipelines fold into the committed
+/// [`DeviceLoads`] once; each target is planned against the aggregates,
+/// then committed in turn (targets see earlier targets as committed load,
+/// exactly like the scheduled-vec the naive planner grows). Rows for the
+/// output come from `ws.row_pool` — return them there when done to keep
+/// steady-state replans allocation-free.
+pub fn cwd_subset_ws(
+    env: &SchedEnv,
+    params: &CwdParams,
+    targets: &[usize],
+    kept: &[(usize, Vec<StageCfg>)],
+    ws: &mut PlannerWorkspace,
+    out: &mut Vec<(usize, Vec<StageCfg>)>,
+) {
+    out.clear();
+    ws.loads.reset(env);
+    for (p, cfg) in kept {
+        ws.loads.commit(env, *p, cfg);
+    }
 
     for &p in targets {
         let dag = &env.pipelines[p];
         let slo_budget = dag.slo_ms * params.slo_fraction;
 
         // ---- lines 3-5: minimal config, all on server, rate-matched ----
-        let mut cfg: Vec<StageCfg> = (0..dag.len())
-            .map(|m| StageCfg {
+        let mut cfg = ws.take_row();
+        for m in 0..dag.len() {
+            cfg.push(StageCfg {
                 device: 0,
                 batch: 1,
                 instances: instances_needed(env, p, m, 0, 1),
-            })
-            .collect();
+            });
+        }
 
         // ---- line 6: sort by burstiness, descending (Insight 1) ----
-        let mut order: Vec<usize> = (0..dag.len()).collect();
-        order.sort_by(|&a, &b| {
+        ws.order.clear();
+        ws.order.extend(0..dag.len());
+        ws.order.sort_by(|&a, &b| {
             env.burstiness(p, b)
                 .partial_cmp(&env.burstiness(p, a))
                 .unwrap()
@@ -183,33 +193,33 @@ pub fn cwd_subset(
             }
         } else {
             // ---- lines 7-17: greedy batch doubling ----
-            explore_batches(env, params, p, &order, slo_budget, &mut cfg);
+            explore_batches(env, params, p, &ws.order, slo_budget, &mut cfg);
         }
 
         // ---- line 18: ToEdge(p[0]) ----
         if !params.server_only {
-            let mut ctx = ToEdgeCtx { env, params, pipeline: p, scheduled: &scheduled };
-            to_edge(&mut ctx, 0, &mut cfg);
+            let ctx = ToEdgeCtx { env, params, pipeline: p, loads: &ws.loads };
+            to_edge(&ctx, &mut ws.downs_pool, 0, &mut cfg);
             // Refinement: re-run batch exploration under the final
             // placement — models that could not batch while the pipeline
             // was (infeasibly) server-bound get their real batch sizes now
             // ("exploration continues until no better configuration is
             // found", line 17).
             if params.static_batch.is_none() {
-                explore_batches(env, params, p, &order, slo_budget, &mut cfg);
+                explore_batches(env, params, p, &ws.order, slo_budget, &mut cfg);
             }
         }
 
-        scheduled.push((p, cfg));
+        // The finished target becomes committed load for the next one.
+        ws.loads.commit(env, p, &cfg);
+        out.push((p, cfg));
     }
-
-    scheduled.split_off(n_kept)
 }
 
 /// Greedy batch-doubling pass (Algorithm 1 lines 7-17). Objective:
 /// effective throughput, tie-broken by GPU cost — batching that frees GPU
 /// time without hurting throughput is adopted (resource efficiency).
-fn explore_batches(
+pub(crate) fn explore_batches(
     env: &SchedEnv,
     params: &CwdParams,
     p: usize,
@@ -255,12 +265,21 @@ struct ToEdgeCtx<'a, 'b> {
     env: &'a SchedEnv<'b>,
     params: &'a CwdParams,
     pipeline: usize,
-    scheduled: &'a [(usize, Vec<StageCfg>)],
+    /// Committed per-device aggregates: kept pipelines plus the targets
+    /// already finished this round.
+    loads: &'a DeviceLoads,
 }
 
 /// DFS move of model `m` (and transitively its downstreams) to the edge
 /// device hosting the pipeline's source (Algorithm 1 lines 21-28).
-fn to_edge(ctx: &mut ToEdgeCtx, m: usize, cfg: &mut Vec<StageCfg>) {
+///
+/// `downs_pool` recycles the per-level downstream sort buffers of the DFS.
+fn to_edge(
+    ctx: &ToEdgeCtx,
+    downs_pool: &mut Vec<Vec<usize>>,
+    m: usize,
+    cfg: &mut Vec<StageCfg>,
+) {
     let env = ctx.env;
     let p = ctx.pipeline;
     let dag = &env.pipelines[p];
@@ -273,14 +292,27 @@ fn to_edge(ctx: &mut ToEdgeCtx, m: usize, cfg: &mut Vec<StageCfg>) {
     // ---- line 22: find the best feasible edge configuration for m ----
     let old = cfg[m];
     // Static-batch ablation pins the edge batch too.
-    let batches: Vec<u32> = match ctx.params.static_batch {
+    let static_one;
+    let batches: &[u32] = match ctx.params.static_batch {
         Some((edge_bz, _, det_bz)) => {
-            vec![if m == 0 { det_bz } else { edge_bz }]
+            static_one = [if m == 0 { det_bz } else { edge_bz }];
+            &static_one
         }
-        None => BATCH_SIZES.to_vec(),
+        None => &BATCH_SIZES,
     };
+    // The committed-load context is loop-invariant: whenever the naive
+    // planner ran these checks, cfg[m] held `old` (candidates are applied
+    // only for the SLO estimate and reverted), so the fold over committed
+    // pipelines + the in-progress cfg is the same for every candidate.
+    // Continue the committed fold once instead of rescanning per batch.
+    let duty = dag.slo_ms * ctx.params.slo_fraction;
+    let class = env.cluster.device(edge_dev).class;
+    let headroom = ctx.loads.mem_headroom(env, edge_dev, p, cfg);
+    let committed_time = ctx.loads.stream_time(env, edge_dev, p, cfg);
+    let budget = ctx.loads.stream_budget(edge_dev, duty);
+
     let mut best: Option<(StageCfg, f64, f64)> = None; // (cfg, thrpt, cost)
-    for &bz in &batches {
+    for &bz in batches {
         let cand = StageCfg {
             device: edge_dev,
             batch: bz,
@@ -288,22 +320,16 @@ fn to_edge(ctx: &mut ToEdgeCtx, m: usize, cfg: &mut Vec<StageCfg>) {
         };
         // Edge memory feasibility (coarse Eq. 4 check; CORAL is exact).
         let mem = stage_memory_mb(env, p, m, cand);
-        let mut all = ctx.scheduled.to_vec();
-        all.push((p, cfg.clone()));
-        if mem > device_mem_headroom(env, edge_dev, &all) {
+        if mem > headroom {
             continue;
         }
         // Stream-time feasibility: the device must have enough reservable
         // portion time per duty cycle for CORAL to schedule everything.
-        let duty = dag.slo_ms * ctx.params.slo_fraction;
-        let class = env.cluster.device(edge_dev).class;
         let cand_time = env
             .profiles
             .batch_latency(&dag.models[m].spec, class, cand.batch)
             * cand.instances as f64;
-        if device_stream_time(env, edge_dev, &all) + cand_time
-            > device_stream_budget(env, edge_dev, duty)
-        {
+        if committed_time + cand_time > budget {
             continue;
         }
         cfg[m] = cand;
@@ -328,13 +354,16 @@ fn to_edge(ctx: &mut ToEdgeCtx, m: usize, cfg: &mut Vec<StageCfg>) {
     cfg[m] = cand;
 
     // ---- lines 25-26: recurse downstream, least bursty first (Insight 1)
-    let mut downs = dag.models[m].downstream.clone();
+    let mut downs = downs_pool.pop().unwrap_or_default();
+    downs.clear();
+    downs.extend_from_slice(&dag.models[m].downstream);
     downs.sort_by(|&a, &b| {
         env.burstiness(p, a).partial_cmp(&env.burstiness(p, b)).unwrap()
     });
-    for d in downs {
-        to_edge(ctx, d, cfg);
+    for i in 0..downs.len() {
+        to_edge(ctx, downs_pool, downs[i], cfg);
     }
+    downs_pool.push(downs);
 
     // ---- line 27-28: IO-ratio test on the return path (Insight 2) ----
     let in_oh = input_overhead(env, p, m);
@@ -513,6 +542,23 @@ mod tests {
         for c in &subset[0].1 {
             assert!(BATCH_SIZES.contains(&c.batch));
             assert!(c.instances >= 1);
+        }
+    }
+
+    /// A single workspace reused across rounds (and across different
+    /// environments) must not leak state between them.
+    #[test]
+    fn workspace_reuse_matches_fresh_workspace() {
+        let f = fixture(4);
+        let params = CwdParams::default();
+        let mut shared = PlannerWorkspace::new();
+        for &bw in &[3.0, 100.0, 10_000.0, 25.0] {
+            let e = env(&f, bw);
+            let mut reused = Vec::new();
+            cwd_ws(&e, &params, &mut shared, &mut reused);
+            let mut fresh = Vec::new();
+            cwd_ws(&e, &params, &mut PlannerWorkspace::new(), &mut fresh);
+            assert_eq!(reused, fresh, "bw {bw}: reused workspace diverged");
         }
     }
 }

@@ -131,29 +131,52 @@ impl PlanEnvelope {
         obs: &[Vec<ModelObs>],
         bw: &[f64],
     ) -> PlanEnvelope {
-        let planned_rate: Vec<Vec<f64>> = obs
-            .iter()
-            .map(|row| row.iter().map(|o| o.rate_qps).collect())
-            .collect();
-        let mut required_bw = vec![0.0; bw.len()];
-        let mut watched: Vec<Vec<usize>> = Vec::with_capacity(pipelines.len());
+        let mut e = PlanEnvelope::default();
+        e.capture_into(plan, pipelines, obs, bw);
+        e
+    }
+
+    /// Fill this envelope from `plan` in place — the buffer-reusing twin
+    /// of [`Self::capture`]. The engine recycles one envelope across
+    /// replans (via [`DriftDetector::rearm`]) so steady-state drift
+    /// rounds stop allocating envelope rows.
+    pub fn capture_into(
+        &mut self,
+        plan: &Plan,
+        pipelines: &[PipelineDag],
+        obs: &[Vec<ModelObs>],
+        bw: &[f64],
+    ) {
+        self.planned_rate.resize_with(obs.len(), Vec::new);
+        for (row, o) in self.planned_rate.iter_mut().zip(obs) {
+            row.clear();
+            row.extend(o.iter().map(|o| o.rate_qps));
+        }
+        self.planned_bw.clear();
+        self.planned_bw.extend_from_slice(bw);
+        self.required_bw.clear();
+        self.required_bw.resize(bw.len(), 0.0);
+        self.watched.resize_with(pipelines.len(), Vec::new);
+        // (from, to, model) hop scratch, hoisted out of the pipeline loop.
+        let mut hops: Vec<(usize, usize, usize)> = Vec::new();
         for (p, dag) in pipelines.iter().enumerate() {
             let device_of = |m: usize| {
                 plan.assignment(p, m).map(|a| a.cfg.device).unwrap_or(0)
             };
-            let mut links = Vec::new();
+            let links = &mut self.watched[p];
+            links.clear();
             if dag.source_device != 0 {
                 links.push(dag.source_device);
             }
             // Source -> detector hop.
-            let mut hops: Vec<(usize, usize, usize)> = Vec::new(); // (from, to, model)
+            hops.clear();
             hops.push((dag.source_device, device_of(0), 0));
             for m in 0..dag.len() {
                 if let Some(u) = dag.upstream(m) {
                     hops.push((device_of(u), device_of(m), m));
                 }
             }
-            for (from, to, m) in hops {
+            for &(from, to, m) in &hops {
                 if from == to {
                     continue;
                 }
@@ -166,7 +189,7 @@ impl PlanEnvelope {
                     .map(|o| o.rate_qps)
                     .unwrap_or(0.0);
                 let bytes = dag.models[m].spec.input_bytes;
-                if let Some(slot) = required_bw.get_mut(edge) {
+                if let Some(slot) = self.required_bw.get_mut(edge) {
                     *slot += rate * bytes * 8.0 / 1e6;
                 }
                 if !links.contains(&edge) {
@@ -174,13 +197,6 @@ impl PlanEnvelope {
                 }
             }
             links.sort_unstable();
-            watched.push(links);
-        }
-        PlanEnvelope {
-            planned_rate,
-            planned_bw: bw.to_vec(),
-            required_bw,
-            watched,
         }
     }
 
@@ -249,6 +265,22 @@ impl DriftDetector {
     /// Install the envelope of the plan that just went live.
     pub fn arm(&mut self, envelope: PlanEnvelope) {
         self.envelope = Some(envelope);
+    }
+
+    /// Capture-and-arm in place: recompute the armed envelope for a
+    /// just-installed plan, reusing the previous envelope's buffers.
+    /// Equivalent to `arm(PlanEnvelope::capture(..))` without the
+    /// allocations.
+    pub fn rearm(
+        &mut self,
+        plan: &Plan,
+        pipelines: &[PipelineDag],
+        obs: &[Vec<ModelObs>],
+        bw: &[f64],
+    ) {
+        self.envelope
+            .get_or_insert_with(PlanEnvelope::default)
+            .capture_into(plan, pipelines, obs, bw);
     }
 
     /// Check live observations; returns the sorted drifted pipeline ids
@@ -389,6 +421,44 @@ mod tests {
         // Still drifted, but inside the cooldown window.
         assert!(d.check(10_000.0, &obs, &bw).is_empty());
         assert_eq!(d.check(25_000.0, &obs, &bw), vec![0]);
+    }
+
+    #[test]
+    fn capture_into_on_a_dirty_envelope_matches_fresh_capture() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let plan = Controller::new(SchedulerKind::OctopInf).plan(&env);
+        let fresh = PlanEnvelope::capture(&plan, &pl, &env.obs, &env.bw_mbps);
+        // Dirty a reused envelope with a different plan/telemetry first.
+        let mut bw2 = vec![80.0; cl.devices.len()];
+        bw2[1] = 0.0;
+        let env2 = SchedEnv::bootstrap(&cl, &pf, &pl, bw2);
+        let plan2 = Controller::new(SchedulerKind::OctopInf).plan(&env2);
+        let mut reused =
+            PlanEnvelope::capture(&plan2, &pl, &env2.obs, &env2.bw_mbps);
+        reused.capture_into(&plan, &pl, &env.obs, &env.bw_mbps);
+        // Identical drift verdicts on perturbed telemetry: a surge, a
+        // blackout, and a calm reading.
+        let params = DriftParams::default();
+        let mut surge = env.obs.clone();
+        for o in surge[1].iter_mut() {
+            o.rate_qps *= 3.0;
+        }
+        let mut dark = env.bw_mbps.clone();
+        dark[1] = 0.0;
+        for (obs, bw) in [
+            (&env.obs, &env.bw_mbps),
+            (&surge, &env.bw_mbps),
+            (&env.obs, &dark),
+        ] {
+            let a = fresh.drifted(obs, bw, &params);
+            let b = reused.drifted(obs, bw, &params);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.pipeline, y.pipeline);
+                assert_eq!(x.kind, y.kind);
+            }
+        }
     }
 
     #[test]

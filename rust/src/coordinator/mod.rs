@@ -3,6 +3,22 @@
 //! horizontal autoscaler, and the controller loop that drives them —
 //! plus the three SOTA baselines (§IV-A4) implemented on the same
 //! substrate, and a brute-force ILP reference for tiny instances.
+//!
+//! # Planner workspace
+//!
+//! The control plane is incremental: the [`Controller`] owns a
+//! [`PlannerWorkspace`] and threads it through every `*_ws` entry point
+//! (`cwd::cwd_ws`, `cwd::cwd_subset_ws`, `coral::coral_ws`,
+//! `coral::coral_repair_ws`). The workspace carries per-device running
+//! aggregates (so CWD's per-candidate feasibility checks are O(stages of
+//! the current pipeline) instead of rescanning every scheduled pipeline),
+//! a per-device GPU index for CORAL's placement scans and O(1) plan
+//! replay, and recycled scratch buffers so steady-state replans allocate
+//! nothing beyond the returned `Plan`. The contract: reusing one
+//! workspace across rounds yields plans **bit-identical** to fresh
+//! throwaway workspaces — and to the retained naive implementations in
+//! [`reference`] — enforced by `rust/tests/planner.rs` and the ci.sh
+//! determinism gates.
 
 pub mod autoscaler;
 pub mod baselines;
@@ -12,8 +28,10 @@ pub mod cwd;
 pub mod drift;
 pub mod estimator;
 pub mod ilp;
+pub mod reference;
 pub mod stream;
 pub mod types;
+pub mod workspace;
 
 pub use controller::Controller;
 pub use drift::{DriftDetector, DriftParams, PlanEnvelope, ReplanMode};
@@ -21,3 +39,4 @@ pub use types::{
     Assignment, GpuBinding, GpuId, ModelObs, Plan, SchedEnv, Scheduler,
     SchedulerKind, StageCfg, TemporalSlot,
 };
+pub use workspace::PlannerWorkspace;

@@ -1,0 +1,522 @@
+//! Retained naive reference planner.
+//!
+//! Verbatim copies of the CWD/CORAL implementations as they stood before
+//! the incremental `PlannerWorkspace` rework: per-candidate feasibility
+//! checks rebuild the full scheduled-config vec and rescan every placed
+//! pipeline; CORAL's placement linearly scans all GPUs and recomputes
+//! free-portion lists per instance. Deliberately kept O(P²·B·S) — the
+//! point of this module is to be the *oracle*: the plan-identity proptest
+//! (`rust/tests/planner.rs`) and `benches/planner.rs` run both planners
+//! over the same environments and require bit-identical plans. Any change
+//! to the optimized planner's arithmetic, iteration order, or tie-breaks
+//! shows up as a bit diff against this module.
+//!
+//! Pure per-pipeline helpers with no aggregate state (`instances_needed`,
+//! `explore_batches`, the estimator) are shared with the live planner —
+//! they were not restructured, and sharing them keeps the oracle honest
+//! about what actually changed.
+
+use std::collections::HashMap;
+
+use super::coral::build_gpu_state;
+use super::cwd::{explore_batches, instances_needed, input_overhead, output_overhead};
+use super::cwd::{CwdParams, CwdResult};
+use super::estimator::{est_gpu_cost, est_latency, est_throughput, stage_memory_mb};
+use super::stream::{GpuStreams, Portion};
+use super::types::{
+    Assignment, GpuBinding, GpuId, Plan, SchedEnv, StageCfg, TemporalSlot,
+};
+use crate::profiles::BATCH_SIZES;
+use crate::Ms;
+
+/// Remaining GPU memory on a device given config already assigned there.
+pub(crate) fn device_mem_headroom(
+    env: &SchedEnv,
+    device: usize,
+    cfg_all: &[(usize, Vec<StageCfg>)],
+) -> f64 {
+    let total: f64 = env.cluster.device(device).gpus.iter().map(|g| g.mem_mb).sum();
+    let mut used = 0.0;
+    for (p, cfg) in cfg_all {
+        for (m, c) in cfg.iter().enumerate() {
+            if c.device == device {
+                used += stage_memory_mb(env, *p, m, *c);
+            }
+        }
+    }
+    total - used
+}
+
+/// Total stream-time demand (ms per duty cycle) already committed on a
+/// device across all scheduled pipelines plus the one being built.
+pub(crate) fn device_stream_time(
+    env: &SchedEnv,
+    device: usize,
+    cfg_all: &[(usize, Vec<StageCfg>)],
+) -> f64 {
+    let class = env.cluster.device(device).class;
+    let mut total = 0.0;
+    for (p, cfg) in cfg_all {
+        let dag = &env.pipelines[*p];
+        for (m, c) in cfg.iter().enumerate() {
+            if c.device == device {
+                let lat = env.profiles.batch_latency(&dag.models[m].spec, class, c.batch);
+                total += lat * c.instances as f64;
+            }
+        }
+    }
+    total
+}
+
+/// Stream-time budget of a device per duty cycle.
+pub(crate) fn device_stream_budget(env: &SchedEnv, device: usize, duty_ms: f64) -> f64 {
+    let d = env.cluster.device(device);
+    let streams: usize = d.gpus.iter().map(|g| g.streams).sum();
+    streams as f64 * duty_ms * 0.9
+}
+
+/// Naive full CWD (reference twin of [`super::cwd::cwd`]).
+pub fn cwd_reference(env: &SchedEnv, params: &CwdParams) -> Vec<CwdResult> {
+    let targets: Vec<usize> = (0..env.pipelines.len()).collect();
+    cwd_subset_reference(env, params, &targets, &[])
+        .into_iter()
+        .map(|(_, cfg)| CwdResult { cfg })
+        .collect()
+}
+
+/// Naive incremental CWD (reference twin of [`super::cwd::cwd_subset`]).
+pub fn cwd_subset_reference(
+    env: &SchedEnv,
+    params: &CwdParams,
+    targets: &[usize],
+    kept: &[(usize, Vec<StageCfg>)],
+) -> Vec<(usize, Vec<StageCfg>)> {
+    let mut scheduled: Vec<(usize, Vec<StageCfg>)> = kept.to_vec();
+    let n_kept = scheduled.len();
+
+    for &p in targets {
+        let dag = &env.pipelines[p];
+        let slo_budget = dag.slo_ms * params.slo_fraction;
+
+        let mut cfg: Vec<StageCfg> = (0..dag.len())
+            .map(|m| StageCfg {
+                device: 0,
+                batch: 1,
+                instances: instances_needed(env, p, m, 0, 1),
+            })
+            .collect();
+
+        let mut order: Vec<usize> = (0..dag.len()).collect();
+        order.sort_by(|&a, &b| {
+            env.burstiness(p, b)
+                .partial_cmp(&env.burstiness(p, a))
+                .unwrap()
+        });
+
+        if let Some((_, server_bz, det_bz)) = params.static_batch {
+            for (m, c) in cfg.iter_mut().enumerate() {
+                c.batch = if m == 0 { det_bz } else { server_bz };
+                c.instances = instances_needed(env, p, m, 0, c.batch);
+            }
+        } else {
+            explore_batches(env, params, p, &order, slo_budget, &mut cfg);
+        }
+
+        if !params.server_only {
+            let mut ctx = ToEdgeCtx { env, params, pipeline: p, scheduled: &scheduled };
+            to_edge(&mut ctx, 0, &mut cfg);
+            if params.static_batch.is_none() {
+                explore_batches(env, params, p, &order, slo_budget, &mut cfg);
+            }
+        }
+
+        scheduled.push((p, cfg));
+    }
+
+    scheduled.split_off(n_kept)
+}
+
+struct ToEdgeCtx<'a, 'b> {
+    env: &'a SchedEnv<'b>,
+    params: &'a CwdParams,
+    pipeline: usize,
+    scheduled: &'a [(usize, Vec<StageCfg>)],
+}
+
+fn to_edge(ctx: &mut ToEdgeCtx, m: usize, cfg: &mut Vec<StageCfg>) {
+    let env = ctx.env;
+    let p = ctx.pipeline;
+    let dag = &env.pipelines[p];
+    let edge_dev = dag.source_device;
+    if edge_dev == 0 {
+        return;
+    }
+    let slo_budget = dag.slo_ms * ctx.params.slo_fraction;
+
+    let old = cfg[m];
+    let batches: Vec<u32> = match ctx.params.static_batch {
+        Some((edge_bz, _, det_bz)) => {
+            vec![if m == 0 { det_bz } else { edge_bz }]
+        }
+        None => BATCH_SIZES.to_vec(),
+    };
+    let mut best: Option<(StageCfg, f64, f64)> = None;
+    for &bz in &batches {
+        let cand = StageCfg {
+            device: edge_dev,
+            batch: bz,
+            instances: instances_needed(env, p, m, edge_dev, bz),
+        };
+        let mem = stage_memory_mb(env, p, m, cand);
+        let mut all = ctx.scheduled.to_vec();
+        all.push((p, cfg.clone()));
+        if mem > device_mem_headroom(env, edge_dev, &all) {
+            continue;
+        }
+        let duty = dag.slo_ms * ctx.params.slo_fraction;
+        let class = env.cluster.device(edge_dev).class;
+        let cand_time = env
+            .profiles
+            .batch_latency(&dag.models[m].spec, class, cand.batch)
+            * cand.instances as f64;
+        if device_stream_time(env, edge_dev, &all) + cand_time
+            > device_stream_budget(env, edge_dev, duty)
+        {
+            continue;
+        }
+        cfg[m] = cand;
+        if est_latency(env, p, cfg) <= slo_budget {
+            let thrpt = est_throughput(env, p, cfg);
+            let cost = est_gpu_cost(env, p, cfg);
+            let better = match &best {
+                None => true,
+                Some((_, bt, bc)) => {
+                    thrpt > bt + 1e-9 || (thrpt >= bt - 1e-9 && cost < bc - 1e-9)
+                }
+            };
+            if better {
+                best = Some((cand, thrpt, cost));
+            }
+        }
+        cfg[m] = old;
+    }
+    let Some((cand, _, _)) = best else {
+        return;
+    };
+    cfg[m] = cand;
+
+    let mut downs = dag.models[m].downstream.clone();
+    downs.sort_by(|&a, &b| {
+        env.burstiness(p, a).partial_cmp(&env.burstiness(p, b)).unwrap()
+    });
+    for d in downs {
+        to_edge(ctx, d, cfg);
+    }
+
+    let in_oh = input_overhead(env, p, m);
+    let out_oh = output_overhead(env, p, m);
+    let downstreams_on_edge = dag.models[m]
+        .downstream
+        .iter()
+        .any(|&d| cfg[d].device == edge_dev);
+    if in_oh * ctx.env.alpha < out_oh && !downstreams_on_edge {
+        cfg[m] = old;
+    }
+}
+
+/// Naive CORAL (reference twin of [`super::coral::coral`]).
+pub fn coral_reference(env: &SchedEnv, cfgs: &[Vec<StageCfg>]) -> Plan {
+    let mut gpus = build_gpu_state(env);
+    let work: Vec<(usize, &[StageCfg])> =
+        cfgs.iter().enumerate().map(|(p, c)| (p, c.as_slice())).collect();
+    let (assignments, unplaced) = place_pipelines(env, &mut gpus, &work);
+    Plan { assignments, unplaced }
+}
+
+fn place_pipelines(
+    env: &SchedEnv,
+    gpus: &mut [GpuStreams],
+    work: &[(usize, &[StageCfg])],
+) -> (Vec<Assignment>, usize) {
+    let mut stage_end: HashMap<(usize, usize), Ms> = HashMap::new();
+
+    let mut assignments: Vec<Assignment> = work
+        .iter()
+        .flat_map(|&(p, cfg)| {
+            cfg.iter().enumerate().map(move |(m, &c)| Assignment {
+                pipeline: p,
+                model: m,
+                cfg: c,
+                bindings: Vec::new(),
+            })
+        })
+        .collect();
+    let mut unplaced = 0usize;
+
+    let max_instances = work
+        .iter()
+        .flat_map(|(_, c)| c.iter())
+        .map(|c| c.instances)
+        .max()
+        .unwrap_or(0);
+    for instance in 0..max_instances {
+        for &(p, cfg) in work {
+            let dag = &env.pipelines[p];
+            let duty = dag.slo_ms / 2.0;
+            for m in dag.topo_order() {
+                let c = cfg[m];
+                if instance >= c.instances {
+                    continue;
+                }
+                let spec = &dag.models[m].spec;
+                let class = env.cluster.device(c.device).class;
+                let dur = env.profiles.batch_latency(spec, class, c.batch);
+                let earliest = dag
+                    .upstream(m)
+                    .and_then(|u| stage_end.get(&(p, u)).copied())
+                    .unwrap_or(0.0);
+                let weight = spec.weight_mem_mb;
+                let inter = spec.inter_mem_mb * c.batch as f64;
+                let width = spec.util_width;
+
+                let slot = place_instance(
+                    gpus, c.device, earliest, dur, duty, weight, inter, width,
+                    (p, m, instance),
+                );
+                let a = assignments
+                    .iter_mut()
+                    .find(|a| a.pipeline == p && a.model == m)
+                    .unwrap();
+                match slot {
+                    Some((gpu, t)) => {
+                        stage_end
+                            .entry((p, m))
+                            .and_modify(|e| *e = e.max(t.start_ms + dur))
+                            .or_insert(t.start_ms + dur);
+                        a.bindings.push(GpuBinding {
+                            gpu,
+                            width,
+                            temporal: Some(t),
+                        });
+                    }
+                    None => {
+                        unplaced += 1;
+                        let gpu = least_loaded_gpu(gpus, c.device);
+                        if let Some(g) =
+                            gpus.iter_mut().find(|g| g.gpu == gpu)
+                        {
+                            g.weight_mb += weight;
+                        }
+                        a.bindings.push(GpuBinding {
+                            gpu,
+                            width,
+                            temporal: None,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    (assignments, unplaced)
+}
+
+/// Naive CORAL repair (reference twin of [`super::coral::coral_repair`]).
+pub fn coral_repair_reference(
+    env: &SchedEnv,
+    old: &Plan,
+    new_cfgs: &[(usize, Vec<StageCfg>)],
+) -> Plan {
+    let mut gpus = build_gpu_state(env);
+    let drifted: Vec<usize> = new_cfgs.iter().map(|&(p, _)| p).collect();
+    let is_drifted = |p: usize| drifted.contains(&p);
+
+    for a in &old.assignments {
+        let spec = &env.pipelines[a.pipeline].models[a.model].spec;
+        for (i, b) in a.bindings.iter().enumerate() {
+            let Some(g) = gpus.iter_mut().find(|g| g.gpu == b.gpu) else {
+                continue;
+            };
+            g.weight_mb += spec.weight_mem_mb;
+            let Some(t) = b.temporal else { continue };
+            if t.stream >= g.streams.len() {
+                continue;
+            }
+            if g.streams[t.stream].duty_cycle_ms <= 0.0 {
+                g.streams[t.stream].duty_cycle_ms = t.duty_cycle_ms;
+            }
+            g.streams[t.stream].insert(Portion {
+                start_ms: t.start_ms,
+                end_ms: t.start_ms + t.duration_ms,
+                width: b.width,
+                inter_mb: spec.inter_mem_mb * a.cfg.batch as f64,
+                owner: (a.pipeline, a.model, i as u32),
+            });
+        }
+    }
+
+    for &p in &drifted {
+        for g in gpus.iter_mut() {
+            g.release_pipeline(p, &|model| {
+                env.pipelines[p].models[model].spec.weight_mem_mb
+            });
+        }
+    }
+    for a in old.assignments.iter().filter(|a| is_drifted(a.pipeline)) {
+        let spec = &env.pipelines[a.pipeline].models[a.model].spec;
+        for b in a.bindings.iter().filter(|b| b.temporal.is_none()) {
+            if let Some(g) = gpus.iter_mut().find(|g| g.gpu == b.gpu) {
+                g.weight_mb = (g.weight_mb - spec.weight_mem_mb).max(0.0);
+            }
+        }
+    }
+
+    let mut assignments: Vec<Assignment> = old
+        .assignments
+        .iter()
+        .filter(|a| !is_drifted(a.pipeline))
+        .cloned()
+        .collect();
+    let kept_unplaced: usize = assignments
+        .iter()
+        .flat_map(|a| a.bindings.iter())
+        .filter(|b| b.temporal.is_none())
+        .count();
+
+    let work: Vec<(usize, &[StageCfg])> =
+        new_cfgs.iter().map(|(p, c)| (*p, c.as_slice())).collect();
+    let (mut repaired, new_unplaced) = place_pipelines(env, &mut gpus, &work);
+    assignments.append(&mut repaired);
+    assignments.sort_by_key(|a| (a.pipeline, a.model));
+    Plan { assignments, unplaced: kept_unplaced + new_unplaced }
+}
+
+fn least_loaded_gpu(gpus: &[GpuStreams], device: usize) -> GpuId {
+    gpus.iter()
+        .filter(|g| g.gpu.device == device)
+        .min_by(|a, b| {
+            (a.weight_mb + a.inter_mb())
+                .partial_cmp(&(b.weight_mb + b.inter_mb()))
+                .unwrap()
+        })
+        .map(|g| g.gpu)
+        .unwrap_or(GpuId { device, gpu: 0 })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn place_instance(
+    gpus: &mut [GpuStreams],
+    device: usize,
+    earliest: Ms,
+    dur: Ms,
+    duty: Ms,
+    weight_mb: f64,
+    inter_mb: f64,
+    width: f64,
+    owner: (usize, usize, u32),
+) -> Option<(GpuId, TemporalSlot)> {
+    let mut best: Option<(usize, usize, Ms, Ms)> = None;
+    for (gi, g) in gpus.iter().enumerate() {
+        if g.gpu.device != device {
+            continue;
+        }
+        for s in &g.streams {
+            if s.duty_cycle_ms > 0.0 && s.duty_cycle_ms > duty + 1e-9 {
+                continue;
+            }
+            if !g.admits(s.index, weight_mb, inter_mb, width) {
+                continue;
+            }
+            let horizon = if s.duty_cycle_ms > 0.0 { s.duty_cycle_ms } else { duty };
+            for f in s.free_portions(horizon) {
+                if f.end_ms > horizon + 1e-9 {
+                    continue;
+                }
+                if let Some(start) = f.fit(earliest, dur) {
+                    let slack = f.len() - dur;
+                    let better = match best {
+                        None => true,
+                        Some((_, _, bstart, bslack)) => {
+                            slack < bslack - 1e-9
+                                || (slack - bslack).abs() <= 1e-9 && start < bstart
+                        }
+                    };
+                    if better {
+                        best = Some((gi, s.index, start, slack));
+                    }
+                }
+            }
+        }
+    }
+    let (gi, si, start, _) = best?;
+    let g = &mut gpus[gi];
+    if g.streams[si].duty_cycle_ms <= 0.0 {
+        g.streams[si].duty_cycle_ms = duty;
+    }
+    g.weight_mb += weight_mb;
+    g.streams[si].insert(Portion {
+        start_ms: start,
+        end_ms: start + dur,
+        width,
+        inter_mb,
+        owner,
+    });
+    Some((
+        g.gpu,
+        TemporalSlot {
+            stream: si,
+            start_ms: start,
+            duration_ms: dur,
+            duty_cycle_ms: g.streams[si].duty_cycle_ms,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::coordinator::{coral, cwd};
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    /// The reference and the workspace-backed planner must agree bit for
+    /// bit on the standard fixture (the proptest in rust/tests/planner.rs
+    /// covers fuzzed shapes; this is the fast in-tree smoke).
+    #[test]
+    fn reference_matches_optimized_on_fixture() {
+        let cl = Cluster::paper_testbed();
+        let pf = ProfileStore::analytic();
+        let pl: Vec<_> = standard_pipelines(4)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![40.0; cl.devices.len()]);
+        let params = CwdParams::default();
+
+        let fast: Vec<Vec<StageCfg>> =
+            cwd::cwd(&env, &params).into_iter().map(|r| r.cfg).collect();
+        let naive: Vec<Vec<StageCfg>> =
+            cwd_reference(&env, &params).into_iter().map(|r| r.cfg).collect();
+        assert_eq!(fast, naive, "CWD diverged from reference");
+
+        let plan_fast = coral::coral(&env, &fast);
+        let plan_naive = coral_reference(&env, &naive);
+        assert!(plan_fast.bit_eq(&plan_naive), "CORAL diverged from reference");
+
+        // Subset + repair path: replan pipeline 1 against the rest.
+        let kept: Vec<(usize, Vec<StageCfg>)> = [0usize, 2, 3]
+            .iter()
+            .map(|&p| (p, fast[p].clone()))
+            .collect();
+        let sub_fast = cwd::cwd_subset(&env, &params, &[1], &kept);
+        let sub_naive = cwd_subset_reference(&env, &params, &[1], &kept);
+        assert_eq!(sub_fast, sub_naive, "cwd_subset diverged from reference");
+        let rep_fast = coral::coral_repair(&env, &plan_fast, &sub_fast);
+        let rep_naive = coral_repair_reference(&env, &plan_naive, &sub_naive);
+        assert!(rep_fast.bit_eq(&rep_naive), "coral_repair diverged");
+    }
+}

@@ -63,6 +63,10 @@ pub struct Stream {
     pub index: usize,
     /// 0 until the first instance claims the stream (line 19-20).
     pub duty_cycle_ms: Ms,
+    /// Invariant: sorted by `start_ms`, equal starts in insertion order
+    /// ([`Stream::insert`] maintains this; `release_pipeline` preserves
+    /// it). Placement walks this directly as the free-gap cursor, so
+    /// mutate portions only through the methods here.
     pub portions: Vec<Portion>,
     /// Peak concurrent width of the stream (for the GPU util sum, Eq. 5).
     pub max_width: f64,
@@ -83,13 +87,14 @@ impl Stream {
     }
 
     /// Free intervals within the horizon (duty cycle if set, else `horizon`).
+    /// Portions are kept sorted by start, so this is a single cursor walk
+    /// (CORAL's hot path inlines the same walk without materializing the
+    /// list — see `coordinator::coral::place_instance`).
     pub fn free_portions(&self, horizon: Ms) -> Vec<FreePortion> {
         let end = if self.duty_cycle_ms > 0.0 { self.duty_cycle_ms } else { horizon };
-        let mut sorted: Vec<&Portion> = self.portions.iter().collect();
-        sorted.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
         let mut free = Vec::new();
         let mut cursor = 0.0;
-        for p in sorted {
+        for p in &self.portions {
             if p.start_ms > cursor + 1e-9 {
                 free.push(FreePortion {
                     gpu: self.gpu,
@@ -111,10 +116,16 @@ impl Stream {
         free
     }
 
-    /// Insert a portion; panics if it overlaps an existing one (scheduler
-    /// bug — CORAL must only place into free portions).
+    /// Insert a portion at its sorted position; panics if it overlaps an
+    /// existing one (scheduler bug — CORAL must only place into free
+    /// portions). Equal starts land *after* their peers, so the sequence
+    /// matches what a stable sort of insertion order would produce.
+    /// Checking only the two neighbors suffices: existing portions are
+    /// pairwise disjoint with positive durations, so any overlap with a
+    /// farther portion implies one with the adjacent portion first.
     pub fn insert(&mut self, p: Portion) {
-        for q in &self.portions {
+        let i = self.portions.partition_point(|q| q.start_ms <= p.start_ms);
+        for q in self.portions[..i].last().into_iter().chain(self.portions.get(i)) {
             assert!(
                 !p.overlaps(q),
                 "portion overlap on {:?}/{}: {:?} vs {:?}",
@@ -126,7 +137,18 @@ impl Stream {
         }
         self.max_width = self.max_width.max(p.width);
         self.max_inter_mb = self.max_inter_mb.max(p.inter_mb);
-        self.portions.push(p);
+        self.portions.insert(i, p);
+    }
+
+    /// Reset to the just-constructed empty state, keeping the portion
+    /// buffer's capacity (workspace recycling across planning rounds).
+    pub fn reset(&mut self, gpu: GpuId, index: usize) {
+        self.gpu = gpu;
+        self.index = index;
+        self.duty_cycle_ms = 0.0;
+        self.portions.clear();
+        self.max_width = 0.0;
+        self.max_inter_mb = 0.0;
     }
 
     /// Release every portion owned by `pipeline` back into free stream
@@ -184,6 +206,25 @@ impl GpuStreams {
             util_cap,
             streams: (0..n_streams).map(|i| Stream::new(gpu, i)).collect(),
             weight_mb: 0.0,
+        }
+    }
+
+    /// Reset to freshly-built empty streams, recycling every stream's
+    /// portion buffer. The per-call `inter_mb`/`util` folds stay as folds
+    /// on purpose: caching running sums would re-associate the float
+    /// additions and break bit-identity with the naive planner.
+    pub fn reset(&mut self, gpu: GpuId, mem_mb: f64, util_cap: f64, n_streams: usize) {
+        self.gpu = gpu;
+        self.mem_mb = mem_mb;
+        self.util_cap = util_cap;
+        self.weight_mb = 0.0;
+        self.streams.truncate(n_streams);
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            s.reset(gpu, i);
+        }
+        while self.streams.len() < n_streams {
+            let i = self.streams.len();
+            self.streams.push(Stream::new(gpu, i));
         }
     }
 
@@ -347,6 +388,57 @@ mod tests {
         assert_eq!(s.duty_cycle_ms, 0.0);
         assert_eq!(s.max_width, 0.0);
         assert_eq!(s.max_inter_mb, 0.0);
+    }
+
+    #[test]
+    fn insert_keeps_portions_sorted() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        s.insert(portion(50.0, 60.0));
+        s.insert(portion(10.0, 30.0));
+        s.insert(portion(70.0, 80.0));
+        s.insert(portion(35.0, 45.0));
+        let starts: Vec<f64> = s.portions.iter().map(|p| p.start_ms).collect();
+        assert_eq!(starts, vec![10.0, 35.0, 50.0, 70.0]);
+        // Out-of-order inserts still yield in-order free gaps.
+        let free = s.free_portions(1000.0);
+        assert_eq!((free[0].start_ms, free[0].end_ms), (0.0, 10.0));
+        assert_eq!((free[1].start_ms, free[1].end_ms), (30.0, 35.0));
+        assert_eq!(free.last().map(|f| f.end_ms), Some(100.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn sorted_insert_still_catches_overlap_with_predecessor() {
+        let mut s = Stream::new(gpu(), 0);
+        s.duty_cycle_ms = 100.0;
+        s.insert(portion(10.0, 40.0));
+        s.insert(portion(20.0, 30.0)); // contained in predecessor
+    }
+
+    #[test]
+    fn reset_recycles_to_empty_state() {
+        let mut g = GpuStreams::new(gpu(), 100.0, 1.0, 3);
+        g.weight_mb = 30.0;
+        g.streams[1].duty_cycle_ms = 100.0;
+        g.streams[1].insert(owned(0.0, 10.0, 0, 0.4, 5.0));
+        let other = GpuId { device: 2, gpu: 0 };
+        g.reset(other, 64.0, 0.9, 2);
+        assert_eq!(g.gpu, other);
+        assert_eq!(g.streams.len(), 2);
+        assert_eq!(g.weight_mb, 0.0);
+        for (i, s) in g.streams.iter().enumerate() {
+            assert_eq!(s.gpu, other);
+            assert_eq!(s.index, i);
+            assert!(s.portions.is_empty());
+            assert_eq!(s.duty_cycle_ms, 0.0);
+            assert_eq!(s.max_width, 0.0);
+            assert_eq!(s.max_inter_mb, 0.0);
+        }
+        // Growing back re-adds streams with correct indices.
+        g.reset(gpu(), 100.0, 1.0, 4);
+        assert_eq!(g.streams.len(), 4);
+        assert_eq!(g.streams[3].index, 3);
     }
 
     #[test]

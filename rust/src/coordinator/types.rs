@@ -90,6 +90,24 @@ impl Plan {
             .find(|a| a.pipeline == pipeline && a.model == model)
     }
 
+    /// Exact equality, with float fields compared by bits — the identity
+    /// the workspace-backed planner promises against its naive reference
+    /// (see `coordinator::reference` and `rust/tests/planner.rs`).
+    pub fn bit_eq(&self, other: &Plan) -> bool {
+        self.unplaced == other.unplaced
+            && self.assignments.len() == other.assignments.len()
+            && self.assignments.iter().zip(&other.assignments).all(|(a, b)| {
+                a.pipeline == b.pipeline
+                    && a.model == b.model
+                    && a.cfg == b.cfg
+                    && a.bindings.len() == b.bindings.len()
+                    && a.bindings
+                        .iter()
+                        .zip(&b.bindings)
+                        .all(|(x, y)| x.bit_eq(y))
+            })
+    }
+
     /// Number of edge/server split points of a pipeline in this plan
     /// (Insight 3: fewer is better).
     pub fn split_points(&self, pipeline: usize, dag: &PipelineDag) -> usize {

@@ -1,0 +1,319 @@
+//! Reusable planner state: the allocation story of the control plane.
+//!
+//! A [`PlannerWorkspace`] is owned by the [`Controller`](super::Controller)
+//! and threaded through every CWD/CORAL entry point (`cwd_ws`,
+//! `cwd_subset_ws`, `coral_ws`, `coral_repair_ws`). It carries two kinds of
+//! state:
+//!
+//! * **Running aggregates** ([`DeviceLoads`]) — per-device committed memory
+//!   and stream-time folds that replace the O(P) rescans the naive planner
+//!   performs per batch candidate. Bit-identity with the naive fold is
+//!   guaranteed by construction: the aggregate is the *prefix* of the exact
+//!   fold sequence the naive code runs (pipelines in commit order, stages
+//!   in index order), and per-candidate checks continue that fold over the
+//!   current pipeline's stages only. No float is ever re-associated.
+//! * **Recycled buffers** — the GPU stream pool ([`GpuPool`]), flat
+//!   stage-end table, sort scratch, and config-row pool, all reused across
+//!   `Reschedule`/`DriftCheck`/`on_fault` rounds so steady-state replans
+//!   allocate nothing beyond their returned `Plan`.
+//!
+//! The reuse contract is documented on [`PlannerWorkspace`]; the
+//! reference-vs-optimized identity proptest (`rust/tests/planner.rs`)
+//! exercises a single workspace across many fuzzed environments to prove
+//! no state leaks between rounds.
+
+use super::estimator::stage_memory_mb;
+use super::stream::GpuStreams;
+use super::types::{GpuId, SchedEnv, StageCfg};
+use crate::Ms;
+
+/// Per-device committed-load aggregates for CWD's feasibility filters.
+///
+/// `mem_used[d]` / `time_used[d]` are the exact running folds the naive
+/// `device_mem_headroom` / `device_stream_time` scans would produce over
+/// every committed pipeline, in the same order. Committing a pipeline is
+/// O(stages); evaluating a candidate is O(stages of the current pipeline)
+/// instead of O(all scheduled stages).
+#[derive(Clone, Debug, Default)]
+pub struct DeviceLoads {
+    /// Σ gpu.mem_mb per device (same fold order as the naive total).
+    mem_total: Vec<f64>,
+    /// Committed stage memory per device (prefix of the naive fold).
+    mem_used: Vec<f64>,
+    /// Committed stream time per device (prefix of the naive fold).
+    time_used: Vec<f64>,
+    /// Σ gpu.streams per device (integer — exact).
+    streams: Vec<usize>,
+}
+
+impl DeviceLoads {
+    /// Reset for a new planning round over `env`'s cluster.
+    pub fn reset(&mut self, env: &SchedEnv) {
+        let n = env.cluster.devices.len();
+        self.mem_total.clear();
+        self.streams.clear();
+        for d in &env.cluster.devices {
+            self.mem_total.push(d.gpus.iter().map(|g| g.mem_mb).sum());
+            self.streams.push(d.gpus.iter().map(|g| g.streams).sum());
+        }
+        self.mem_used.clear();
+        self.mem_used.resize(n, 0.0);
+        self.time_used.clear();
+        self.time_used.resize(n, 0.0);
+    }
+
+    /// Fold one scheduled pipeline into the committed aggregates — the
+    /// incremental equivalent of the naive scans seeing one more entry of
+    /// `cfg_all`. Stages are folded in index order, exactly as the naive
+    /// loop visits them.
+    pub fn commit(&mut self, env: &SchedEnv, p: usize, cfg: &[StageCfg]) {
+        let dag = &env.pipelines[p];
+        for (m, c) in cfg.iter().enumerate() {
+            self.mem_used[c.device] += stage_memory_mb(env, p, m, *c);
+            let class = env.cluster.device(c.device).class;
+            let lat = env.profiles.batch_latency(&dag.models[m].spec, class, c.batch);
+            self.time_used[c.device] += lat * c.instances as f64;
+        }
+    }
+
+    /// Remaining GPU memory on `device` given the committed pipelines plus
+    /// the in-progress pipeline `p` with config `cfg`. Continues the
+    /// committed fold over `cfg`'s stages — bit-identical to the naive
+    /// full rescan.
+    pub fn mem_headroom(
+        &self,
+        env: &SchedEnv,
+        device: usize,
+        p: usize,
+        cfg: &[StageCfg],
+    ) -> f64 {
+        let mut used = self.mem_used[device];
+        for (m, c) in cfg.iter().enumerate() {
+            if c.device == device {
+                used += stage_memory_mb(env, p, m, *c);
+            }
+        }
+        self.mem_total[device] - used
+    }
+
+    /// Committed + in-progress stream-time demand on `device` (ms per duty
+    /// cycle). Same prefix-fold continuation as [`Self::mem_headroom`].
+    pub fn stream_time(
+        &self,
+        env: &SchedEnv,
+        device: usize,
+        p: usize,
+        cfg: &[StageCfg],
+    ) -> f64 {
+        let class = env.cluster.device(device).class;
+        let dag = &env.pipelines[p];
+        let mut total = self.time_used[device];
+        for (m, c) in cfg.iter().enumerate() {
+            if c.device == device {
+                let lat = env.profiles.batch_latency(&dag.models[m].spec, class, c.batch);
+                total += lat * c.instances as f64;
+            }
+        }
+        total
+    }
+
+    /// Stream-time budget of a device per duty cycle (streams × duty, with
+    /// the portion-packing safety margin).
+    pub fn stream_budget(&self, device: usize, duty_ms: f64) -> f64 {
+        self.streams[device] as f64 * duty_ms * 0.9
+    }
+}
+
+/// Recycled GPU stream state for CORAL, with a per-device index so
+/// placement scans touch only the target device's contiguous GPU range
+/// and plan replay resolves a `GpuId` in O(1).
+#[derive(Clone, Debug, Default)]
+pub struct GpuPool {
+    pub(super) gpus: Vec<GpuStreams>,
+    /// `range[device] = (start, end)` into `gpus` (build order: devices in
+    /// cluster order, GPUs per device in index order — same as the naive
+    /// `build_gpu_state`, so relative iteration order is preserved).
+    range: Vec<(usize, usize)>,
+}
+
+impl GpuPool {
+    /// Rebuild the pool as empty stream sets for `env`'s cluster, reusing
+    /// every allocation from the previous round.
+    pub fn reset(&mut self, env: &SchedEnv) {
+        self.range.clear();
+        let mut idx = 0;
+        for d in &env.cluster.devices {
+            let start = idx;
+            for (gi, g) in d.gpus.iter().enumerate() {
+                let id = GpuId { device: d.id, gpu: gi };
+                if idx < self.gpus.len() {
+                    self.gpus[idx].reset(id, g.mem_mb, g.util_cap, g.streams);
+                } else {
+                    self.gpus.push(GpuStreams::new(id, g.mem_mb, g.util_cap, g.streams));
+                }
+                idx += 1;
+            }
+            self.range.push((start, idx));
+        }
+        self.gpus.truncate(idx);
+    }
+
+    /// Contiguous `gpus` index range of a device ((0, 0) when unknown).
+    pub fn device_range(&self, device: usize) -> (usize, usize) {
+        self.range.get(device).copied().unwrap_or((0, 0))
+    }
+
+    /// O(1) index of a GPU id; `None` for ids outside the pool (stale
+    /// plans referencing hardware this cluster does not have — the same
+    /// ids the naive linear `find` would fail to match).
+    pub fn gpu_index(&self, id: GpuId) -> Option<usize> {
+        let &(start, end) = self.range.get(id.device)?;
+        let idx = start + id.gpu;
+        (idx < end).then_some(idx)
+    }
+}
+
+/// Reusable planner state owned by the Controller.
+///
+/// # Reuse contract
+///
+/// * A workspace may be reused across arbitrarily many planning rounds
+///   (full plans, subset replans, repairs) over the **same or different**
+///   environments; every entry point resets the state it reads before
+///   using it. Plans produced with a reused workspace are bit-identical
+///   to plans produced with a fresh one (enforced by
+///   `rust/tests/planner.rs`).
+/// * A workspace must not be shared between concurrent planning calls —
+///   it is exclusive scratch, not shared state. `Controller` (and thus
+///   each sim partition) owns exactly one.
+/// * Dropping a workspace between rounds is always safe; it only costs
+///   the recycled capacity.
+#[derive(Clone, Debug, Default)]
+pub struct PlannerWorkspace {
+    // ---- CWD ----
+    pub(super) loads: DeviceLoads,
+    /// Burstiness sort scratch (Algorithm 1 line 6).
+    pub(super) order: Vec<usize>,
+    /// Pool of downstream-id vecs for ToEdge's DFS recursion.
+    pub(super) downs_pool: Vec<Vec<usize>>,
+    /// Target-id scratch for full rounds (`cwd_ws`).
+    pub(super) full_targets: Vec<usize>,
+    // ---- CORAL ----
+    pub(super) gpus: GpuPool,
+    /// Flat offsets: `stage_off[p]` indexes `stage_end` for pipeline `p`.
+    pub(super) stage_off: Vec<usize>,
+    /// Upstream portion end per stage; `NEG_INFINITY` = no portion yet
+    /// (legitimate ends are ≥ 0, so the sentinel never collides).
+    pub(super) stage_end: Vec<Ms>,
+    /// Offset of each work item's first assignment in the output vec.
+    pub(super) asg_off: Vec<usize>,
+    /// Drifted-pipeline membership for `coral_repair_ws`.
+    pub(super) drift_flag: Vec<bool>,
+    // ---- Controller replan ----
+    /// The full round's CWD configs, kept so the feasibility-feedback
+    /// re-run and the next round's row recycling reuse them.
+    pub(super) plan_cfgs: Vec<Vec<StageCfg>>,
+    pub(super) replan_targets: Vec<usize>,
+    pub(super) kept: Vec<(usize, Vec<StageCfg>)>,
+    pub(super) new_cfgs: Vec<(usize, Vec<StageCfg>)>,
+    /// Recycled per-pipeline config rows.
+    pub(super) row_pool: Vec<Vec<StageCfg>>,
+}
+
+impl PlannerWorkspace {
+    pub fn new() -> PlannerWorkspace {
+        PlannerWorkspace::default()
+    }
+
+    /// Reset the flat stage-end table for a placement round over `env`.
+    pub(super) fn reset_stage_end(&mut self, env: &SchedEnv) {
+        self.stage_off.clear();
+        let mut off = 0;
+        for dag in env.pipelines {
+            self.stage_off.push(off);
+            off += dag.len();
+        }
+        self.stage_end.clear();
+        self.stage_end.resize(off, f64::NEG_INFINITY);
+    }
+
+    /// Return a cleared config row from the pool (or a fresh one).
+    pub(super) fn take_row(&mut self) -> Vec<StageCfg> {
+        let mut row = self.row_pool.pop().unwrap_or_default();
+        row.clear();
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::pipeline::standard_pipelines;
+    use crate::profiles::ProfileStore;
+
+    #[test]
+    fn gpu_pool_indexes_match_build_order() {
+        let cl = Cluster::paper_testbed();
+        let pf = ProfileStore::analytic();
+        let pl = standard_pipelines(2);
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let mut pool = GpuPool::default();
+        pool.reset(&env);
+        let naive = super::super::coral::build_gpu_state(&env);
+        assert_eq!(pool.gpus.len(), naive.len());
+        for (a, b) in pool.gpus.iter().zip(&naive) {
+            assert_eq!(a.gpu, b.gpu);
+            assert_eq!(a.streams.len(), b.streams.len());
+        }
+        for (i, g) in pool.gpus.iter().enumerate() {
+            assert_eq!(pool.gpu_index(g.gpu), Some(i));
+        }
+        assert_eq!(pool.gpu_index(GpuId { device: 99, gpu: 0 }), None);
+        assert_eq!(pool.gpu_index(GpuId { device: 0, gpu: 99 }), None);
+        // Reuse across a different cluster shape leaves no stale GPUs.
+        let cl2 = Cluster::small();
+        let pl2 = standard_pipelines(1);
+        let env2 = SchedEnv::bootstrap(&cl2, &pf, &pl2, vec![80.0; 3]);
+        pool.reset(&env2);
+        assert_eq!(pool.gpus.len(), cl2.n_gpus());
+    }
+
+    #[test]
+    fn device_loads_match_naive_scans() {
+        let cl = Cluster::paper_testbed();
+        let pf = ProfileStore::analytic();
+        let pl: Vec<_> = standard_pipelines(3)
+            .into_iter()
+            .map(|mut p| {
+                p.source_device += 1;
+                p
+            })
+            .collect();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; cl.devices.len()]);
+        let cfgs: Vec<Vec<StageCfg>> =
+            super::super::cwd::cwd(&env, &super::super::cwd::CwdParams::default())
+                .into_iter()
+                .map(|r| r.cfg)
+                .collect();
+        let mut loads = DeviceLoads::default();
+        loads.reset(&env);
+        let committed: Vec<(usize, Vec<StageCfg>)> =
+            cfgs.iter().take(2).cloned().enumerate().collect();
+        for (p, cfg) in &committed {
+            loads.commit(&env, *p, cfg);
+        }
+        // Continue the fold over pipeline 2 and compare against the naive
+        // rescan of committed + current.
+        let mut all = committed.clone();
+        all.push((2, cfgs[2].clone()));
+        for d in 0..cl.devices.len() {
+            let fast = loads.mem_headroom(&env, d, 2, &cfgs[2]);
+            let naive = super::super::reference::device_mem_headroom(&env, d, &all);
+            assert_eq!(fast.to_bits(), naive.to_bits(), "mem device {d}");
+            let fast_t = loads.stream_time(&env, d, 2, &cfgs[2]);
+            let naive_t = super::super::reference::device_stream_time(&env, d, &all);
+            assert_eq!(fast_t.to_bits(), naive_t.to_bits(), "time device {d}");
+        }
+    }
+}

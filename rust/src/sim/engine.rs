@@ -19,7 +19,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::autoscaler::{AutoScaler, AutoScalerParams, ScaleAction};
 use crate::coordinator::controller::{make_scheduler, SCHEDULING_PERIOD_MS};
-use crate::coordinator::drift::{DriftDetector, DriftParams, PlanEnvelope, ReplanMode};
+use crate::coordinator::drift::{DriftDetector, DriftParams, ReplanMode};
 use crate::coordinator::{
     GpuId, ModelObs, Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg,
 };
@@ -319,6 +319,14 @@ pub struct SimPartition {
     /// cooldowns are handed back if post-recovery replanning supersedes
     /// the stale-telemetry decision (redeploys the group).
     outage_scaled: Vec<(usize, usize)>,
+    /// Recycled scheduler-environment buffers: `build_env` fills these,
+    /// and each replan site hands them back once the scheduler returns,
+    /// so steady-state control rounds reuse the telemetry rows.
+    env_obs: Vec<Vec<ModelObs>>,
+    env_bw: Vec<f64>,
+    /// `dag.request_rates(1.0)` per pipeline — time-invariant structure,
+    /// computed once (the telemetry fallback for thin arrival windows).
+    structural_rates: Vec<Vec<f64>>,
 }
 
 /// Owned subset of `Scenario` the engine needs (the borrow-free core).
@@ -357,6 +365,8 @@ impl SimPartition {
             gpu_offset.push(n_gpus);
             n_gpus += d.gpus.len();
         }
+        let structural_rates =
+            sc.pipelines.iter().map(|d| d.request_rates(1.0)).collect();
         let mut front_rng = Rng::new(sc.cfg.seed ^ FRONTEND_TAG);
         let frontend = (0..sc.pipelines.len())
             .map(|i| {
@@ -416,6 +426,9 @@ impl SimPartition {
             frozen_env: None,
             doomed: Vec::new(),
             outage_scaled: Vec::new(),
+            env_obs: Vec::new(),
+            env_bw: Vec::new(),
+            structural_rates,
             sc,
         }
     }
@@ -476,11 +489,18 @@ impl SimPartition {
     /// control plane plans against lies). Device liveness is heartbeat-
     /// driven, not telemetry-driven, so crashed devices report zero
     /// bandwidth even under a freeze.
-    fn build_env(&self) -> (Vec<Vec<ModelObs>>, Vec<f64>) {
-        let (obs, mut bw) = match &self.frozen_env {
-            Some(snap) => snap.clone(),
-            None => self.live_env(),
-        };
+    fn build_env(&mut self) -> (Vec<Vec<ModelObs>>, Vec<f64>) {
+        // Recycled buffers: the replan sites hand these back after the
+        // scheduler returns (see `reschedule` and friends).
+        let mut obs = std::mem::take(&mut self.env_obs);
+        let mut bw = std::mem::take(&mut self.env_bw);
+        match &self.frozen_env {
+            Some((fo, fb)) => {
+                obs.clone_from(fo);
+                bw.clone_from(fb);
+            }
+            None => self.fill_live_env(&mut obs, &mut bw),
+        }
         for (d, &down) in self.device_down.iter().enumerate() {
             if down > 0 {
                 if let Some(b) = bw.get_mut(d) {
@@ -491,14 +511,24 @@ impl SimPartition {
         (obs, bw)
     }
 
-    /// Raw (unfrozen) observations and link bandwidths.
+    /// Raw (unfrozen) observations and link bandwidths (allocating; the
+    /// freeze snapshot is the one caller that keeps the buffers).
     fn live_env(&self) -> (Vec<Vec<ModelObs>>, Vec<f64>) {
         let mut obs = Vec::new();
+        let mut bw = Vec::new();
+        self.fill_live_env(&mut obs, &mut bw);
+        (obs, bw)
+    }
+
+    /// Fill `obs`/`bw` with the live telemetry, reusing their rows.
+    fn fill_live_env(&self, obs: &mut Vec<Vec<ModelObs>>, bw: &mut Vec<f64>) {
+        obs.resize_with(self.sc.pipelines.len(), Vec::new);
         for (p, dag) in self.sc.pipelines.iter().enumerate() {
-            let structural = dag.request_rates(1.0);
-            let mut row = Vec::new();
+            let structural = &self.structural_rates[p];
+            let row = &mut obs[p];
+            row.clear();
             for m in 0..dag.len() {
-                let g = self.groups.get(p).and_then(|row| row.get(m));
+                let g = self.groups.get(p).and_then(|r| r.get(m));
                 let (rate, cv) = match g {
                     Some(g) if g.window.len() >= 10 => {
                         (g.window.rate_qps(), g.window.burstiness())
@@ -507,15 +537,9 @@ impl SimPartition {
                 };
                 row.push(ModelObs { rate_qps: rate.max(0.05), burstiness: cv });
             }
-            obs.push(row);
         }
-        let bw = self
-            .sc
-            .traces
-            .iter()
-            .map(|t| t.bandwidth_mbps(self.now))
-            .collect();
-        (obs, bw)
+        bw.clear();
+        bw.extend(self.sc.traces.iter().map(|t| t.bandwidth_mbps(self.now)));
     }
 
     /// Run the scheduler and (re)install the plan, preserving queues.
@@ -530,13 +554,16 @@ impl SimPartition {
             alpha: 1.2,
         };
         let plan = self.sched.plan(&env);
-        let envelope = (self.mode == ReplanMode::Drift).then(|| {
-            PlanEnvelope::capture(&plan, env.pipelines, &env.obs, &env.bw_mbps)
-        });
-        self.install_plan(plan);
-        if let Some(e) = envelope {
-            self.drift.arm(e);
+        // Rearm before installing: `install_plan` never reads the drift
+        // state, and rearming while `env` is alive lets its buffers be
+        // handed back for the next round.
+        if self.mode == ReplanMode::Drift {
+            self.drift.rearm(&plan, env.pipelines, &env.obs, &env.bw_mbps);
         }
+        let SchedEnv { obs, bw_mbps, .. } = env;
+        self.env_obs = obs;
+        self.env_bw = bw_mbps;
+        self.install_plan(plan);
     }
 
     /// Drift-mode check: if live rates or link bandwidth left the active
@@ -545,6 +572,8 @@ impl SimPartition {
         let (obs, bw) = self.build_env();
         let drifted = self.drift.check(self.now, &obs, &bw);
         if drifted.is_empty() {
+            self.env_obs = obs;
+            self.env_bw = bw;
             return;
         }
         let env = SchedEnv {
@@ -556,10 +585,11 @@ impl SimPartition {
             alpha: 1.2,
         };
         let plan = self.sched.replan(&env, &self.plan, &drifted);
-        let envelope =
-            PlanEnvelope::capture(&plan, env.pipelines, &env.obs, &env.bw_mbps);
+        self.drift.rearm(&plan, env.pipelines, &env.obs, &env.bw_mbps);
+        let SchedEnv { obs, bw_mbps, .. } = env;
+        self.env_obs = obs;
+        self.env_bw = bw_mbps;
         self.install_plan(plan);
-        self.drift.arm(envelope);
     }
 
     /// Failure-aware replan: let the scheduler re-place work around the
@@ -577,13 +607,13 @@ impl SimPartition {
             alpha: 1.2,
         };
         let plan = self.sched.on_fault(&env, &self.plan, device);
-        let envelope = (self.mode == ReplanMode::Drift).then(|| {
-            PlanEnvelope::capture(&plan, env.pipelines, &env.obs, &env.bw_mbps)
-        });
-        self.install_plan(plan);
-        if let Some(e) = envelope {
-            self.drift.arm(e);
+        if self.mode == ReplanMode::Drift {
+            self.drift.rearm(&plan, env.pipelines, &env.obs, &env.bw_mbps);
         }
+        let SchedEnv { obs, bw_mbps, .. } = env;
+        self.env_obs = obs;
+        self.env_bw = bw_mbps;
+        self.install_plan(plan);
     }
 
     /// Account `n` queries destroyed by a fault (metrics + checker move

@@ -152,6 +152,12 @@ pub struct QuantileSketch {
     counts: Vec<u64>,
     /// Samples below the covered range (incl. zero/negative/NaN).
     low: u64,
+    /// Occupied bounds into `counts`: every non-zero bucket lies in
+    /// `blo..=bhi` (`blo > bhi` = none yet). Quantile, digest, and merge
+    /// walk only this range instead of all `NBUCKETS` buckets — skipped
+    /// buckets are zero, so outputs are unchanged.
+    blo: usize,
+    bhi: usize,
     n: u64,
     sum: f64,
     min: f64,
@@ -178,6 +184,8 @@ impl QuantileSketch {
         QuantileSketch {
             counts: Vec::new(),
             low: 0,
+            blo: usize::MAX,
+            bhi: 0,
             n: 0,
             sum: 0.0,
             min: f64::INFINITY,
@@ -228,6 +236,8 @@ impl QuantileSketch {
                     self.counts = vec![0; NBUCKETS];
                 }
                 self.counts[idx] += k;
+                self.blo = self.blo.min(idx);
+                self.bhi = self.bhi.max(idx);
             }
             None => self.low += k,
         }
@@ -240,13 +250,18 @@ impl QuantileSketch {
         if other.n == 0 {
             return;
         }
-        if self.counts.is_empty() && !other.counts.is_empty() {
-            self.counts = vec![0; NBUCKETS];
-        }
-        for (i, &c) in other.counts.iter().enumerate() {
-            if c > 0 {
-                self.counts[i] += c;
+        if other.blo <= other.bhi {
+            if self.counts.is_empty() {
+                self.counts = vec![0; NBUCKETS];
             }
+            for i in other.blo..=other.bhi {
+                let c = other.counts[i];
+                if c > 0 {
+                    self.counts[i] += c;
+                }
+            }
+            self.blo = self.blo.min(other.blo);
+            self.bhi = self.bhi.max(other.bhi);
         }
         self.low += other.low;
         self.n += other.n;
@@ -310,10 +325,12 @@ impl QuantileSketch {
         if target < cum {
             return self.min;
         }
-        for (idx, &c) in self.counts.iter().enumerate() {
-            cum += c;
-            if cum > target {
-                return Self::bucket_value(idx).clamp(self.min, self.max);
+        if self.blo <= self.bhi {
+            for idx in self.blo..=self.bhi {
+                cum += self.counts[idx];
+                if cum > target {
+                    return Self::bucket_value(idx).clamp(self.min, self.max);
+                }
             }
         }
         self.max
@@ -341,10 +358,13 @@ impl QuantileSketch {
         h = fnv1a(h, self.sum.to_bits());
         h = fnv1a(h, self.min.to_bits());
         h = fnv1a(h, self.max.to_bits());
-        for (i, &c) in self.counts.iter().enumerate() {
-            if c > 0 {
-                h = fnv1a(h, i as u64);
-                h = fnv1a(h, c);
+        if self.blo <= self.bhi {
+            for i in self.blo..=self.bhi {
+                let c = self.counts[i];
+                if c > 0 {
+                    h = fnv1a(h, i as u64);
+                    h = fnv1a(h, c);
+                }
             }
         }
         h
@@ -592,6 +612,33 @@ mod tests {
                 (mid - x).abs() <= x * (1.0 / 128.0),
                 "x {x} -> {mid}"
             );
+        }
+    }
+
+    #[test]
+    fn sketch_bucket_bounds_cover_all_occupied_buckets() {
+        // Extremes of the covered range plus an underflow sample: the
+        // occupied-range walk must see both ends.
+        let mut s = QuantileSketch::new();
+        s.push(2e-6); // near the 2^-20 floor
+        s.push(1e11); // clamped into the top bucket
+        s.push(-1.0); // underflow
+        assert_eq!(s.quantile(0.0), -1.0);
+        assert_eq!(s.quantile(1.0), 1e11);
+        let mid = s.quantile(0.5);
+        assert!(mid > 0.0 && mid <= 4e-6, "mid {mid}");
+        // Merging a mid-range sketch widens the bounds; result tracks a
+        // single sketch fed the same pushes in the same order.
+        let mut t = QuantileSketch::new();
+        t.push(100.0);
+        s.merge(&t);
+        let mut whole = QuantileSketch::new();
+        for x in [2e-6, 1e11, -1.0, 100.0] {
+            whole.push(x);
+        }
+        assert_eq!(s.digest(), whole.digest());
+        for q in [0.0, 0.3, 0.5, 0.8, 1.0] {
+            assert_eq!(s.quantile(q), whole.quantile(q));
         }
     }
 

@@ -1,13 +1,15 @@
 //! Hot-path bench regression gate (ROADMAP open perf item).
 //!
-//! `cargo bench --bench hotpath` writes `BENCH_hotpath.json`; the committed
-//! baseline lives in `BENCH_hotpath.baseline.json` (first toolchain run of
-//! `./ci.sh` captures it). The gate test is `#[ignore]` by default — timing
-//! is meaningless under `cargo test`'s load — and is run explicitly by
-//! `ci.sh` after the bench:
+//! `cargo bench --bench hotpath` writes `BENCH_hotpath.json`, and
+//! `cargo bench --bench planner` merges its control-plane entries into the
+//! same file; the committed baseline lives in `BENCH_hotpath.baseline.json`
+//! (first toolchain run of `./ci.sh` captures it). The gate test is
+//! `#[ignore]` by default — timing is meaningless under `cargo test`'s
+//! load — and is run explicitly by `ci.sh` after the benches:
 //!
 //! ```sh
 //! cargo bench --bench hotpath
+//! cargo bench --bench planner
 //! cargo test -q --test perf_regression -- --ignored
 //! ```
 //!
@@ -79,6 +81,14 @@ fn hotpath_no_entry_regresses_beyond_25_percent() {
     let base = parse_bench_json(&baseline);
     assert!(!base.is_empty(), "baseline parsed to zero entries");
     let cur: HashMap<String, f64> = parse_bench_json(&fresh).into_iter().collect();
+    // The planner bench merges into the same file; a fresh run with no
+    // "planner ..." entries means ci.sh skipped `cargo bench --bench
+    // planner` and the gate would silently stop covering the control plane.
+    assert!(
+        cur.keys().any(|n| n.starts_with("planner ")),
+        "no planner entries in BENCH_hotpath.json — \
+         run `cargo bench --bench planner` after the hotpath bench"
+    );
     let mut regressions = Vec::new();
     for (name, b) in base {
         match cur.get(&name) {

@@ -1,0 +1,158 @@
+//! Reference-vs-optimized planner identity: the workspace-backed CWD and
+//! CORAL entry points must emit plans **byte-identical** to the retained
+//! naive implementations in `coordinator::reference`, over fuzzed
+//! clusters, pipelines, telemetry, and parameter variants — with one
+//! `PlannerWorkspace` reused across every case, so any state leaking
+//! between rounds shows up as a divergence.
+
+use octopinf::cluster::{Cluster, Device, DeviceClass};
+use octopinf::coordinator::coral::{coral_repair_ws, coral_ws};
+use octopinf::coordinator::cwd::{cwd_subset_ws, cwd_ws, CwdParams};
+use octopinf::coordinator::reference::{
+    coral_reference, coral_repair_reference, cwd_reference,
+    cwd_subset_reference,
+};
+use octopinf::coordinator::{PlannerWorkspace, SchedEnv, StageCfg};
+use octopinf::pipeline::{standard_pipelines, PipelineDag};
+use octopinf::profiles::ProfileStore;
+use octopinf::util::prop::{check, forall};
+use octopinf::util::Rng;
+
+const EDGE_CLASSES: [DeviceClass; 3] =
+    [DeviceClass::JetsonAgx, DeviceClass::XavierNx, DeviceClass::OrinNano];
+
+#[derive(Debug)]
+struct PlannerInput {
+    edge_classes: Vec<usize>,
+    n_pipelines: usize,
+    sources: Vec<usize>,
+    fps: f64,
+    bws: Vec<f64>,
+    rate_scale: Vec<f64>,
+    /// 0 = default, 1 = server_only, 2 = static_batch.
+    params_kind: usize,
+    /// Pipeline whose telemetry surges before the subset replan.
+    drift_target: usize,
+    surge: f64,
+}
+
+fn gen_input(r: &mut Rng) -> PlannerInput {
+    let n_edge = 1 + r.below(5);
+    let edge_classes = (0..n_edge).map(|_| r.below(3)).collect();
+    let n_pipelines = 1 + r.below(6);
+    let sources = (0..n_pipelines).map(|_| 1 + r.below(n_edge)).collect();
+    let bws = (0..n_edge + 1).map(|_| r.range(1.0, 200.0)).collect();
+    let rate_scale = (0..n_pipelines).map(|_| r.range(0.2, 4.0)).collect();
+    PlannerInput {
+        edge_classes,
+        n_pipelines,
+        sources,
+        fps: r.range(5.0, 30.0),
+        bws,
+        rate_scale,
+        params_kind: r.below(3),
+        drift_target: r.below(n_pipelines),
+        surge: r.range(0.3, 5.0),
+    }
+}
+
+fn build_cluster(inp: &PlannerInput) -> Cluster {
+    let mut devices = vec![Device::new(0, "server", DeviceClass::Server)];
+    for (i, &c) in inp.edge_classes.iter().enumerate() {
+        devices.push(Device::new(1 + i, &format!("edge{i}"), EDGE_CLASSES[c]));
+    }
+    let cl = Cluster { devices };
+    assert!(cl.validate().is_ok());
+    cl
+}
+
+fn build_pipelines(inp: &PlannerInput) -> Vec<PipelineDag> {
+    standard_pipelines(inp.n_pipelines)
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut p)| {
+            p.source_device = inp.sources[i];
+            p.source_fps = inp.fps;
+            p
+        })
+        .collect()
+}
+
+fn params_for(inp: &PlannerInput) -> CwdParams {
+    match inp.params_kind {
+        1 => CwdParams { server_only: true, ..Default::default() },
+        2 => CwdParams { static_batch: Some((4, 8, 2)), ..Default::default() },
+        _ => CwdParams::default(),
+    }
+}
+
+/// All four entry points — full CWD, full CORAL, CWD subset, CORAL
+/// repair — against their naive references, one shared workspace across
+/// every fuzzed case.
+#[test]
+fn prop_workspace_planner_is_bit_identical_to_reference() {
+    let profiles = ProfileStore::analytic();
+    let mut ws = PlannerWorkspace::new();
+    let mut out: Vec<(usize, Vec<StageCfg>)> = Vec::new();
+    forall(9041, 48, gen_input, |inp| {
+        let cluster = build_cluster(inp);
+        let pipelines = build_pipelines(inp);
+        let mut env =
+            SchedEnv::bootstrap(&cluster, &profiles, &pipelines, inp.bws.clone());
+        for (p, row) in env.obs.iter_mut().enumerate() {
+            for o in row.iter_mut() {
+                o.rate_qps *= inp.rate_scale[p];
+            }
+        }
+        let params = params_for(inp);
+
+        // Full CWD round.
+        cwd_ws(&env, &params, &mut ws, &mut out);
+        let naive = cwd_reference(&env, &params);
+        check(out.len() == naive.len(), "cwd result count")?;
+        for (i, ((p, cfg), r)) in out.iter().zip(&naive).enumerate() {
+            check(
+                *p == i && *cfg == r.cfg,
+                format!("cwd diverged on pipeline {p}: {cfg:?} vs {:?}", r.cfg),
+            )?;
+        }
+        let cfgs: Vec<Vec<StageCfg>> =
+            out.iter().map(|(_, c)| c.clone()).collect();
+
+        // Full CORAL placement.
+        let plan_fast = coral_ws(&env, &cfgs, &mut ws);
+        let plan_naive = coral_reference(&env, &cfgs);
+        check(plan_fast.bit_eq(&plan_naive), "coral plan diverged")?;
+
+        // Drift: surge one pipeline, replan only it with the rest kept.
+        let t = inp.drift_target;
+        let mut surged = SchedEnv::bootstrap(
+            &cluster,
+            &profiles,
+            &pipelines,
+            inp.bws.clone(),
+        );
+        for (p, row) in surged.obs.iter_mut().enumerate() {
+            let s = inp.rate_scale[p] * if p == t { inp.surge } else { 1.0 };
+            for o in row.iter_mut() {
+                o.rate_qps *= s;
+            }
+        }
+        let kept: Vec<(usize, Vec<StageCfg>)> = cfgs
+            .iter()
+            .enumerate()
+            .filter(|&(p, _)| p != t)
+            .map(|(p, c)| (p, c.clone()))
+            .collect();
+        let targets = [t];
+        cwd_subset_ws(&surged, &params, &targets, &kept, &mut ws, &mut out);
+        let naive_sub =
+            cwd_subset_reference(&surged, &params, &targets, &kept);
+        check(out == naive_sub, "cwd_subset diverged")?;
+
+        // CORAL repair of the full plan for the drifted subset.
+        let rep_fast = coral_repair_ws(&surged, &plan_fast, &out, &mut ws);
+        let rep_naive = coral_repair_reference(&surged, &plan_naive, &out);
+        check(rep_fast.bit_eq(&rep_naive), "coral_repair diverged")
+    });
+}

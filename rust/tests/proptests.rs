@@ -184,15 +184,13 @@ fn prop_stream_portions_never_overlap() {
                         ..*f
                     })
                 }) {
-                    s.insert(
-                        Portion {
-                            start_ms: f.start_ms,
-                            end_ms: f.start_ms + dur,
-                            width: w,
-                            owner: (0, 0, 0),
-                        },
-                        1.0,
-                    );
+                    s.insert(Portion {
+                        start_ms: f.start_ms,
+                        end_ms: f.start_ms + dur,
+                        width: w,
+                        inter_mb: 1.0,
+                        owner: (0, 0, 0),
+                    });
                 }
             }
             // Invariant: sorted portions are disjoint.
