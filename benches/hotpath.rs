@@ -11,7 +11,7 @@ use octopinf::coordinator::SchedulerKind;
 use octopinf::network::{BwTrace, TraceKind};
 use octopinf::serving::DynamicBatcher;
 use octopinf::sim::wheel::{EventWheel, WheelEntry};
-use octopinf::sim::{run, FifoLink, Scenario};
+use octopinf::sim::{run, run_traced_with, FifoLink, Scenario, Simulator};
 use octopinf::util::stats::{burstiness, QuantileSketch};
 use octopinf::util::Rng;
 use octopinf::workload::{ArrivalWindow, ContentDynamics, ContentProfile};
@@ -25,6 +25,19 @@ fn main() {
     let sc = Scenario::build(cfg);
     rec.micro("sim 2min standard octopinf", 3, || {
         std::hint::black_box(run(&sc, SchedulerKind::OctopInf));
+    });
+
+    // Same run with the observability layer armed: ring-only flight
+    // recorder (what `enable_invariants` adds), then the full tracer
+    // (`--trace`, every span/mark/batch event retained). The spread over
+    // the plain entry above is the cost of the trace hooks.
+    rec.micro("sim 2min octopinf flight-recorder", 3, || {
+        let mut s = Simulator::new(&sc, SchedulerKind::OctopInf);
+        s.enable_flight_recorder();
+        std::hint::black_box(s.run());
+    });
+    rec.micro("sim 2min octopinf full-trace", 3, || {
+        std::hint::black_box(run_traced_with(&sc, SchedulerKind::OctopInf, 1));
     });
 
     // Batcher push/poll cycle.

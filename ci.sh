@@ -11,6 +11,8 @@
 #   partition determinism: fuzz + chaos smokes re-run at --sim-jobs 1 and
 #               --sim-jobs 4 over 2-cluster scenarios; the printed digest
 #               lines must match byte-for-byte or CI exits non-zero
+#   obs smoke:  trace export byte-stable across --sim-jobs, digest parity
+#               with tracing on/off, traced fuzz replay + `why` postmortem
 #   perf:       cargo bench --bench hotpath -> BENCH_hotpath.json, then
 #               cargo bench --bench planner merges its control-plane
 #               entries into the same file; the first run captures
@@ -68,6 +70,37 @@ det_gate chaos cargo run --release --quiet -- chaos \
 # the open-admission baseline, request conservation, fingerprint parity)
 # — any missed bar exits non-zero.
 cargo run --release --quiet -- frontdoor --quick
+
+# Observability smoke: arming the tracer must not move the digest line,
+# the exported Chrome-trace JSON must be byte-identical across --sim-jobs
+# (the binary validates the JSON before writing), and the traced fuzz
+# replay plus the `why` postmortem must run clean end to end.
+OBS_TMP=$(mktemp -d)
+trap 'rm -rf "$OBS_TMP"' EXIT
+obs_digest() {
+  cargo run --release --quiet -- simulate --scenario smoke --clusters 2 "$@" \
+    | grep '^digest:'
+}
+d_plain=$(obs_digest)
+d_traced=$(obs_digest --trace "$OBS_TMP/t1.json")
+if [ -z "$d_plain" ] || [ "$d_plain" != "$d_traced" ]; then
+  echo "ci.sh: --trace moved the simulate digest" >&2
+  echo "  off: $d_plain" >&2
+  echo "  on:  $d_traced" >&2
+  exit 1
+fi
+obs_digest --trace "$OBS_TMP/t4.json" --sim-jobs 4 >/dev/null
+if ! cmp -s "$OBS_TMP/t1.json" "$OBS_TMP/t4.json"; then
+  echo "ci.sh: trace bytes diverged across --sim-jobs 1 vs 4" >&2
+  exit 1
+fi
+[ -s "$OBS_TMP/t1.json" ] || { echo "ci.sh: empty trace export" >&2; exit 1; }
+echo "trace export stable across --sim-jobs; digest unmoved: ${d_plain#digest: }"
+OBS_REPRO="fuzz:v1:seed=${FUZZ_SEED0:-12648430}:clusters=2"
+cargo run --release --quiet -- fuzz --repro "$OBS_REPRO" \
+  --trace "$OBS_TMP/replay.json" >/dev/null
+cargo run --release --quiet -- why --repro "$OBS_REPRO" --sim-jobs 2 >/dev/null
+echo "obs smoke green: traced replay + postmortem clean on $OBS_REPRO"
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # Order matters: hotpath writes BENCH_hotpath.json fresh, planner

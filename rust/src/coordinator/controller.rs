@@ -18,6 +18,7 @@ use super::coral::{coral_repair_ws, coral_ws};
 use super::cwd::{cwd_subset_ws, cwd_ws, CwdParams};
 use super::types::{Plan, SchedEnv, Scheduler, SchedulerKind};
 use super::workspace::PlannerWorkspace;
+use crate::obs::RoundPath;
 use crate::Ms;
 
 /// Scheduling period between full CWD+CORAL rounds (paper §IV-A5: 6 min).
@@ -30,6 +31,10 @@ pub struct Controller {
     /// Reusable planner scratch; every plan/replan round resets what it
     /// reads and recycles the rest (see [`PlannerWorkspace`]).
     ws: PlannerWorkspace,
+    /// Which path produced the last returned plan (full solve vs CORAL
+    /// repair) — observability state for the tracer's planner lane, never
+    /// consulted by planning itself.
+    last_path: RoundPath,
 }
 
 impl Controller {
@@ -38,6 +43,7 @@ impl Controller {
             kind,
             autoscaler: AutoScaler::new(AutoScalerParams::default()),
             ws: PlannerWorkspace::new(),
+            last_path: RoundPath::Full,
         }
     }
 
@@ -65,6 +71,7 @@ impl Scheduler for Controller {
     }
 
     fn plan(&mut self, env: &SchedEnv) -> Plan {
+        self.last_path = RoundPath::Full;
         let params = self.cwd_params();
         // Step 2: CWD, into recycled rows.
         let mut pairs = std::mem::take(&mut self.ws.new_cfgs);
@@ -123,6 +130,7 @@ impl Scheduler for Controller {
     /// plan is missing assignments to keep.
     fn replan(&mut self, env: &SchedEnv, old: &Plan, drifted: &[usize]) -> Plan {
         if drifted.is_empty() {
+            self.last_path = RoundPath::Repair;
             return old.clone();
         }
         if !self.use_coral() {
@@ -197,6 +205,7 @@ impl Scheduler for Controller {
         if repaired.unplaced > old.unplaced {
             self.plan(env)
         } else {
+            self.last_path = RoundPath::Repair;
             repaired
         }
     }
@@ -222,9 +231,14 @@ impl Scheduler for Controller {
             })
             .collect();
         if affected.is_empty() {
+            self.last_path = RoundPath::Repair;
             return old.clone();
         }
         self.replan(env, old, &affected)
+    }
+
+    fn round_path(&self) -> RoundPath {
+        self.last_path
     }
 }
 
@@ -318,6 +332,32 @@ mod tests {
         // Empty drift set is the identity.
         let same = ctl.replan(&env, &old, &[]);
         assert_eq!(same.assignments.len(), old.assignments.len());
+    }
+
+    #[test]
+    fn round_path_reports_repair_vs_full() {
+        let (cl, pf, pl) = fixture();
+        let env = SchedEnv::bootstrap(&cl, &pf, &pl, vec![80.0; 10]);
+        let mut ctl = Controller::new(SchedulerKind::OctopInf);
+        assert_eq!(ctl.round_path(), RoundPath::Full, "before any round");
+        let old = ctl.plan(&env);
+        assert_eq!(ctl.round_path(), RoundPath::Full);
+        // An accepted incremental repair reports Repair; the fixture's
+        // single-pipeline drift never regresses reservations, so the
+        // fallback-to-full branch is not taken here.
+        let new = ctl.replan(&env, &old, &[2]);
+        assert!(new.unplaced <= old.unplaced);
+        assert_eq!(ctl.round_path(), RoundPath::Repair);
+        // Full rounds flip it back...
+        let _ = ctl.plan(&env);
+        assert_eq!(ctl.round_path(), RoundPath::Full);
+        // ...and the empty-drift identity is an (extreme) repair.
+        let _ = ctl.replan(&env, &old, &[]);
+        assert_eq!(ctl.round_path(), RoundPath::Repair);
+        // Baselines only ever solve from scratch: trait default.
+        let mut base = make_scheduler(SchedulerKind::Jellyfish, 1);
+        let _ = base.plan(&env);
+        assert_eq!(base.round_path(), RoundPath::Full);
     }
 
     #[test]

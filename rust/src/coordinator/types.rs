@@ -239,6 +239,15 @@ pub trait Scheduler: Send {
         let _ = (old, device);
         self.plan(env)
     }
+
+    /// Which path produced the *last* plan this scheduler returned: a
+    /// full solve or an incremental repair of the previous plan.
+    /// Report-only (the tracer's planner-round lane) — the engine never
+    /// branches on it. Baselines only ever solve from scratch, hence the
+    /// default; OctopInf's `Controller` overrides it.
+    fn round_path(&self) -> crate::obs::RoundPath {
+        crate::obs::RoundPath::Full
+    }
 }
 
 /// Selector used by the CLI / bench harness.

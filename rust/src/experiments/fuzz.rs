@@ -14,7 +14,12 @@
 //! `jobs = 0` means one worker per hardware thread).
 
 use crate::coordinator::{ReplanMode, SchedulerKind};
-use crate::sim::{run_checked_with, FuzzSpec, Scenario, ScenarioGen};
+use crate::metrics::RunMetrics;
+use crate::obs::TraceEvent;
+use crate::sim::{
+    run_checked_with, FuzzSpec, InvariantReport, Scenario, ScenarioGen,
+    Simulator,
+};
 use crate::util::stats::{fnv1a, FNV_OFFSET};
 
 use super::runner::par_map;
@@ -144,6 +149,31 @@ pub fn conformance_round_with(
         }
     }
     outcome
+}
+
+/// Deterministic traced replay of one fuzzed spec under the reference
+/// scheduler — the `octopinf fuzz --trace` / `octopinf why` postmortem
+/// entry. Arms the invariant engine *and* the full tracer, wiring the
+/// spec's exact repro string into every partition's flight recorder (so
+/// a violation mid-replay dumps with the same one-liner that started
+/// it). Metrics, report, and per-partition trace logs are all
+/// byte-identical at any `sim_jobs`.
+pub fn traced_replay(
+    spec: &FuzzSpec,
+    sim_jobs: usize,
+) -> (RunMetrics, InvariantReport, Vec<Vec<TraceEvent>>) {
+    let sc = spec.build();
+    let mut sim = Simulator::new(&sc, SchedulerKind::OctopInf);
+    sim.set_sim_jobs(sim_jobs);
+    sim.enable_invariants();
+    sim.enable_tracing();
+    sim.set_repro(&spec.repro());
+    let metrics = sim.run();
+    let report = sim
+        .take_invariant_report()
+        .expect("invariants were enabled before run");
+    let trace = sim.take_trace();
+    (metrics, report, trace)
 }
 
 /// Sweep `n` fuzzed scenarios (seeds `seed0..seed0+n`) across `jobs`

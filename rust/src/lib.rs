@@ -24,6 +24,7 @@ pub mod experiments;
 pub mod kb;
 pub mod metrics;
 pub mod network;
+pub mod obs;
 pub mod pipeline;
 pub mod profiles;
 pub mod runtime;

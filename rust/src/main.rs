@@ -23,7 +23,7 @@ use octopinf::sim::Scenario;
 use octopinf::util::cli::Args;
 use octopinf::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|serve|frontdoor> [options]
+const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|why|serve|frontdoor> [options]
   profile  [--reps 5] [--out artifacts/profiles.tsv]
   simulate [--scenario standard|lte|double|slo50|slo100|longterm|smoke|static]
            [--scheduler octopinf|distream|jellyfish|rim|no-coral|static-batch|server-only]
@@ -33,17 +33,27 @@ const USAGE: &str = "usage: octopinf <profile|simulate|figure|fuzz|drift|chaos|s
            [--sim-jobs N]  worker threads ticking the partitions (0 = all
                            cores; pure wall-clock knob — metrics and the
                            printed digest are byte-identical at any value)
+           [--trace FILE]  export per-query spans / GPU lanes / planner
+                           rounds as Chrome-trace JSON (chrome://tracing;
+                           sim-clock stamps, byte-identical at any
+                           --sim-jobs)
   figure   <1|6|7|8|9|10|11> [--quick] [--jobs N]   (N=0: all cores)
   fuzz     [--scenarios 50] [--seed0 3735928559] [--jobs N]
            [--replan periodic|drift] [--sim-jobs N] [--clusters N]
            [--repro fuzz:v1:seed=N[:replan=drift][:faults=M][:order=K][:horizon=H][:clusters=C]]
+           [--trace FILE]  (requires --repro: traced replay of that one
+                           scenario under the reference scheduler)
   drift    [--per-family 4] [--seed0 3735928559] [--jobs N] [--sim-jobs N]
            (fixed-period vs drift-triggered OctopInf per fuzz family)
   chaos    [--storms 8] [--seed0 3299893997] [--jobs N]
            [--replan periodic|drift] [--sim-jobs N] [--clusters N] [--help]
            (recovery on/off across fault storms; see `chaos --help`)
+  why      --repro fuzz:v1:seed=N[...] [--sim-jobs N] [--trace FILE]
+           (postmortem for one repro: SLO-miss attribution by component,
+            dominant-cause breakdown, plan-round provenance, invariants)
   serve    [--duration-s 10] [--fps 30] [--slo-ms 200] [--shards 2]
-           [--tenants 1] [--tenant-rate R] [--filter on|off] [--help]
+           [--tenants 1] [--tenant-rate R] [--filter on|off]
+           [--metrics-out FILE] [--help]
   frontdoor [--quick] [--help]
            (front-door evidence: filter gain, tenant isolation, sim
             frontend conformance; non-zero exit if any bar is missed)";
@@ -64,7 +74,10 @@ options:
                       unlimited; excess answered `throttled` with a
                       retry-after hint)
   --filter on|off     content-aware frontend: frame-diff filter + result
-                      cache in front of admission (default off)";
+                      cache in front of admission (default off)
+  --metrics-out FILE  write the final ServeReport as Prometheus text
+                      exposition (counters, per-model/tenant series,
+                      latency + queue-wait + exec-time quantiles)";
 
 /// What `octopinf frontdoor` measures (satisfies `--help`).
 const FRONTDOOR_HELP: &str = "octopinf frontdoor — front-door isolation & filtering evidence
@@ -125,6 +138,7 @@ fn main() {
         "fuzz" => cmd_fuzz(&args),
         "drift" => cmd_drift(&args),
         "chaos" => cmd_chaos(&args),
+        "why" => cmd_why(&args),
         "serve" => cmd_serve(&args),
         "frontdoor" => cmd_frontdoor(&args),
         _ => {
@@ -187,7 +201,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let replan = cfg.replan;
     let clusters = cfg.clusters;
     let sc = Scenario::build(cfg);
-    let m = octopinf::sim::run_with(&sc, kind, sim_jobs);
+    let m = if let Some(path) = args.get("trace") {
+        let (m, parts) = octopinf::sim::run_traced_with(&sc, kind, sim_jobs);
+        write_trace(path, &parts)?;
+        m
+    } else {
+        octopinf::sim::run_with(&sc, kind, sim_jobs)
+    };
     let mut t = Table::new(vec!["metric", "value"]);
     t.row(vec!["scheduler".to_string(), kind.label().to_string()]);
     t.row(vec!["replan".into(), replan.label().to_string()]);
@@ -204,8 +224,42 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     t.row(vec!["filtered".into(), m.filtered.to_string()]);
     println!("{}", t.to_markdown());
     println!("\nlatency histogram: {}", m.latency_hist.sparkline());
+    print_attribution(&m);
     // Bit-exact run fingerprint — must not move across --sim-jobs values.
     println!("digest: {:016x}", m.digest());
+    Ok(())
+}
+
+/// Render the per-component latency decomposition (always on in the
+/// engine; empty only when nothing completed).
+fn print_attribution(m: &octopinf::metrics::RunMetrics) {
+    let a = &m.attrib;
+    if a.transfer.is_empty() {
+        return;
+    }
+    println!(
+        "attribution p50/p95 (ms): transfer {}/{}  queue {}/{}  exec {}/{}",
+        fnum(a.transfer.p50(), 1),
+        fnum(a.transfer.p95(), 1),
+        fnum(a.queue.p50(), 1),
+        fnum(a.queue.p95(), 1),
+        fnum(a.exec.p50(), 1),
+        fnum(a.exec.p95(), 1),
+    );
+    if a.misses() > 0 {
+        println!("slo-miss dominant causes: {}", a.miss_breakdown());
+    }
+}
+
+/// Export per-partition traces as Chrome-trace JSON, re-validating the
+/// bytes before they land on disk.
+fn write_trace(path: &str, parts: &[Vec<octopinf::obs::TraceEvent>]) -> Result<()> {
+    let json = octopinf::obs::chrome_trace(parts);
+    octopinf::obs::validate_json(&json)
+        .map_err(|e| anyhow!("trace export produced invalid JSON: {e}"))?;
+    std::fs::write(path, &json)?;
+    let n: usize = parts.iter().map(Vec::len).sum();
+    println!("wrote {path} ({n} trace events, {} partitions)", parts.len());
     Ok(())
 }
 
@@ -264,6 +318,24 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         // the string must replay exactly the failing configuration.
         let mode = if r.contains(":replan=") { spec.cfg.replan } else { mode };
         println!("replaying {spec} [{}]\n", mode.label());
+        if let Some(path) = args.get("trace") {
+            let mut tspec = spec.clone();
+            tspec.cfg.replan = mode;
+            let (tm, treport, parts) =
+                octopinf::experiments::fuzz::traced_replay(&tspec, sim_jobs);
+            write_trace(path, &parts)?;
+            println!(
+                "traced replay [octopinf]: {} completions, digest {:016x}",
+                tm.completed(),
+                tm.digest()
+            );
+            if !treport.ok() {
+                return Err(anyhow!(
+                    "invariant violations during traced replay:\n{}",
+                    treport.violations.join("\n")
+                ));
+            }
+        }
         let out = conformance_round_with(&spec, mode, sim_jobs);
         if out.ok() {
             println!(
@@ -276,6 +348,11 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         return Err(anyhow!("conformance failed:\n{}", out.describe_failures()));
     }
 
+    if args.get("trace").is_some() {
+        return Err(anyhow!(
+            "--trace requires --repro (trace one scenario, not a sweep)"
+        ));
+    }
     let n = args.get_usize("scenarios", 50);
     let seed0 = args.get_u64("seed0", 0xDEAD_BEEF);
     let clusters = args.get_usize("clusters", 1);
@@ -366,6 +443,83 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     // Bit-exact run fingerprint; ci.sh diffs this line across --sim-jobs
     // values.
     println!("digest: {:016x}", experiments::chaos_digest(&cmps));
+    Ok(())
+}
+
+/// Postmortem for one repro string: traced replay under the reference
+/// scheduler, latency decomposed per component, SLO misses attributed to
+/// their dominant cause, plan rounds tallied by trigger and path.
+fn cmd_why(args: &Args) -> Result<()> {
+    use octopinf::experiments::fuzz::traced_replay;
+    use octopinf::obs::{RoundPath, TraceEvent};
+    use octopinf::sim::FuzzSpec;
+
+    let r = args.get("repro").ok_or_else(|| {
+        anyhow!(
+            "why requires --repro fuzz:v1:seed=N\
+             [:replan=drift][:faults=M][:order=K][:horizon=H][:clusters=C]"
+        )
+    })?;
+    let spec = FuzzSpec::from_repro(r)
+        .ok_or_else(|| anyhow!("bad repro string {r:?}"))?;
+    let sim_jobs = args.get_usize("sim-jobs", 1);
+    println!("postmortem for {spec}\n");
+    let (m, report, parts) = traced_replay(&spec, sim_jobs);
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["completed(obj)".to_string(), m.completed().to_string()]);
+    t.row(vec!["on_time".into(), m.on_time.to_string()]);
+    t.row(vec!["late".into(), m.late.to_string()]);
+    t.row(vec!["dropped".into(), m.dropped.to_string()]);
+    t.row(vec!["lost_to_fault".into(), m.lost_to_fault.to_string()]);
+    t.row(vec!["violation_rate".into(), fnum(m.violation_rate(), 3)]);
+    t.row(vec!["latency_p50(ms)".into(), fnum(m.latency.p50(), 1)]);
+    t.row(vec!["latency_p95(ms)".into(), fnum(m.latency.p95(), 1)]);
+    t.row(vec!["latency_p99(ms)".into(), fnum(m.latency.p99(), 1)]);
+    println!("{}", t.to_markdown());
+    println!();
+    print_attribution(&m);
+    if m.attrib.misses() == 0 {
+        println!("no SLO misses: every completed query met its deadline");
+    }
+
+    // Control-plane provenance straight from the trace's Plan events.
+    let mut rounds = 0usize;
+    let mut repairs = 0usize;
+    let mut migrations = 0u64;
+    let mut by_trigger: std::collections::BTreeMap<&str, usize> =
+        std::collections::BTreeMap::new();
+    for ev in parts.iter().flatten() {
+        if let TraceEvent::Plan { trigger, path, migrations: mig, .. } = ev {
+            rounds += 1;
+            if *path == RoundPath::Repair {
+                repairs += 1;
+            }
+            migrations += u64::from(*mig);
+            *by_trigger.entry(trigger.label()).or_insert(0) += 1;
+        }
+    }
+    let triggers: Vec<String> = by_trigger
+        .iter()
+        .map(|(k, v)| format!("{k} {v}"))
+        .collect();
+    println!(
+        "control plane: {rounds} plan rounds ({repairs} repair, {} full), \
+         {migrations} group migrations; triggers: {}",
+        rounds - repairs,
+        triggers.join(" / ")
+    );
+
+    if let Some(path) = args.get("trace") {
+        write_trace(path, &parts)?;
+    }
+    if !report.ok() {
+        return Err(anyhow!(
+            "invariant violations during replay (flight recorder dumped above):\n{}",
+            report.violations.join("\n")
+        ));
+    }
+    println!("invariants: clean ({} completions)", report.completed_queries);
     Ok(())
 }
 
@@ -514,6 +668,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ]);
         }
         println!("\n{}", tt.to_markdown());
+    }
+    if let Some(path) = args.get("metrics-out") {
+        let text = octopinf::obs::promtext::render_serve_report(&report);
+        std::fs::write(path, &text)?;
+        println!("\nwrote {path} (Prometheus text exposition)");
     }
     Ok(())
 }

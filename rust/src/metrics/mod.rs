@@ -2,6 +2,7 @@
 //! per second), end-to-end latency distributions, and total GPU memory
 //! allocation — plus the per-minute timelines behind Fig. 6d/7/11.
 
+use crate::obs::attrib::Attribution;
 use crate::util::stats::{Histogram, QuantileSketch};
 use crate::Ms;
 
@@ -41,6 +42,13 @@ pub struct RunMetrics {
     pub timeline: Vec<(f64, f64)>,
     /// Mean GPU utilization across the run, [0,1] of cluster capacity.
     pub mean_gpu_util: f64,
+    /// Exact per-component latency decomposition (transfer / queue wait /
+    /// GPU exec) plus the dominant-cause breakdown of SLO misses. The
+    /// component terms of every sample fold bit-for-bit to the latency
+    /// recorded alongside it (see `obs::attrib`), which the invariant
+    /// engine reconciles. Deliberately **excluded from `digest()`**:
+    /// digests predating this field must stay byte-identical.
+    pub attrib: Attribution,
 }
 
 impl RunMetrics {
@@ -57,6 +65,7 @@ impl RunMetrics {
             peak_memory_mb: 0.0,
             timeline: Vec::new(),
             mean_gpu_util: 0.0,
+            attrib: Attribution::default(),
         }
     }
 
@@ -86,6 +95,24 @@ impl RunMetrics {
     /// (no pipeline admission, no engine work, no latency sample).
     pub fn record_filtered(&mut self, n: u64) {
         self.filtered += n;
+    }
+
+    /// Record the exact component decomposition of one completed query
+    /// (`n` work units). Callers must pass terms already closed with
+    /// [`crate::obs::close_exact`] so `(transfer + queue) + exec` equals
+    /// the latency recorded via [`record_n`](Self::record_n) bit-for-bit.
+    pub fn record_attrib(
+        &mut self,
+        transfer_ms: Ms,
+        queue_ms: Ms,
+        exec_ms: Ms,
+        n: u64,
+        missed: bool,
+    ) {
+        if n == 0 {
+            return;
+        }
+        self.attrib.record(transfer_ms, queue_ms, exec_ms, n, missed);
     }
 
     /// Completed queries (on-time + late) — the conservation-side
@@ -166,6 +193,7 @@ impl RunMetrics {
             self.timeline[i].0 += w;
             self.timeline[i].1 += e;
         }
+        self.attrib.merge(&other.attrib);
     }
 
     /// 64-bit fingerprint of every field — counters, the exact bit
@@ -305,6 +333,46 @@ mod tests {
         let mut m = mk();
         m.record(Outcome::Dropped, 0.0);
         assert_ne!(m.digest(), mk().digest());
+    }
+
+    #[test]
+    fn attribution_rides_along_without_touching_the_digest() {
+        let mk = || {
+            let mut m = RunMetrics::new(10_000.0);
+            m.record_n(Outcome::OnTime, 80.0, 3);
+            m.record_n(Outcome::Late, 900.0, 2);
+            m
+        };
+        let base = mk().digest();
+        let mut m = mk();
+        m.record_attrib(10.0, 20.0, 50.0, 3, false);
+        m.record_attrib(100.0, 700.0, 100.0, 2, true);
+        assert_eq!(
+            m.digest(),
+            base,
+            "attribution must never perturb pre-existing digests"
+        );
+        assert_eq!(m.attrib.transfer.count(), 5);
+        assert_eq!(m.attrib.misses(), 2);
+        assert_eq!(m.attrib.miss_queue, 2, "queue was the dominant term");
+        // Merge folds the attribution too.
+        let mut a = mk();
+        a.record_attrib(1.0, 1.0, 78.0, 1, false);
+        a.merge(&m);
+        assert_eq!(a.attrib.exec.count(), 6);
+        assert_eq!(a.attrib.misses(), 2);
+        assert_eq!(a.digest(), base, "merged digest still attribution-blind");
+    }
+
+    #[test]
+    fn seconds_scale_latency_is_visible_in_the_histogram() {
+        // Regression for the 1 s-range latency histogram: a 5 s latency
+        // must surface through the overflow counter, not vanish.
+        let mut m = RunMetrics::new(10_000.0);
+        m.record(Outcome::Late, 5000.0);
+        assert_eq!(m.latency_hist.overflow(), 1);
+        assert_eq!(m.latency_hist.total(), 1);
+        assert!(m.latency_hist.sparkline().contains("(+1 > 1000)"));
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! SLO-miss attribution: exact decomposition of end-to-end latency.
+//!
+//! Every completed query's latency is split into the three lifecycle
+//! segments the tracer also spans — link **transfer**, **queue** wait,
+//! and GPU **exec** — with the hard guarantee that the canonical fold
+//! `(transfer + queue) + exec` equals the reported end-to-end latency
+//! **bit-for-bit** (enforced by `InvariantChecker::on_attrib`). The
+//! segments are measured as differences of the same event-clock stamps
+//! the latency itself is computed from, so they agree to fp rounding;
+//! [`close_exact`] then retires that last-ulp residue deterministically.
+//! A residue too large to be rounding is a bookkeeping bug (a segment
+//! was skipped), and is deliberately left in place for the invariant
+//! hook to trip on.
+
+use crate::util::stats::QuantileSketch;
+
+/// Relative residue budget: honest fp rounding across a handful of
+/// additions is ~1e-16 relative; anything past 1e-9 is a lost segment.
+const RESIDUE_TOL: f64 = 1e-9;
+
+/// Latency component, in dominant-cause order of report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Component {
+    Transfer,
+    Queue,
+    Exec,
+}
+
+impl Component {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Transfer => "transfer",
+            Component::Queue => "queue",
+            Component::Exec => "exec",
+        }
+    }
+}
+
+/// The canonical fold the exactness contract is stated over. Everything
+/// that checks or reports the decomposition must sum in this order.
+#[inline]
+pub fn fold(transfer: f64, queue: f64, exec: f64) -> f64 {
+    (transfer + queue) + exec
+}
+
+fn next_up(x: f64) -> f64 {
+    // Positive finite domain only (latency segments).
+    f64::from_bits(x.to_bits() + 1)
+}
+
+fn next_down(x: f64) -> f64 {
+    if x == 0.0 {
+        return -f64::MIN_POSITIVE;
+    }
+    f64::from_bits(x.to_bits() - 1)
+}
+
+/// Return `exec` adjusted so that [`fold`]`(transfer, queue, exec)`
+/// equals `latency` bit-for-bit, absorbing the fp rounding residue of
+/// the measured segments into the exec term (the largest one for any
+/// query that actually ran). When the residue exceeds the rounding
+/// budget the raw `exec` is returned unchanged, leaving the mismatch
+/// visible to the invariant engine.
+pub fn close_exact(latency: f64, transfer: f64, queue: f64, exec: f64) -> f64 {
+    let s = transfer + queue;
+    let residue = latency - (s + exec);
+    if residue == 0.0 {
+        return exec;
+    }
+    if !residue.is_finite() || residue.abs() > RESIDUE_TOL * latency.abs().max(1.0) {
+        return exec;
+    }
+    // Fast path: one correction step almost always lands exactly.
+    let ex = exec + residue;
+    if s + ex == latency {
+        return ex;
+    }
+    // Guaranteed fallback. The reals y with fl(s + y) == latency form
+    // latency's rounding interval shifted by s: half-width ulp(latency)/2
+    // around the exact value latency - s. The rounded remainder
+    // fl(latency - s) is within ulp/2 of that center, so it sits inside
+    // the interval — or exactly on its boundary when a round-to-even tie
+    // pushes `s + cand` to the neighbouring f64, in which case the grid
+    // point one ulp inward folds exactly. Walk a few ulps to cover it.
+    let cand = latency - s;
+    if s + cand == latency {
+        return cand;
+    }
+    let (mut lo, mut hi) = (cand, cand);
+    for _ in 0..4 {
+        lo = next_down(lo);
+        hi = next_up(hi);
+        if s + lo == latency {
+            return lo;
+        }
+        if s + hi == latency {
+            return hi;
+        }
+    }
+    exec // unreachable for rounding-sized residue; leave mismatch visible
+}
+
+/// Per-component latency sketches plus the dominant-cause breakdown of
+/// SLO misses. Lives on `RunMetrics`; merged across partitions, kept
+/// **out** of `RunMetrics::digest` so pre-existing digests are
+/// byte-identical with or without this PR's instrumentation.
+#[derive(Clone, Debug, Default)]
+pub struct Attribution {
+    pub transfer: QuantileSketch,
+    pub queue: QuantileSketch,
+    pub exec: QuantileSketch,
+    /// SLO-missed units (same unit as `RunMetrics::late`: objects) by
+    /// dominant component. Their sum equals `late` exactly — checked by
+    /// `InvariantChecker::finish`.
+    pub miss_transfer: u64,
+    pub miss_queue: u64,
+    pub miss_exec: u64,
+}
+
+impl Attribution {
+    /// Record one completed query: `n` units (objects) with the given
+    /// exact decomposition; `missed` marks an SLO miss.
+    pub fn record(&mut self, transfer: f64, queue: f64, exec: f64, n: u64, missed: bool) {
+        self.transfer.push_n(transfer, n);
+        self.queue.push_n(queue, n);
+        self.exec.push_n(exec, n);
+        if missed {
+            match Self::dominant(transfer, queue, exec) {
+                Component::Transfer => self.miss_transfer += n,
+                Component::Queue => self.miss_queue += n,
+                Component::Exec => self.miss_exec += n,
+            }
+        }
+    }
+
+    /// Largest component wins; ties resolve in declaration order
+    /// (transfer, then queue, then exec) so the breakdown is
+    /// deterministic.
+    pub fn dominant(transfer: f64, queue: f64, exec: f64) -> Component {
+        if transfer >= queue && transfer >= exec {
+            Component::Transfer
+        } else if queue >= exec {
+            Component::Queue
+        } else {
+            Component::Exec
+        }
+    }
+
+    pub fn merge(&mut self, other: &Attribution) {
+        self.transfer.merge(&other.transfer);
+        self.queue.merge(&other.queue);
+        self.exec.merge(&other.exec);
+        self.miss_transfer += other.miss_transfer;
+        self.miss_queue += other.miss_queue;
+        self.miss_exec += other.miss_exec;
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.miss_transfer + self.miss_queue + self.miss_exec
+    }
+
+    /// `"queue 12 / exec 3 / transfer 0"`-style dominant-cause summary,
+    /// largest bucket first (ties in declaration order).
+    pub fn miss_breakdown(&self) -> String {
+        let mut parts = [
+            (self.miss_transfer, "transfer"),
+            (self.miss_queue, "queue"),
+            (self.miss_exec, "exec"),
+        ];
+        parts.sort_by(|a, b| b.0.cmp(&a.0));
+        parts
+            .iter()
+            .map(|(c, l)| format!("{l} {c}"))
+            .collect::<Vec<_>>()
+            .join(" / ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_exact_retires_rounding_residue_bit_for_bit() {
+        // Segments measured as stamp differences: honest accounting.
+        let (t0, t1, t2, t3) = (3.1, 7.77, 123.456789, 5000.000123);
+        let (tr, qu, ex) = (t1 - t0, t2 - t1, t3 - t2);
+        let latency = t3 - t0;
+        let ex2 = close_exact(latency, tr, qu, ex);
+        assert_eq!(fold(tr, qu, ex2).to_bits(), latency.to_bits());
+        // And across a seeded sweep of awkward magnitudes.
+        let mut x = 0.1234567_f64;
+        for i in 0..2000 {
+            x = (x * 1.0000931 + 0.013) % 1.0e4;
+            let a = x;
+            let b = x * 0.37 + 0.001 * i as f64;
+            let c = x * 1.91 + 7.3;
+            let lat = (a + b) + c + (x * 1e-13 - 5e-14); // inject residue
+            let got = close_exact(lat, a, b, c);
+            assert_eq!(
+                fold(a, b, got).to_bits(),
+                lat.to_bits(),
+                "i={i} a={a} b={b} c={c} lat={lat}"
+            );
+        }
+    }
+
+    #[test]
+    fn close_exact_refuses_to_hide_a_lost_segment() {
+        // A whole missing queue segment is far beyond rounding: exec must
+        // come back unchanged so the invariant hook sees the mismatch.
+        let (tr, qu, ex) = (10.0, 0.0, 30.0);
+        let latency = 55.0; // 15 ms unaccounted
+        let got = close_exact(latency, tr, qu, ex);
+        assert_eq!(got, ex);
+        assert_ne!(fold(tr, qu, got).to_bits(), latency.to_bits());
+    }
+
+    #[test]
+    fn dominant_cause_and_breakdown_are_deterministic() {
+        assert_eq!(Attribution::dominant(5.0, 5.0, 1.0), Component::Transfer);
+        assert_eq!(Attribution::dominant(1.0, 5.0, 5.0), Component::Queue);
+        assert_eq!(Attribution::dominant(1.0, 2.0, 5.0), Component::Exec);
+        let mut a = Attribution::default();
+        a.record(1.0, 8.0, 2.0, 3, true); // queue-dominant miss, 3 units
+        a.record(1.0, 2.0, 9.0, 1, true); // exec-dominant miss
+        a.record(1.0, 2.0, 9.0, 4, false); // on time: no miss bucket
+        assert_eq!(a.misses(), 4);
+        assert_eq!(a.miss_breakdown(), "queue 3 / exec 1 / transfer 0");
+        assert_eq!(a.transfer.count(), 8);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_sketches() {
+        let mut a = Attribution::default();
+        a.record(1.0, 2.0, 3.0, 2, true);
+        let mut b = Attribution::default();
+        b.record(4.0, 1.0, 1.0, 5, true);
+        a.merge(&b);
+        assert_eq!(a.miss_exec, 2);
+        assert_eq!(a.miss_transfer, 5);
+        assert_eq!(a.queue.count(), 7);
+    }
+}

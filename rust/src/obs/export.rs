@@ -1,0 +1,440 @@
+//! Chrome-trace / Perfetto JSON export of a per-partition trace.
+//!
+//! Layout: one Chrome *process* per simulator partition (`pid` =
+//! partition index), and within it lane `tid 0` for the control plane
+//! (planner rounds), `tid 1 + g` for GPU `g` (width counters + batch
+//! marks), and `tid QUERY_TID_BASE + qid` for each query's lifecycle
+//! spans. Timestamps are the sim clock in microseconds — Chrome's native
+//! unit — rendered with `f64`'s shortest-round-trip `Display`, so the
+//! byte output is a pure function of the event list. Partitions are
+//! emitted in partition order; within a partition, events in recorded
+//! order: the whole file is byte-identical at any `--sim-jobs`.
+//!
+//! The in-tree [`validate_json`] parser (no external crates by design)
+//! backs the well-formedness tests and the CLI's post-write check.
+
+use std::fmt::Write as _;
+
+use super::span::{Phase, TraceEvent};
+
+/// Query lanes start here, leaving tids below for control + GPU lanes.
+pub const QUERY_TID_BASE: u64 = 1000;
+
+fn push_common(s: &mut String, name: &str, ph: &str, t_ms: f64, pid: usize, tid: u64) {
+    let _ = write!(
+        s,
+        "{{\"name\":\"{name}\",\"ph\":\"{ph}\",\"ts\":{},\"pid\":{pid},\"tid\":{tid}",
+        t_ms * 1000.0
+    );
+}
+
+/// Render per-partition event lists as one Chrome-trace JSON document.
+pub fn chrome_trace(partitions: &[Vec<TraceEvent>]) -> String {
+    let mut s = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut sep = |s: &mut String, first: &mut bool| {
+        if *first {
+            *first = false;
+        } else {
+            s.push(',');
+        }
+        s.push('\n');
+    };
+    for (pid, events) in partitions.iter().enumerate() {
+        // Process + named-lane metadata, derived from the events so the
+        // header is as deterministic as the payload.
+        sep(&mut s, &mut first);
+        let _ = write!(
+            s,
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"args\":{{\"name\":\"partition {pid}\"}}}}"
+        );
+        sep(&mut s, &mut first);
+        let _ = write!(
+            s,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"args\":{{\"name\":\"control plane\"}}}}"
+        );
+        let mut gpus: Vec<u16> = events
+            .iter()
+            .filter_map(|ev| match *ev {
+                TraceEvent::Batch { gpu, .. } | TraceEvent::GpuWidth { gpu, .. } => {
+                    Some(gpu)
+                }
+                _ => None,
+            })
+            .collect();
+        gpus.sort_unstable();
+        gpus.dedup();
+        for g in gpus {
+            sep(&mut s, &mut first);
+            let _ = write!(
+                s,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\"args\":{{\"name\":\"gpu {g}\"}}}}",
+                1 + g as u64
+            );
+        }
+        for ev in events {
+            sep(&mut s, &mut first);
+            match *ev {
+                TraceEvent::Span { t, qid, kind, phase, pipeline, model } => {
+                    let ph = match phase {
+                        Phase::Begin => "B",
+                        Phase::End => "E",
+                    };
+                    push_common(&mut s, kind.label(), ph, t, pid, QUERY_TID_BASE + qid);
+                    let _ = write!(
+                        s,
+                        ",\"cat\":\"query\",\"args\":{{\"p\":{pipeline},\"m\":{model}}}}}"
+                    );
+                }
+                TraceEvent::Mark { t, qid, kind, pipeline, model } => {
+                    push_common(&mut s, kind.label(), "i", t, pid, QUERY_TID_BASE + qid);
+                    let _ = write!(
+                        s,
+                        ",\"s\":\"t\",\"cat\":\"query\",\"args\":{{\"p\":{pipeline},\"m\":{model}}}}}"
+                    );
+                }
+                TraceEvent::Batch { t, pipeline, model, gpu, n } => {
+                    push_common(&mut s, "batch", "i", t, pid, 1 + gpu as u64);
+                    let _ = write!(
+                        s,
+                        ",\"s\":\"t\",\"cat\":\"gpu\",\"args\":{{\"p\":{pipeline},\"m\":{model},\"n\":{n}}}}}"
+                    );
+                }
+                TraceEvent::GpuWidth { t, gpu, width } => {
+                    push_common(
+                        &mut s,
+                        &format!("gpu{gpu} width"),
+                        "C",
+                        t,
+                        pid,
+                        1 + gpu as u64,
+                    );
+                    let _ = write!(s, ",\"args\":{{\"width\":{width}}}}}");
+                }
+                TraceEvent::Plan { t, trigger, path, migrations } => {
+                    push_common(&mut s, "plan", "i", t, pid, 0);
+                    let _ = write!(
+                        s,
+                        ",\"s\":\"t\",\"cat\":\"control\",\"args\":{{\"trigger\":\"{}\",\"path\":\"{}\",\"migrations\":{migrations}}}}}",
+                        trigger.label(),
+                        path.label()
+                    );
+                }
+            }
+        }
+    }
+    s.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    s
+}
+
+/// Check that every `Begin` on a query lane is matched by a later `End`
+/// of the same kind on the same lane, with no `End` before its `Begin`
+/// and no nested spans on one lane. Returns the first offence found.
+pub fn check_balanced(events: &[TraceEvent]) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut open: HashMap<u64, super::span::SpanKind> = HashMap::new();
+    for ev in events {
+        if let TraceEvent::Span { qid, kind, phase, t, .. } = *ev {
+            match phase {
+                Phase::Begin => {
+                    if let Some(prev) = open.insert(qid, kind) {
+                        return Err(format!(
+                            "q={qid}: {} opened at t={t} while {} still open",
+                            kind.label(),
+                            prev.label()
+                        ));
+                    }
+                }
+                Phase::End => match open.remove(&qid) {
+                    Some(k) if k == kind => {}
+                    Some(k) => {
+                        return Err(format!(
+                            "q={qid}: {} closed at t={t} but {} was open",
+                            kind.label(),
+                            k.label()
+                        ))
+                    }
+                    None => {
+                        return Err(format!(
+                            "q={qid}: {} closed at t={t} with nothing open",
+                            kind.label()
+                        ))
+                    }
+                },
+            }
+        }
+    }
+    if !open.is_empty() {
+        // Deterministic pick for the message: smallest qid.
+        let qid = *open.keys().min().unwrap();
+        return Err(format!("q={qid}: {} never closed", open[&qid].label()));
+    }
+    Ok(())
+}
+
+/// Minimal strict JSON validator (objects, arrays, strings, numbers,
+/// bools, null) — enough to certify the exporter's output parses.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let r = parse_value(b, &mut i)?;
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes at offset {i}"));
+    }
+    let _ = r;
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<(), String> {
+    skip_ws(b, i);
+    match b.get(*i) {
+        Some(b'{') => parse_object(b, i),
+        Some(b'[') => parse_array(b, i),
+        Some(b'"') => parse_string(b, i),
+        Some(b't') => parse_lit(b, i, "true"),
+        Some(b'f') => parse_lit(b, i, "false"),
+        Some(b'n') => parse_lit(b, i, "null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(b, i),
+        Some(c) => Err(format!("unexpected byte {:?} at offset {i}", *c as char)),
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn parse_lit(b: &[u8], i: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(())
+    } else {
+        Err(format!("bad literal at offset {i}"))
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<(), String> {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    while *i < b.len() {
+        match b[*i] {
+            b'"' => {
+                *i += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *i += 2; // exporter only emits simple escapes
+            }
+            _ => *i += 1,
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_number(b: &[u8], i: &mut usize) -> Result<(), String> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    let mut digits = 0;
+    while *i < b.len() && b[*i].is_ascii_digit() {
+        *i += 1;
+        digits += 1;
+    }
+    if digits == 0 {
+        return Err(format!("bad number at offset {start}"));
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        let mut frac = 0;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+            frac += 1;
+        }
+        if frac == 0 {
+            return Err(format!("bad fraction at offset {start}"));
+        }
+    }
+    if matches!(b.get(*i), Some(b'e') | Some(b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+') | Some(b'-')) {
+            *i += 1;
+        }
+        let mut exp = 0;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+            exp += 1;
+        }
+        if exp == 0 {
+            return Err(format!("bad exponent at offset {start}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_array(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // '['
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b']') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        parse_value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => {
+                *i += 1;
+            }
+            Some(b']') => {
+                *i += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or ']' at offset {i}")),
+        }
+    }
+}
+
+fn parse_object(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // '{'
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b'}') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, i);
+        if b.get(*i) != Some(&b'"') {
+            return Err(format!("expected object key at offset {i}"));
+        }
+        parse_string(b, i)?;
+        skip_ws(b, i);
+        if b.get(*i) != Some(&b':') {
+            return Err(format!("expected ':' at offset {i}"));
+        }
+        *i += 1;
+        parse_value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => {
+                *i += 1;
+            }
+            Some(b'}') => {
+                *i += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or '}}' at offset {i}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::{MarkKind, PlanTrigger, RoundPath, SpanKind};
+    use super::*;
+
+    fn sample() -> Vec<Vec<TraceEvent>> {
+        vec![
+            vec![
+                TraceEvent::Mark {
+                    t: 0.5,
+                    qid: 1,
+                    kind: MarkKind::Capture,
+                    pipeline: 0,
+                    model: 0,
+                },
+                TraceEvent::Span {
+                    t: 0.5,
+                    qid: 1,
+                    kind: SpanKind::Transfer,
+                    phase: Phase::Begin,
+                    pipeline: 0,
+                    model: 0,
+                },
+                TraceEvent::Span {
+                    t: 2.25,
+                    qid: 1,
+                    kind: SpanKind::Transfer,
+                    phase: Phase::End,
+                    pipeline: 0,
+                    model: 0,
+                },
+                TraceEvent::Batch { t: 3.0, pipeline: 0, model: 0, gpu: 2, n: 4 },
+                TraceEvent::GpuWidth { t: 3.0, gpu: 2, width: 0.75 },
+                TraceEvent::Plan {
+                    t: 10.0,
+                    trigger: PlanTrigger::Initial,
+                    path: RoundPath::Full,
+                    migrations: 0,
+                },
+            ],
+            vec![TraceEvent::Mark {
+                t: 1.0,
+                qid: 1,
+                kind: MarkKind::Sink,
+                pipeline: 0,
+                model: 1,
+            }],
+        ]
+    }
+
+    #[test]
+    fn export_is_valid_json_and_partition_ordered() {
+        let json = chrome_trace(&sample());
+        validate_json(&json).unwrap();
+        assert!(json.contains("\"pid\":0"));
+        assert!(json.contains("\"pid\":1"));
+        assert!(
+            json.find("\"pid\":0").unwrap() < json.find("\"pid\":1").unwrap(),
+            "partition 0 events precede partition 1"
+        );
+        // Sim-clock ms become Chrome µs.
+        assert!(json.contains("\"ts\":2250"), "{json}");
+        assert!(json.contains("partition 1"));
+        assert!(json.contains("gpu 2"));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = chrome_trace(&sample());
+        let b = chrome_trace(&sample());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn balance_checker_flags_each_offence() {
+        let ok = sample();
+        check_balanced(&ok[0]).unwrap();
+        let unclosed = vec![TraceEvent::Span {
+            t: 1.0,
+            qid: 9,
+            kind: SpanKind::Exec,
+            phase: Phase::Begin,
+            pipeline: 0,
+            model: 0,
+        }];
+        assert!(check_balanced(&unclosed).unwrap_err().contains("never closed"));
+        let orphan = vec![TraceEvent::Span {
+            t: 1.0,
+            qid: 9,
+            kind: SpanKind::Exec,
+            phase: Phase::End,
+            pipeline: 0,
+            model: 0,
+        }];
+        assert!(check_balanced(&orphan).unwrap_err().contains("nothing open"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        validate_json("{\"a\":[1,2.5,-3e2,\"x\",true,null]}").unwrap();
+        assert!(validate_json("{\"a\":1,}").is_err());
+        assert!(validate_json("[1 2]").is_err());
+        assert!(validate_json("{\"a\":01x}").is_err());
+        assert!(validate_json("\"unterminated").is_err());
+        assert!(validate_json("{} trailing").is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Deterministic observability: span tracing, SLO-miss attribution, and
+//! the violation flight recorder.
+//!
+//! Three facilities, one discipline — observation never perturbs the
+//! observed run:
+//!
+//! * **Span tracing** ([`sink::Tracer`], [`span`], [`export`]) — an
+//!   `Option`-flagged hook (same pattern as the invariant engine) that
+//!   records typed, sim-clock-stamped events per query (capture, link
+//!   transfer, queue wait, batch assembly, GPU exec, sink), per GPU
+//!   (width counters, batch marks), and per planner round (trigger,
+//!   repair-vs-full path, migration count). `octopinf simulate|fuzz
+//!   --trace out.json` exports Chrome-trace/Perfetto JSON, merged in
+//!   partition order so the bytes are identical at any `--sim-jobs`.
+//! * **SLO-miss attribution** ([`attrib`]) — every completed query's
+//!   latency decomposed into transfer/queue/exec terms whose canonical
+//!   fold equals the end-to-end latency bit-for-bit, reconciled by
+//!   `InvariantChecker::on_attrib` and surfaced through `RunMetrics`,
+//!   `octopinf simulate`, and `octopinf why --repro <string>`.
+//! * **Flight recorder** ([`recorder::FlightRecorder`]) — a fixed ring
+//!   of recent trace events per partition, armed automatically with the
+//!   invariant engine and dumped (with the one-line repro string) when a
+//!   check trips, so a violation arrives with its event context.
+//!
+//! [`promtext`] is the serving-path counterpart: the `ServeReport` →
+//! Prometheus text-exposition snapshot behind `serve --metrics-out`.
+
+pub mod attrib;
+pub mod export;
+pub mod promtext;
+pub mod recorder;
+pub mod sink;
+pub mod span;
+
+pub use attrib::{close_exact, Attribution, Component};
+pub use export::{check_balanced, chrome_trace, validate_json};
+pub use recorder::FlightRecorder;
+pub use sink::{TraceMode, Tracer};
+pub use span::{MarkKind, Phase, PlanTrigger, RoundPath, SpanKind, TraceEvent};

@@ -1,0 +1,287 @@
+//! Prometheus text-exposition rendering of a serving-session report —
+//! the scrape surface behind `octopinf serve --metrics-out <path>`.
+//!
+//! Writer and parser are both in-tree (zero-dependency build); the
+//! parser exists so the format round-trip is testable, and doubles as a
+//! reader for anything downstream that wants the snapshot back as
+//! numbers. Only the subset of the exposition format we emit is parsed:
+//! `# HELP`/`# TYPE` comments, and `name{label="v",...} value` samples.
+
+use std::fmt::Write as _;
+
+use crate::serving::ServeReport;
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render one [`ServeReport`] in Prometheus text exposition format.
+/// Map-valued series are emitted in sorted key order, so the snapshot is
+/// deterministic for a given report.
+pub fn render_serve_report(r: &ServeReport) -> String {
+    let mut out = String::new();
+    header(
+        &mut out,
+        "octopinf_requests_total",
+        "counter",
+        "Requests by terminal outcome.",
+    );
+    for (outcome, v) in [
+        ("submitted", r.submitted),
+        ("served", r.served),
+        ("on_time", r.on_time),
+        ("filtered", r.filtered),
+        ("throttled", r.throttled),
+        ("rejected", r.rejected),
+        ("shed", r.shed),
+        ("failed", r.failed),
+    ] {
+        let _ = writeln!(out, "octopinf_requests_total{{outcome=\"{outcome}\"}} {v}");
+    }
+    header(
+        &mut out,
+        "octopinf_cache_hits_total",
+        "counter",
+        "Filtered answers served from the cross-stream result cache.",
+    );
+    let _ = writeln!(out, "octopinf_cache_hits_total {}", r.cache_hits);
+
+    header(
+        &mut out,
+        "octopinf_model_requests_total",
+        "counter",
+        "Engine-served requests per model.",
+    );
+    let mut models: Vec<_> = r.per_model.iter().collect();
+    models.sort();
+    for (m, c) in models {
+        let _ = writeln!(out, "octopinf_model_requests_total{{model=\"{m}\"}} {c}");
+    }
+
+    header(
+        &mut out,
+        "octopinf_tenant_requests_total",
+        "counter",
+        "Per-tenant requests by terminal outcome.",
+    );
+    for (t, lane) in &r.per_tenant {
+        for (outcome, v) in [
+            ("submitted", lane.submitted),
+            ("served", lane.served),
+            ("on_time", lane.on_time),
+            ("filtered", lane.filtered),
+            ("throttled", lane.throttled),
+            ("rejected", lane.rejected),
+            ("shed", lane.shed),
+            ("failed", lane.failed),
+        ] {
+            let _ = writeln!(
+                out,
+                "octopinf_tenant_requests_total{{tenant=\"{t}\",outcome=\"{outcome}\"}} {v}"
+            );
+        }
+    }
+
+    header(
+        &mut out,
+        "octopinf_batches_total",
+        "counter",
+        "Executed batches by assembled size.",
+    );
+    let mut hist: Vec<_> = r.batch_hist.iter().collect();
+    hist.sort();
+    for (b, c) in hist {
+        let _ = writeln!(out, "octopinf_batches_total{{size=\"{b}\"}} {c}");
+    }
+
+    for (name, help, sketch) in [
+        (
+            "octopinf_request_latency_ms",
+            "End-to-end request latency quantiles (engine-served).",
+            &r.latency,
+        ),
+        (
+            "octopinf_queue_wait_ms",
+            "Front-door queue wait quantiles (dequeue minus submit).",
+            &r.queue_wait,
+        ),
+        (
+            "octopinf_exec_ms",
+            "Engine batch execution time quantiles.",
+            &r.exec_time,
+        ),
+    ] {
+        header(&mut out, name, "gauge", help);
+        if !sketch.is_empty() {
+            for (q, v) in [
+                (0.5, sketch.p50()),
+                (0.95, sketch.p95()),
+                (0.99, sketch.p99()),
+            ] {
+                let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+            }
+        }
+    }
+
+    header(
+        &mut out,
+        "octopinf_shard_peak_depth",
+        "gauge",
+        "Peak queued requests observed per batcher shard.",
+    );
+    for (s, d) in r.peak_shard_depth.iter().enumerate() {
+        let _ = writeln!(out, "octopinf_shard_peak_depth{{shard=\"{s}\"}} {d}");
+    }
+
+    header(
+        &mut out,
+        "octopinf_slo_attainment",
+        "gauge",
+        "On-time fraction of answered requests.",
+    );
+    let _ = writeln!(out, "octopinf_slo_attainment {}", r.slo_attainment());
+    header(
+        &mut out,
+        "octopinf_wall_ms",
+        "gauge",
+        "Serving session wall-clock duration.",
+    );
+    let _ = writeln!(out, "octopinf_wall_ms {}", r.wall_ms);
+    out
+}
+
+/// Parse the exposition subset [`render_serve_report`] emits.
+pub fn parse(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value", ln + 1))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|e| format!("line {}: bad value ({e})", ln + 1))?;
+        let (name, labels) = match series.split_once('{') {
+            None => (series.to_string(), Vec::new()),
+            Some((name, rest)) => {
+                let body = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {}: unterminated labels", ln + 1))?;
+                let mut labels = Vec::new();
+                for pair in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .ok_or_else(|| format!("line {}: bad label {pair:?}", ln + 1))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| {
+                            format!("line {}: unquoted label value {v:?}", ln + 1)
+                        })?;
+                    labels.push((k.to_string(), v.to_string()));
+                }
+                (name.to_string(), labels)
+            }
+        };
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {}: bad metric name {name:?}", ln + 1));
+        }
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ServeReport {
+        let mut r = ServeReport::default();
+        r.submitted = 100;
+        r.served = 80;
+        r.on_time = 75;
+        r.filtered = 10;
+        r.cache_hits = 4;
+        r.throttled = 5;
+        r.rejected = 3;
+        r.shed = 1;
+        r.failed = 1;
+        r.per_model.insert("det".into(), 60);
+        r.per_model.insert("cls".into(), 20);
+        r.lane(1).served = 40;
+        r.lane(1).submitted = 50;
+        *r.batch_hist.entry(8).or_default() += 3;
+        for i in 0..20 {
+            r.latency.push(5.0 + i as f64);
+            r.queue_wait.push(1.0 + i as f64 * 0.1);
+            r.exec_time.push(3.0);
+        }
+        r.peak_shard_depth = vec![7, 2];
+        r.wall_ms = 1234.5;
+        r
+    }
+
+    #[test]
+    fn round_trips_through_the_parser() {
+        let r = report();
+        let text = render_serve_report(&r);
+        let samples = parse(&text).unwrap();
+        let get = |name: &str, key: &str, val: &str| -> f64 {
+            samples
+                .iter()
+                .find(|s| s.name == name && s.label(key) == Some(val))
+                .unwrap_or_else(|| panic!("missing {name}{{{key}={val}}}"))
+                .value
+        };
+        assert_eq!(get("octopinf_requests_total", "outcome", "submitted"), 100.0);
+        assert_eq!(get("octopinf_requests_total", "outcome", "served"), 80.0);
+        assert_eq!(get("octopinf_model_requests_total", "model", "det"), 60.0);
+        assert_eq!(get("octopinf_tenant_requests_total", "outcome", "served"), 40.0);
+        assert_eq!(get("octopinf_batches_total", "size", "8"), 3.0);
+        assert_eq!(get("octopinf_shard_peak_depth", "shard", "0"), 7.0);
+        let wall = samples
+            .iter()
+            .find(|s| s.name == "octopinf_wall_ms")
+            .unwrap();
+        assert_eq!(wall.value, 1234.5);
+        let p50 = get("octopinf_request_latency_ms", "quantile", "0.5");
+        assert!(p50 > 0.0);
+        // Rendering a parsed-equal report again is byte-identical.
+        assert_eq!(text, render_serve_report(&r));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse("octopinf_x{a=b} 1").is_err(), "unquoted label value");
+        assert!(parse("octopinf_x 1 2 3").is_err(), "bad value");
+        assert!(parse("bad name 1").is_err());
+        assert!(parse("octopinf_x{a=\"1\" 2").is_err(), "unterminated labels");
+        // Comments and blanks are fine.
+        assert_eq!(parse("# TYPE x counter\n\n").unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! The violation flight recorder: a fixed-size ring of the most recent
+//! trace events per partition.
+//!
+//! The ring is always armed alongside the invariant engine, so when a
+//! conservation check (or the chaos harness) trips, the report is not a
+//! bare "violation at t=…" line but the event context that led up to it
+//! — plus the one-line repro string that replays the scenario. Recording
+//! is an index bump and a `Copy` store: cheap enough to ride every
+//! fuzz/chaos run without showing up in the dispatch hot path.
+
+use super::span::TraceEvent;
+
+/// Ring capacity: enough to cover several scheduling epochs of a busy
+/// partition while keeping the per-partition footprint a few KiB.
+pub const RING_CAP: usize = 256;
+
+/// Fixed-size overwrite ring of recent [`TraceEvent`]s.
+#[derive(Clone, Debug, Default)]
+pub struct FlightRecorder {
+    buf: Vec<TraceEvent>,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+    /// Total events ever recorded (≥ `buf.len()`).
+    total: u64,
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        self.total += 1;
+        if self.buf.len() < RING_CAP {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % RING_CAP;
+        }
+    }
+
+    /// Events currently held (≤ [`RING_CAP`]).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        out
+    }
+
+    /// Render the ring as the violation postscript: a header carrying the
+    /// repro string, then one line per retained event, oldest first.
+    pub fn dump(&self, repro: &str) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "flight recorder: {} of {} trace events (repro: {repro})",
+            self.len(),
+            self.total()
+        );
+        for ev in self.events() {
+            let _ = write!(s, "\n  {}", ev.describe());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::{MarkKind, TraceEvent};
+    use super::*;
+
+    fn mark(t: f64, qid: u64) -> TraceEvent {
+        TraceEvent::Mark { t, qid, kind: MarkKind::Capture, pipeline: 0, model: 0 }
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_events_in_order() {
+        let mut r = FlightRecorder::new();
+        let n = RING_CAP as u64 + 10;
+        for i in 0..n {
+            r.record(mark(i as f64, i));
+        }
+        assert_eq!(r.len(), RING_CAP);
+        assert_eq!(r.total(), n);
+        let evs = r.events();
+        // Oldest retained is event 10; newest is n-1, strictly in order.
+        assert_eq!(evs.first().unwrap().t(), 10.0);
+        assert_eq!(evs.last().unwrap().t(), (n - 1) as f64);
+        assert!(evs.windows(2).all(|w| w[0].t() < w[1].t()));
+    }
+
+    #[test]
+    fn dump_carries_the_repro_string_and_every_retained_event() {
+        let mut r = FlightRecorder::new();
+        for i in 0..3u64 {
+            r.record(mark(i as f64, i));
+        }
+        let d = r.dump("fuzz:v1:seed=42:faults=2");
+        assert!(d.starts_with("flight recorder: 3 of 3 trace events"));
+        assert!(d.contains("repro: fuzz:v1:seed=42:faults=2"));
+        assert_eq!(d.lines().count(), 4, "header + one line per event");
+    }
+}

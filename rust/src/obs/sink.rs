@@ -1,0 +1,223 @@
+//! The trace sink: the `Option`-flagged hook the engine records into.
+//!
+//! Mirrors the `InvariantChecker` pattern exactly: the engine holds an
+//! `Option<Box<Tracer>>`, every hook site is one `if let`, and a `None`
+//! tracer costs a branch. Two modes:
+//!
+//! * **Ring** — only the [`FlightRecorder`] ring is fed. This is what
+//!   `enable_invariants` arms, so every fuzz/chaos run has violation
+//!   context for free.
+//! * **Full** — every event is additionally appended to an unbounded
+//!   log for Chrome-trace export (`--trace out.json`).
+//!
+//! The contract (see `sim/mod.rs`): a tracer observes, it never steers.
+//! Hooks take no RNG draws, push no simulator events, and return nothing
+//! the engine branches on — results with tracing on are bit-identical to
+//! tracing off.
+
+use crate::Ms;
+
+use super::recorder::FlightRecorder;
+use super::span::{
+    MarkKind, Phase, PlanTrigger, RoundPath, SpanKind, TraceEvent,
+};
+
+/// How much the tracer retains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Flight-recorder ring only.
+    Ring,
+    /// Ring plus the full event log for export.
+    Full,
+}
+
+/// Per-partition trace sink.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    /// `Some` in [`TraceMode::Full`]: the complete, in-order event log.
+    full: Option<Vec<TraceEvent>>,
+    ring: FlightRecorder,
+}
+
+impl Tracer {
+    pub fn new(mode: TraceMode) -> Tracer {
+        Tracer {
+            full: match mode {
+                TraceMode::Ring => None,
+                TraceMode::Full => Some(Vec::new()),
+            },
+            ring: FlightRecorder::new(),
+        }
+    }
+
+    pub fn is_full_mode(&self) -> bool {
+        self.full.is_some()
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        if let Some(log) = self.full.as_mut() {
+            log.push(ev);
+        }
+        self.ring.record(ev);
+    }
+
+    #[inline]
+    pub fn span(
+        &mut self,
+        t: Ms,
+        qid: u64,
+        kind: SpanKind,
+        phase: Phase,
+        pipeline: usize,
+        model: usize,
+    ) {
+        self.record(TraceEvent::Span {
+            t,
+            qid,
+            kind,
+            phase,
+            pipeline: pipeline as u16,
+            model: model as u16,
+        });
+    }
+
+    #[inline]
+    pub fn mark(
+        &mut self,
+        t: Ms,
+        qid: u64,
+        kind: MarkKind,
+        pipeline: usize,
+        model: usize,
+    ) {
+        self.record(TraceEvent::Mark {
+            t,
+            qid,
+            kind,
+            pipeline: pipeline as u16,
+            model: model as u16,
+        });
+    }
+
+    #[inline]
+    pub fn batch(&mut self, t: Ms, pipeline: usize, model: usize, gpu: usize, n: usize) {
+        self.record(TraceEvent::Batch {
+            t,
+            pipeline: pipeline as u16,
+            model: model as u16,
+            gpu: gpu as u16,
+            n: n.min(u16::MAX as usize) as u16,
+        });
+    }
+
+    #[inline]
+    pub fn gpu_width(&mut self, t: Ms, gpu: usize, width: f64) {
+        self.record(TraceEvent::GpuWidth { t, gpu: gpu as u16, width });
+    }
+
+    #[inline]
+    pub fn plan(&mut self, t: Ms, trigger: PlanTrigger, path: RoundPath, migrations: usize) {
+        self.record(TraceEvent::Plan {
+            t,
+            trigger,
+            path,
+            migrations: migrations.min(u32::MAX as usize) as u32,
+        });
+    }
+
+    pub fn ring(&self) -> &FlightRecorder {
+        &self.ring
+    }
+
+    /// Close every still-open span at `horizon` so the exported log has
+    /// balanced `B`/`E` pairs even for queries in flight at the end of
+    /// the run. Spans on one query lane are strictly sequential, so a
+    /// lane has at most one open span — the last unmatched `Begin`.
+    /// Synthesized `End`s are appended in ascending-qid order, which is a
+    /// pure function of the log, keeping the export deterministic.
+    pub fn close_open_spans(&mut self, horizon: Ms) {
+        let Some(log) = self.full.as_mut() else { return };
+        let mut open: std::collections::BTreeMap<u64, (SpanKind, u16, u16)> =
+            std::collections::BTreeMap::new();
+        for ev in log.iter() {
+            if let TraceEvent::Span { qid, kind, phase, pipeline, model, .. } = *ev {
+                match phase {
+                    Phase::Begin => {
+                        open.insert(qid, (kind, pipeline, model));
+                    }
+                    Phase::End => {
+                        open.remove(&qid);
+                    }
+                }
+            }
+        }
+        for (qid, (kind, pipeline, model)) in open {
+            log.push(TraceEvent::Span {
+                t: horizon,
+                qid,
+                kind,
+                phase: Phase::End,
+                pipeline,
+                model,
+            });
+        }
+    }
+
+    /// Drain the full event log (empty in ring-only mode).
+    pub fn take_events(&mut self) -> Vec<TraceEvent> {
+        self.full.take().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_mode_records_nothing_exportable_but_feeds_the_ring() {
+        let mut tr = Tracer::new(TraceMode::Ring);
+        tr.mark(1.0, 1, MarkKind::Capture, 0, 0);
+        assert!(!tr.is_full_mode());
+        assert_eq!(tr.ring().len(), 1);
+        assert!(tr.take_events().is_empty());
+    }
+
+    #[test]
+    fn close_open_spans_balances_in_flight_lanes() {
+        let mut tr = Tracer::new(TraceMode::Full);
+        // q1 completes its transfer; q2 is left open; q3 opens and closes
+        // a queue wait, then opens exec.
+        tr.span(1.0, 1, SpanKind::Transfer, Phase::Begin, 0, 0);
+        tr.span(2.0, 1, SpanKind::Transfer, Phase::End, 0, 0);
+        tr.span(1.5, 2, SpanKind::Queue, Phase::Begin, 0, 1);
+        tr.span(3.0, 3, SpanKind::Queue, Phase::Begin, 1, 0);
+        tr.span(4.0, 3, SpanKind::Queue, Phase::End, 1, 0);
+        tr.span(4.0, 3, SpanKind::Exec, Phase::Begin, 1, 0);
+        tr.close_open_spans(100.0);
+        let evs = tr.take_events();
+        // Balanced now: every Begin has an End on its lane.
+        let mut open = std::collections::HashMap::new();
+        for ev in &evs {
+            if let TraceEvent::Span { qid, phase, .. } = ev {
+                match phase {
+                    Phase::Begin => *open.entry(qid).or_insert(0) += 1,
+                    Phase::End => *open.entry(qid).or_insert(0) -= 1,
+                }
+            }
+        }
+        assert!(open.values().all(|&v| v == 0), "{open:?}");
+        // Synthesized closes land at the horizon, lanes in qid order.
+        let tail: Vec<_> = evs[evs.len() - 2..].to_vec();
+        assert!(matches!(
+            tail[0],
+            TraceEvent::Span { t, qid: 2, kind: SpanKind::Queue, phase: Phase::End, .. }
+                if t == 100.0
+        ));
+        assert!(matches!(
+            tail[1],
+            TraceEvent::Span { t, qid: 3, kind: SpanKind::Exec, phase: Phase::End, .. }
+                if t == 100.0
+        ));
+    }
+}

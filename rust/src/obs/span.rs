@@ -1,0 +1,217 @@
+//! Typed trace events: the vocabulary of the observability layer.
+//!
+//! One event is one `Copy` record stamped with the **simulation clock**
+//! (never wall time), so a trace is a pure function of the scenario
+//! config and replays byte-identical at any `--sim-jobs`. Events are
+//! deliberately flat — no heap payloads — so the flight-recorder ring
+//! can overwrite slots without allocation on the engine hot path.
+
+use crate::Ms;
+
+/// Lifecycle segment of one query, traced as a Chrome `B`/`E` span pair
+/// on the query's lane. The three kinds tile a query's life exactly:
+/// every completed query is `Transfer → Queue → Exec` (repeated once per
+/// pipeline stage), and the same three segments are what
+/// [`SLO-miss attribution`](crate::obs::attrib) decomposes latency into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// On a link (or loopback) between the source / previous stage and
+    /// the device hosting the next model instance.
+    Transfer,
+    /// Waiting in a group queue for batch assembly.
+    Queue,
+    /// Riding a dispatched batch on a GPU.
+    Exec,
+}
+
+impl SpanKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Transfer => "transfer",
+            SpanKind::Queue => "queue",
+            SpanKind::Exec => "exec",
+        }
+    }
+}
+
+/// Span boundary: Chrome trace phase `B` or `E`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+}
+
+/// Instantaneous mark on a query lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MarkKind {
+    /// Frame captured at the source: the query is born.
+    Capture,
+    /// Reached its sink: end-to-end latency is final.
+    Sink,
+    /// Dropped (queue overflow, dead link, or expired deadline).
+    Drop,
+    /// Lost to a fault (dead source or a doomed in-flight batch).
+    Lost,
+}
+
+impl MarkKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MarkKind::Capture => "capture",
+            MarkKind::Sink => "sink",
+            MarkKind::Drop => "drop",
+            MarkKind::Lost => "lost",
+        }
+    }
+}
+
+/// What caused a planner round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanTrigger {
+    /// First plan at simulation start.
+    Initial,
+    /// The 6-minute scheduling period.
+    Periodic,
+    /// Deferred round released by a controller-outage end.
+    CatchUp,
+    /// Drift detector fired.
+    Drift,
+    /// Device crash / recovery notification.
+    Fault,
+}
+
+impl PlanTrigger {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlanTrigger::Initial => "initial",
+            PlanTrigger::Periodic => "periodic",
+            PlanTrigger::CatchUp => "catch-up",
+            PlanTrigger::Drift => "drift",
+            PlanTrigger::Fault => "fault",
+        }
+    }
+}
+
+/// How a planner round was satisfied: the incremental CWD-subset +
+/// CORAL-repair path, or a full CWD+CORAL pass (baselines and fallback
+/// rounds). Purely observational — returned by
+/// [`Scheduler::round_path`](crate::coordinator::Scheduler::round_path)
+/// for tracing; it must never steer scheduling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPath {
+    Full,
+    Repair,
+}
+
+impl RoundPath {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoundPath::Full => "full",
+            RoundPath::Repair => "repair",
+        }
+    }
+}
+
+/// One trace record. `qid` lanes carry query lifecycles, GPU lanes carry
+/// width counters and batch marks, and the control lane (tid 0 in the
+/// export) carries planner rounds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Span boundary on query lane `qid`, annotated with the pipeline
+    /// stage (`pipeline`, `model`) the segment belongs to.
+    Span { t: Ms, qid: u64, kind: SpanKind, phase: Phase, pipeline: u16, model: u16 },
+    /// Instantaneous mark on query lane `qid`.
+    Mark { t: Ms, qid: u64, kind: MarkKind, pipeline: u16, model: u16 },
+    /// Batch assembled: `n` queries of `(pipeline, model)` dispatched to
+    /// GPU `gpu`.
+    Batch { t: Ms, pipeline: u16, model: u16, gpu: u16, n: u16 },
+    /// Busy-width sample on GPU `gpu` (Chrome counter event).
+    GpuWidth { t: Ms, gpu: u16, width: f64 },
+    /// Planner round on the control lane.
+    Plan { t: Ms, trigger: PlanTrigger, path: RoundPath, migrations: u32 },
+}
+
+impl TraceEvent {
+    /// Sim-clock timestamp of the event.
+    pub fn t(&self) -> Ms {
+        match *self {
+            TraceEvent::Span { t, .. }
+            | TraceEvent::Mark { t, .. }
+            | TraceEvent::Batch { t, .. }
+            | TraceEvent::GpuWidth { t, .. }
+            | TraceEvent::Plan { t, .. } => t,
+        }
+    }
+
+    /// One-line human rendering, used by the flight-recorder dump.
+    pub fn describe(&self) -> String {
+        match *self {
+            TraceEvent::Span { t, qid, kind, phase, pipeline, model } => {
+                let ph = match phase {
+                    Phase::Begin => "B",
+                    Phase::End => "E",
+                };
+                format!(
+                    "[{t:>12.3} ms] {ph} {:<8} q={qid} stage={pipeline}/{model}",
+                    kind.label()
+                )
+            }
+            TraceEvent::Mark { t, qid, kind, pipeline, model } => format!(
+                "[{t:>12.3} ms] i {:<8} q={qid} stage={pipeline}/{model}",
+                kind.label()
+            ),
+            TraceEvent::Batch { t, pipeline, model, gpu, n } => format!(
+                "[{t:>12.3} ms] i batch    gpu={gpu} stage={pipeline}/{model} n={n}"
+            ),
+            TraceEvent::GpuWidth { t, gpu, width } => {
+                format!("[{t:>12.3} ms] C gpu{gpu} width={width}")
+            }
+            TraceEvent::Plan { t, trigger, path, migrations } => format!(
+                "[{t:>12.3} ms] i plan     trigger={} path={} migrations={migrations}",
+                trigger.label(),
+                path.label()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn describe_is_single_line_and_carries_the_ids() {
+        let evs = [
+            TraceEvent::Span {
+                t: 12.5,
+                qid: 7,
+                kind: SpanKind::Queue,
+                phase: Phase::Begin,
+                pipeline: 1,
+                model: 2,
+            },
+            TraceEvent::Mark {
+                t: 13.0,
+                qid: 7,
+                kind: MarkKind::Sink,
+                pipeline: 1,
+                model: 2,
+            },
+            TraceEvent::Batch { t: 14.0, pipeline: 0, model: 0, gpu: 3, n: 8 },
+            TraceEvent::GpuWidth { t: 14.0, gpu: 3, width: 1.5 },
+            TraceEvent::Plan {
+                t: 15.0,
+                trigger: PlanTrigger::Drift,
+                path: RoundPath::Repair,
+                migrations: 2,
+            },
+        ];
+        for ev in evs {
+            let d = ev.describe();
+            assert!(!d.contains('\n'), "{d:?}");
+        }
+        assert!(evs[0].describe().contains("q=7"));
+        assert!(evs[4].describe().contains("path=repair"));
+        assert_eq!(evs[2].t(), 14.0);
+    }
+}

@@ -75,6 +75,9 @@ pub struct SyntheticExec {
     pub batches: u64,
     /// Accumulated nominal service time — the harness's logical busy clock.
     pub busy_ms: f64,
+    /// The same busy clock split per model, so harnesses can attribute
+    /// executor occupancy to the workload that caused it.
+    pub busy_by_model: HashMap<String, f64>,
 }
 
 impl SyntheticExec {
@@ -128,6 +131,7 @@ impl ExecBackend for SyntheticExec {
         }
         self.batches += 1;
         self.busy_ms += m.service_ms;
+        *self.busy_by_model.entry(model.to_string()).or_default() += m.service_ms;
         if self.sleep && m.service_ms > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(
                 m.service_ms / 1e3,
@@ -171,5 +175,6 @@ mod tests {
         assert_eq!(out, vec![3.0, 3.0, 3.0, 30.0, 30.0, 30.0]);
         assert_eq!(ex.batches, 1);
         assert_eq!(ex.busy_ms, 5.0);
+        assert_eq!(ex.busy_by_model.get("det"), Some(&5.0));
     }
 }

@@ -143,6 +143,14 @@ pub struct ServeReport {
     /// (a batch of 8 adds 1 to bucket 8).
     pub batch_hist: HashMap<usize, u64>,
     pub wall_ms: f64,
+    /// Per-request wait outside the engine (answer latency minus its
+    /// batch's execute time) — wall-clock timing, so excluded from
+    /// [`digest`](Self::digest) like every other timing field.
+    pub queue_wait: QuantileSketch,
+    /// Engine `execute_padded` wall time, one sample per executed batch.
+    pub exec_time: QuantileSketch,
+    /// Peak queued requests observed per batcher shard over the session.
+    pub peak_shard_depth: Vec<u64>,
 }
 
 impl ServeReport {
@@ -230,6 +238,14 @@ impl ServeReport {
             *self.batch_hist.entry(b).or_default() += c;
         }
         self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.exec_time.merge(&other.exec_time);
+        if self.peak_shard_depth.len() < other.peak_shard_depth.len() {
+            self.peak_shard_depth.resize(other.peak_shard_depth.len(), 0);
+        }
+        for (s, d) in other.peak_shard_depth.into_iter().enumerate() {
+            self.peak_shard_depth[s] = self.peak_shard_depth[s].max(d);
+        }
     }
 
     /// Deterministic one-line fingerprint of every counter (sorted maps,
@@ -405,7 +421,10 @@ fn front_loop(
                     break;
                 }
                 // Executor died (panic downstream): stop assembling.
-                Err(TrySendError::Disconnected(_)) => return report,
+                Err(TrySendError::Disconnected(_)) => {
+                    report.peak_shard_depth = door.peak_shard_depths();
+                    return report;
+                }
             }
         }
         // Wait for the next request, bounded by the earliest batch
@@ -442,6 +461,7 @@ fn front_loop(
             break;
         }
     }
+    report.peak_shard_depth = door.peak_shard_depths();
     report
 }
 
@@ -542,17 +562,21 @@ pub fn run_batch(
         debug_assert_eq!(r.data.len(), per_in);
         input.extend_from_slice(&r.data);
     }
+    let exec_start = Instant::now();
     let out = match backend.execute_padded(model, bz, n, &input) {
         Ok(o) => o,
         Err(e) => return fail_batch(batch, &e.to_string(), tx, report, done),
     };
-    complete_batch(batch, &out, tx, report, done);
+    let exec_ms = exec_start.elapsed().as_secs_f64() * 1e3;
+    report.exec_time.push(exec_ms);
+    complete_batch(batch, &out, exec_ms, tx, report, done);
 }
 
 /// Account one *successful* executed batch and answer its requests.
 fn complete_batch(
     batch: Vec<Request>,
     out: &[f32],
+    exec_ms: f64,
     tx: &Sender<Response>,
     report: &mut ServeReport,
     done: Option<&Sender<DoneMsg>>,
@@ -578,6 +602,7 @@ fn complete_batch(
         }
         *report.per_model.entry(req.model.clone()).or_default() += 1;
         report.latency.push(latency_ms);
+        report.queue_wait.push((latency_ms - exec_ms).max(0.0));
         let row = out[i * per_out..(i + 1) * per_out].to_vec();
         if let Some(d) = done {
             // Feed the content filter's pending entry (front thread).
@@ -705,14 +730,14 @@ mod tests {
         let batch: Vec<Request> =
             (0..8).map(|i| req(i, "classifier", 1e9)).collect();
         let out = vec![0.5f32; 8 * 2];
-        complete_batch(batch, &out, &tx, &mut report, None);
+        complete_batch(batch, &out, 0.0, &tx, &mut report, None);
         assert_eq!(report.batch_hist.get(&8), Some(&1), "one batch, bucket 8");
         assert_eq!(report.served, 8);
         assert_eq!(report.on_time, 8);
         assert_eq!(rx.try_iter().count(), 8);
 
         let batch: Vec<Request> = (0..3).map(|i| req(i, "embedder", 1e9)).collect();
-        complete_batch(batch, &vec![0.0f32; 3 * 2], &tx, &mut report, None);
+        complete_batch(batch, &vec![0.0f32; 3 * 2], 0.0, &tx, &mut report, None);
         assert_eq!(report.batch_hist.get(&3), Some(&1));
         assert_eq!(report.batch_hist.values().sum::<u64>(), 2, "two batches total");
         assert_eq!(report.latency.count(), report.served);
@@ -790,10 +815,13 @@ mod tests {
         let (tx, _rx) = std::sync::mpsc::channel();
         let mut a = ServeReport::default();
         a.note_submitted(1);
-        complete_batch(vec![req(1, "det", 1e9)], &[1.0], &tx, &mut a, None);
+        complete_batch(vec![req(1, "det", 1e9)], &[1.0], 0.0, &tx, &mut a, None);
+        a.peak_shard_depth = vec![3, 9];
         let mut b = ServeReport::default();
         b.note_submitted(2);
         reject_request(req(2, "det", 1.0), 5.0, &tx, &mut b);
+        b.exec_time.push(4.5);
+        b.peak_shard_depth = vec![7, 2, 1];
         a.absorb(b);
         assert_eq!(a.submitted, 2);
         assert_eq!(a.served, 1);
@@ -801,11 +829,25 @@ mod tests {
         assert_eq!(a.accounted(), a.submitted);
         assert_eq!(a.per_tenant.len(), 2);
         assert_eq!(a.latency.count(), 1);
+        assert_eq!(a.queue_wait.count(), 1, "wait recorded per completion");
+        assert_eq!(a.exec_time.count(), 1);
+        assert_eq!(a.peak_shard_depth, vec![7, 9, 1], "element-wise peak");
         let d = a.digest();
         assert!(d.contains("sub=2"), "{d}");
         assert!(d.contains("t:1="), "{d}");
         assert!(d.contains("t:2="), "{d}");
         assert_eq!(d, a.digest(), "digest is a pure function of counters");
+        // Timing-derived fields stay out of the digest by construction.
+        let mut c = ServeReport::default();
+        c.note_submitted(1);
+        complete_batch(vec![req(1, "det", 1e9)], &[1.0], 0.0, &tx, &mut c, None);
+        c.absorb(ServeReport::default());
+        let mut plain = ServeReport::default();
+        plain.note_submitted(1);
+        complete_batch(vec![req(1, "det", 1e9)], &[1.0], 0.0, &tx, &mut plain, None);
+        plain.exec_time.push(99.0);
+        plain.peak_shard_depth = vec![42];
+        assert_eq!(c.digest(), plain.digest());
     }
 
     #[test]

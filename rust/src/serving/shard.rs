@@ -60,6 +60,9 @@ pub enum Offer {
 /// kept sorted by model name for deterministic iteration.
 struct Shard {
     batchers: Vec<(String, FairBatcher<Request>)>,
+    /// High-water mark of this shard's total queued depth — report-only
+    /// state, never consulted by any scheduling decision.
+    peak: u64,
 }
 
 impl Shard {
@@ -68,6 +71,10 @@ impl Shard {
             .iter_mut()
             .find(|(m, _)| m == model)
             .map(|(_, b)| b)
+    }
+
+    fn depth(&self) -> u64 {
+        self.batchers.iter().map(|(_, b)| b.len() as u64).sum()
     }
 }
 
@@ -96,7 +103,7 @@ impl FrontDoor {
     pub fn new(cfgs: &HashMap<String, ModelServeCfg>, cfg: &FrontDoorCfg) -> FrontDoor {
         let n = cfg.shards.max(1);
         let mut shards: Vec<Shard> =
-            (0..n).map(|_| Shard { batchers: Vec::new() }).collect();
+            (0..n).map(|_| Shard { batchers: Vec::new(), peak: 0 }).collect();
         let mut shard_of = HashMap::new();
         // Sorted model order so shard contents are deterministic.
         let mut models: Vec<&String> = cfgs.keys().collect();
@@ -156,6 +163,9 @@ impl FrontDoor {
             return Offer::QueueFull { req, retry_after_ms };
         }
         b.push(lane, weight, req, now_ms);
+        let s = &mut self.shards[shard];
+        let depth = s.depth();
+        s.peak = s.peak.max(depth);
         Offer::Queued
     }
 
@@ -232,6 +242,13 @@ impl FrontDoor {
         if let Some(f) = self.filter.as_mut() {
             f.abandon(id);
         }
+    }
+
+    /// Peak queued depth each shard has seen since construction — the
+    /// `ServeReport::peak_shard_depth` snapshot behind
+    /// `serve --metrics-out`.
+    pub fn peak_shard_depths(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.peak).collect()
     }
 }
 
@@ -362,6 +379,25 @@ mod tests {
             _ => panic!("repeat frame must be answered by the filter"),
         }
         assert!(door.is_empty());
+    }
+
+    #[test]
+    fn peak_shard_depth_survives_the_drain() {
+        let cfg = FrontDoorCfg { shards: 2, ..FrontDoorCfg::default() };
+        let mut door = FrontDoor::new(&cfgs(), &cfg);
+        for i in 0..3 {
+            assert!(matches!(door.offer(req(i, "det", 0), 0.0), Offer::Queued));
+        }
+        let peaks = door.peak_shard_depths();
+        assert_eq!(peaks.len(), 2);
+        assert_eq!(peaks.iter().sum::<u64>(), 3, "all three queued on det's shard");
+        while door.flush().is_some() {}
+        assert!(door.is_empty());
+        assert_eq!(
+            door.peak_shard_depths(),
+            peaks,
+            "high-water mark is monotone, not current depth"
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::sync::Mutex;
 
 use crate::coordinator::SchedulerKind;
 use crate::metrics::RunMetrics;
+use crate::obs::TraceEvent;
 use crate::sim::engine::SimPartition;
 use crate::sim::faults::FaultPlan;
 use crate::sim::invariants::InvariantReport;
@@ -90,6 +91,35 @@ impl Simulator {
         for p in &mut self.parts {
             p.enable_invariants();
         }
+    }
+
+    /// Arm the full tracer (`--trace`) in every partition before `run`.
+    pub fn enable_tracing(&mut self) {
+        for p in &mut self.parts {
+            p.enable_tracing();
+        }
+    }
+
+    /// Arm the ring-only flight recorder in every partition before `run`.
+    pub fn enable_flight_recorder(&mut self) {
+        for p in &mut self.parts {
+            p.enable_flight_recorder();
+        }
+    }
+
+    /// Record the exact repro string every partition's flight-recorder
+    /// dump should carry (fuzz replays know it).
+    pub fn set_repro(&mut self, repro: &str) {
+        for p in &mut self.parts {
+            p.set_repro(repro.to_string());
+        }
+    }
+
+    /// Take the per-partition traces after `run` (empty vecs unless
+    /// tracing was enabled). Always in partition order — the export
+    /// merge is a pure function of this, independent of `--sim-jobs`.
+    pub fn take_trace(&mut self) -> Vec<Vec<TraceEvent>> {
+        self.parts.iter_mut().map(SimPartition::take_trace).collect()
     }
 
     /// Take the merged invariant report after `run` (None unless

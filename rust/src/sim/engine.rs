@@ -24,6 +24,10 @@ use crate::coordinator::{
     GpuId, ModelObs, Plan, SchedEnv, Scheduler, SchedulerKind, StageCfg,
 };
 use crate::metrics::{Outcome, RunMetrics};
+use crate::obs::{
+    close_exact, MarkKind, Phase, PlanTrigger, SpanKind, TraceEvent,
+    TraceMode, Tracer,
+};
 use crate::sim::faults::{CrashPolicy, FaultEv, FaultPlan};
 use crate::sim::invariants::{InvariantChecker, InvariantReport};
 use crate::sim::link::FifoLink;
@@ -69,12 +73,35 @@ impl InterferenceModel {
 }
 
 /// A query flowing through a pipeline (a frame, then per-object crops).
+///
+/// Beyond identity and deadline, a query carries its own latency
+/// decomposition: `mark_ms` stamps the last lifecycle boundary, and the
+/// three accumulators absorb each closed segment (transfer at arrival,
+/// queue wait at dispatch, execution at completion). The segments
+/// telescope — every boundary both closes one segment and opens the
+/// next — so at the sink `transfer + queue + exec` equals end-to-end
+/// latency up to fp rounding of the adds, which
+/// [`close_exact`] folds away to make the sum bit-exact. Children
+/// inherit the parent's accumulators (end-to-end attribution spans
+/// the whole pipeline), restarting the clock at the spawn stamp.
 #[derive(Clone, Copy, Debug)]
 struct Query {
     created_ms: Ms,
     deadline_ms: Ms,
     /// Objects carried (frames: detected count; crops: 1).
     objects: u16,
+    /// Partition-local trace identity (a bare counter: allocation order
+    /// is a pure function of the event sequence, so qids are stable
+    /// across `--sim-jobs` and tracing on/off).
+    qid: u64,
+    /// Sim-clock stamp of the last lifecycle boundary.
+    mark_ms: Ms,
+    /// Accumulated uplink/routing transfer time.
+    transfer_ms: Ms,
+    /// Accumulated batching-queue wait.
+    queue_ms: Ms,
+    /// Accumulated GPU execution (incl. interference inflation).
+    exec_ms: Ms,
 }
 
 /// Instance-group runtime state for one (pipeline, model).
@@ -291,6 +318,17 @@ pub struct SimPartition {
     /// every hook site is a single never-taken branch — see
     /// [`crate::sim::invariants`].
     checker: Option<Box<InvariantChecker>>,
+    /// Trace sink, mirroring the checker's `Option`-flag pattern: `None`
+    /// in plain runs, ring-only when the invariant engine arms the flight
+    /// recorder, full when `--trace` asks for an export. A tracer
+    /// observes, it never steers — hooks draw no RNG, push no events, and
+    /// return nothing the engine branches on (see [`crate::obs`]).
+    tracer: Option<Box<Tracer>>,
+    /// Next query trace id (allocation order == event order).
+    next_qid: u64,
+    /// Exact repro string for flight-recorder dumps, when the caller knows
+    /// it (fuzz replays). `None` falls back to a cfg-derived string.
+    repro: Option<String>,
     // Fault injection (empty / all-zero unless cfg.faults > 0).
     /// Scheduled fault events, seeded into the heap at run start.
     faults: Vec<(Ms, FaultEv)>,
@@ -403,6 +441,9 @@ impl SimPartition {
             drift: DriftDetector::new(DriftParams::default()),
             autoscaler: AutoScaler::new(AutoScalerParams::default()),
             checker: None,
+            tracer: None,
+            next_qid: 0,
+            repro: None,
             faults: if scenario.cfg.faults > 0 {
                 FaultPlan::sample(
                     scenario.cfg.seed,
@@ -440,13 +481,123 @@ impl SimPartition {
     }
 
     /// Arm the invariant engine before `run` (conformance/fuzz harness).
+    /// Also arms the ring-only flight recorder, so every checked run has
+    /// violation context for free.
     pub fn enable_invariants(&mut self) {
         self.checker = Some(Box::new(InvariantChecker::new()));
+        self.enable_flight_recorder();
     }
 
     /// Take the invariant report after `run` (None unless enabled).
     pub fn take_invariant_report(&mut self) -> Option<InvariantReport> {
         self.checker.take().map(|c| c.into_report())
+    }
+
+    /// Arm the full tracer before `run` (`--trace`): every lifecycle event
+    /// is retained for Chrome-trace export. Upgrades a ring-only recorder.
+    pub fn enable_tracing(&mut self) {
+        self.tracer = Some(Box::new(Tracer::new(TraceMode::Full)));
+    }
+
+    /// Arm the ring-only flight recorder (no-op when a tracer — either
+    /// mode — is already armed; full mode feeds the ring too).
+    pub fn enable_flight_recorder(&mut self) {
+        if self.tracer.is_none() {
+            self.tracer = Some(Box::new(Tracer::new(TraceMode::Ring)));
+        }
+    }
+
+    /// Record the exact repro string for flight-recorder dumps (fuzz
+    /// replays know it; ad-hoc runs fall back to a cfg-derived one).
+    pub fn set_repro(&mut self, repro: String) {
+        self.repro = Some(repro);
+    }
+
+    /// Take the full trace after `run` (empty unless `enable_tracing`).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.tracer
+            .as_deref_mut()
+            .map(Tracer::take_events)
+            .unwrap_or_default()
+    }
+
+    /// Repro string identifying this run, mirroring the
+    /// `fuzz:v1:seed=N[:...]` grammar from every axis the config carries.
+    /// (The long-haul `:horizon=` modifier is class-level state the config
+    /// does not record; fuzz replays pass the exact string via
+    /// [`set_repro`](Self::set_repro) instead.)
+    fn repro_string(&self) -> String {
+        if let Some(r) = &self.repro {
+            return r.clone();
+        }
+        let cfg = &self.sc.cfg;
+        let mut s = format!("fuzz:v1:seed={}", cfg.seed);
+        if cfg.replan != ReplanMode::Periodic {
+            s.push_str(&format!(":replan={}", cfg.replan.label()));
+        }
+        if cfg.faults > 0 {
+            s.push_str(&format!(":faults={}", cfg.faults));
+        }
+        if cfg.order_seed != 0 {
+            s.push_str(&format!(":order={}", cfg.order_seed));
+        }
+        if cfg.clusters > 1 {
+            s.push_str(&format!(":clusters={}", cfg.clusters));
+        }
+        s
+    }
+
+    /// The flight-recorder postmortem: `Some(dump)` when the invariant
+    /// engine saw a violation, rendering the last ring of trace events
+    /// with the repro string. Call after `run` (before taking the report).
+    pub fn flight_dump(&self) -> Option<String> {
+        let violated =
+            self.checker.as_deref().is_some_and(InvariantChecker::has_violations);
+        if !violated {
+            return None;
+        }
+        let tr = self.tracer.as_deref()?;
+        Some(tr.ring().dump(&self.repro_string()))
+    }
+
+    /// Allocate the next query trace id. Unconditional (tracing on or
+    /// off), so ids never perturb behavior and traces from separate runs
+    /// of one scenario line up query-for-query.
+    #[inline]
+    fn alloc_qid(&mut self) -> u64 {
+        let q = self.next_qid;
+        self.next_qid += 1;
+        q
+    }
+
+    /// Stamp batch assembly on every query leaving a queue and emit the
+    /// dispatch trace events: each query's queue span closes and its exec
+    /// span opens, the batch mark lands on the GPU lane, and (contended
+    /// dispatch only) the GPU width counter samples the post-dispatch
+    /// active width.
+    fn note_dispatch(
+        &mut self,
+        batch: &mut [Query],
+        pipeline: usize,
+        model: usize,
+        gpu: usize,
+        width: Option<f64>,
+    ) {
+        let now = self.now;
+        for q in batch.iter_mut() {
+            q.queue_ms += now - q.mark_ms;
+            q.mark_ms = now;
+        }
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            for q in batch.iter() {
+                tr.span(now, q.qid, SpanKind::Queue, Phase::End, pipeline, model);
+                tr.span(now, q.qid, SpanKind::Exec, Phase::Begin, pipeline, model);
+            }
+            tr.batch(now, pipeline, model, gpu, batch.len());
+            if let Some(w) = width {
+                tr.gpu_width(now, gpu, w);
+            }
+        }
     }
 
     /// Queries still queued, inside a running batch, or in transit —
@@ -543,7 +694,8 @@ impl SimPartition {
     }
 
     /// Run the scheduler and (re)install the plan, preserving queues.
-    fn reschedule(&mut self) {
+    /// `trigger` is trace-only provenance (what woke the control plane).
+    fn reschedule(&mut self, trigger: PlanTrigger) {
         let (obs, bw) = self.build_env();
         let env = SchedEnv {
             cluster: &self.sc.cluster,
@@ -560,10 +712,14 @@ impl SimPartition {
         if self.mode == ReplanMode::Drift {
             self.drift.rearm(&plan, env.pipelines, &env.obs, &env.bw_mbps);
         }
+        let path = self.sched.round_path();
         let SchedEnv { obs, bw_mbps, .. } = env;
         self.env_obs = obs;
         self.env_bw = bw_mbps;
-        self.install_plan(plan);
+        let migrations = self.install_plan(plan);
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.plan(self.now, trigger, path, migrations);
+        }
     }
 
     /// Drift-mode check: if live rates or link bandwidth left the active
@@ -585,11 +741,15 @@ impl SimPartition {
             alpha: 1.2,
         };
         let plan = self.sched.replan(&env, &self.plan, &drifted);
+        let path = self.sched.round_path();
         self.drift.rearm(&plan, env.pipelines, &env.obs, &env.bw_mbps);
         let SchedEnv { obs, bw_mbps, .. } = env;
         self.env_obs = obs;
         self.env_bw = bw_mbps;
-        self.install_plan(plan);
+        let migrations = self.install_plan(plan);
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.plan(self.now, PlanTrigger::Drift, path, migrations);
+        }
     }
 
     /// Failure-aware replan: let the scheduler re-place work around the
@@ -607,13 +767,17 @@ impl SimPartition {
             alpha: 1.2,
         };
         let plan = self.sched.on_fault(&env, &self.plan, device);
+        let path = self.sched.round_path();
         if self.mode == ReplanMode::Drift {
             self.drift.rearm(&plan, env.pipelines, &env.obs, &env.bw_mbps);
         }
         let SchedEnv { obs, bw_mbps, .. } = env;
         self.env_obs = obs;
         self.env_bw = bw_mbps;
-        self.install_plan(plan);
+        let migrations = self.install_plan(plan);
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.plan(self.now, PlanTrigger::Fault, path, migrations);
+        }
     }
 
     /// Account `n` queries destroyed by a fault (metrics + checker move
@@ -661,12 +825,19 @@ impl SimPartition {
                     }
                 }
                 if self.crash_policy == CrashPolicy::Drop {
+                    let now = self.now;
                     let mut lost = 0u64;
                     for p in 0..self.groups.len() {
                         for m in 0..self.groups[p].len() {
                             let g = &mut self.groups[p][m];
                             if g.cfg.device == device {
                                 lost += g.queue.len() as u64;
+                                if let Some(tr) = self.tracer.as_deref_mut() {
+                                    for q in &g.queue {
+                                        tr.span(now, q.qid, SpanKind::Queue, Phase::End, p, m);
+                                        tr.mark(now, q.qid, MarkKind::Lost, p, m);
+                                    }
+                                }
                                 g.queue.clear();
                                 g.flush_at = None;
                             }
@@ -724,7 +895,7 @@ impl SimPartition {
                 if self.outage_depth == 0 && self.recovery {
                     // Catch-up round: replan against everything that
                     // happened while the controller was dark.
-                    self.reschedule();
+                    self.reschedule(PlanTrigger::CatchUp);
                 }
             }
             FaultEv::TelemetryFreezeStart => {
@@ -748,8 +919,10 @@ impl SimPartition {
     /// while changed groups are re-deployed under a fresh epoch. Queues
     /// and windows always survive (in-flight work continues across a
     /// swap); the invariant hook asserts the migration neither lost nor
-    /// double-counted a single in-flight query.
-    fn install_plan(&mut self, plan: Plan) {
+    /// double-counted a single in-flight query. Returns the number of
+    /// groups actually re-deployed (the migration count on Plan trace
+    /// events).
+    fn install_plan(&mut self, plan: Plan) -> usize {
         let migrating = !self.plan.assignments.is_empty();
         let census_before = (self.checker.is_some() && migrating)
             .then(|| self.in_flight_census());
@@ -811,6 +984,7 @@ impl SimPartition {
                 }
             }
         }
+        let n_migrated = changed.len();
         self.plan = plan;
         // Scale decisions taken on stale telemetry during a controller
         // outage hand their cooldown back once post-recovery replanning
@@ -833,6 +1007,7 @@ impl SimPartition {
                 c.on_plan_swap(before, after);
             }
         }
+        n_migrated
     }
 
     /// Execute one duty-cycle occurrence of a reserved instance.
@@ -856,12 +1031,15 @@ impl SimPartition {
         }
         // Lazy-drop late queries, then take up to one batch.
         let mut dropped = 0u64;
-        while let Some(q) = g.queue.front() {
-            if q.deadline_ms < now {
-                g.queue.pop_front();
-                dropped += 1;
-            } else {
+        while let Some(q) = g.queue.front().copied() {
+            if q.deadline_ms >= now {
                 break;
+            }
+            g.queue.pop_front();
+            dropped += 1;
+            if let Some(tr) = self.tracer.as_deref_mut() {
+                tr.span(now, q.qid, SpanKind::Queue, Phase::End, pipeline, model);
+                tr.mark(now, q.qid, MarkKind::Drop, pipeline, model);
             }
         }
         let take = g.cfg.batch.min(g.queue.len() as u32) as usize;
@@ -881,9 +1059,10 @@ impl SimPartition {
         }
         let mut batch = self.buf_pool.pop().unwrap_or_default();
         batch.extend(self.groups[pipeline][model].queue.drain(..take));
+        let gi = self.gpu_idx(b.gpu);
+        self.note_dispatch(&mut batch, pipeline, model, gi, None);
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
         let class = self.sc.cluster.device(cfg.device).class;
-        let gi = self.gpu_idx(b.gpu);
         // Reservation: interference-free — but a hardware straggler slows
         // even reserved portions (the fault is below the scheduler).
         let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch)
@@ -995,15 +1174,28 @@ impl SimPartition {
         }
     }
 
-    fn arrive(&mut self, pipeline: usize, model: usize, query: Query) {
+    fn arrive(&mut self, pipeline: usize, model: usize, mut query: Query) {
         let now = self.now;
+        // The uplink transfer ends at the arrival stamp; queue wait begins.
+        query.transfer_ms += now - query.mark_ms;
+        query.mark_ms = now;
         let max_wait = self.max_wait_ms(pipeline, model);
         let g = &mut self.groups[pipeline][model];
         g.window.record(now);
         let overflow = g.queue.len() >= QUEUE_CAP;
-        if overflow {
-            g.queue.pop_front();
+        let victim = if overflow {
             self.metrics.record(Outcome::Dropped, 0.0);
+            g.queue.pop_front()
+        } else {
+            None
+        };
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.span(now, query.qid, SpanKind::Transfer, Phase::End, pipeline, model);
+            tr.span(now, query.qid, SpanKind::Queue, Phase::Begin, pipeline, model);
+            if let Some(v) = &victim {
+                tr.span(now, v.qid, SpanKind::Queue, Phase::End, pipeline, model);
+                tr.mark(now, v.qid, MarkKind::Drop, pipeline, model);
+            }
         }
         g.queue.push_back(query);
         let full = g.queue.len() >= g.cfg.batch as usize;
@@ -1060,12 +1252,15 @@ impl SimPartition {
             };
             // Lazy dropping: discard queries already past their deadline.
             let mut dropped = 0u64;
-            while let Some(q) = g.queue.front() {
-                if q.deadline_ms < now {
-                    g.queue.pop_front();
-                    dropped += 1;
-                } else {
+            while let Some(q) = g.queue.front().copied() {
+                if q.deadline_ms >= now {
                     break;
+                }
+                g.queue.pop_front();
+                dropped += 1;
+                if let Some(tr) = self.tracer.as_deref_mut() {
+                    tr.span(now, q.qid, SpanKind::Queue, Phase::End, pipeline, model);
+                    tr.mark(now, q.qid, MarkKind::Drop, pipeline, model);
                 }
             }
             let empty = g.queue.is_empty();
@@ -1116,6 +1311,7 @@ impl SimPartition {
             let end = now + dur;
             runs.push(end, binding.width);
             self.gpu_busy_width_ms[gi] += dur * binding.width;
+            self.note_dispatch(&mut batch, pipeline, model, gi, Some(total));
             self.push(
                 end,
                 Ev::ExecDone { pipeline, model, binding: binding_idx, queries: batch },
@@ -1149,9 +1345,10 @@ impl SimPartition {
         if let Some(c) = self.checker.as_deref_mut() {
             c.on_batch(batch.len(), cfg.batch);
         }
+        let gi = self.gpu_idx(b.gpu);
+        self.note_dispatch(&mut batch, pipeline, model, gi, None);
         let spec = &self.sc.pipelines[pipeline].models[model].spec;
         let class = self.sc.cluster.device(cfg.device).class;
-        let gi = self.gpu_idx(b.gpu);
         let dur = self.sc.profiles.batch_latency(spec, class, cfg.batch)
             * self.gpu_slow[gi];
         let end = now + dur;
@@ -1173,6 +1370,17 @@ impl SimPartition {
                 g.busy[binding] = false;
             }
         }
+        // The execution segment ends here for every query in the batch —
+        // doomed or not, the exec span closes at the batch end stamp.
+        for q in queries.iter_mut() {
+            q.exec_ms += now - q.mark_ms;
+            q.mark_ms = now;
+        }
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            for q in queries.iter() {
+                tr.span(now, q.qid, SpanKind::Exec, Phase::End, pipeline, model);
+            }
+        }
         // A batch doomed by a device crash: the queries died with the
         // hardware — account them as lost (never silently vanished) and
         // free the instance slot without routing or completing anything.
@@ -1183,6 +1391,11 @@ impl SimPartition {
         {
             self.doomed.remove(pos);
             self.lose_to_fault(queries.len() as u64);
+            if let Some(tr) = self.tracer.as_deref_mut() {
+                for q in queries.iter() {
+                    tr.mark(now, q.qid, MarkKind::Lost, pipeline, model);
+                }
+            }
             if self.buf_pool.len() < 64 {
                 queries.clear();
                 self.buf_pool.push(queries);
@@ -1210,8 +1423,18 @@ impl SimPartition {
                 }
                 let outcome = if on_time { Outcome::OnTime } else { Outcome::Late };
                 self.metrics.record_n(outcome, latency, n);
+                // Attribution: the lifecycle segments telescoped over the
+                // whole pipeline; fold the fp residue of the adds into the
+                // exec component so transfer + queue + exec == latency
+                // bit-for-bit (the invariant engine asserts it).
+                let exec = close_exact(latency, q.transfer_ms, q.queue_ms, q.exec_ms);
+                self.metrics.record_attrib(q.transfer_ms, q.queue_ms, exec, n, !on_time);
                 if let Some(c) = self.checker.as_deref_mut() {
                     c.on_sink(latency, n, on_time, slo);
+                    c.on_attrib(q.transfer_ms, q.queue_ms, exec, latency, n);
+                }
+                if let Some(tr) = self.tracer.as_deref_mut() {
+                    tr.mark(now, q.qid, MarkKind::Sink, pipeline, model);
                 }
             }
         } else {
@@ -1245,10 +1468,18 @@ impl SimPartition {
                     if let Some(c) = self.checker.as_deref_mut() {
                         c.on_spawn();
                     }
+                    // The child inherits the parent's accumulated segments
+                    // (end-to-end attribution spans the whole pipeline) and
+                    // restarts the clock here: the routing hop is transfer.
                     let next = Query {
                         created_ms: q.created_ms,
                         deadline_ms: q.deadline_ms,
                         objects: 1,
+                        qid: self.alloc_qid(),
+                        mark_ms: now,
+                        transfer_ms: q.transfer_ms,
+                        queue_ms: q.queue_ms,
+                        exec_ms: q.exec_ms,
                     };
                     let dst_dev = self.groups[pipeline][d].cfg.device;
                     let arrive_t = self.transfer_time(
@@ -1257,11 +1488,17 @@ impl SimPartition {
                         self.sc.pipelines[pipeline].models[d].spec.input_bytes,
                     );
                     if arrive_t.is_finite() {
+                        if let Some(tr) = self.tracer.as_deref_mut() {
+                            tr.span(now, next.qid, SpanKind::Transfer, Phase::Begin, pipeline, d);
+                        }
                         self.push(arrive_t, Ev::Arrive { pipeline, model: d, query: next });
                     } else {
                         self.metrics.record(Outcome::Dropped, 0.0);
                         if let Some(c) = self.checker.as_deref_mut() {
                             c.on_drop(1);
+                        }
+                        if let Some(tr) = self.tracer.as_deref_mut() {
+                            tr.mark(now, next.qid, MarkKind::Drop, pipeline, d);
                         }
                     }
                 }
@@ -1325,6 +1562,11 @@ impl SimPartition {
             created_ms: now,
             deadline_ms: now + slo,
             objects: objects.min(u16::MAX as u32) as u16,
+            qid: self.alloc_qid(),
+            mark_ms: now,
+            transfer_ms: 0.0,
+            queue_ms: 0.0,
+            exec_ms: 0.0,
         };
         // A dead source device still captures frames (the camera is a
         // separate box) but cannot ship them: the query is lost at birth.
@@ -1332,6 +1574,10 @@ impl SimPartition {
         // scheduler-independent fingerprint — identical across schedulers
         // and across fault policies.
         if self.device_down[src] > 0 {
+            if let Some(tr) = self.tracer.as_deref_mut() {
+                tr.mark(now, q.qid, MarkKind::Capture, pipeline, 0);
+                tr.mark(now, q.qid, MarkKind::Lost, pipeline, 0);
+            }
             self.lose_to_fault(1);
             self.push(now + 1000.0 / fps, Ev::Frame { pipeline });
             return;
@@ -1340,11 +1586,19 @@ impl SimPartition {
             self.groups[pipeline][0].cfg.device;
         let arrive_t = self.transfer_time(src, det_dev, det_bytes);
         if arrive_t.is_finite() {
+            if let Some(tr) = self.tracer.as_deref_mut() {
+                tr.mark(now, q.qid, MarkKind::Capture, pipeline, 0);
+                tr.span(now, q.qid, SpanKind::Transfer, Phase::Begin, pipeline, 0);
+            }
             self.push(arrive_t, Ev::Arrive { pipeline, model: 0, query: q });
         } else {
             self.metrics.record(Outcome::Dropped, 0.0);
             if let Some(c) = self.checker.as_deref_mut() {
                 c.on_drop(1);
+            }
+            if let Some(tr) = self.tracer.as_deref_mut() {
+                tr.mark(now, q.qid, MarkKind::Capture, pipeline, 0);
+                tr.mark(now, q.qid, MarkKind::Drop, pipeline, 0);
             }
         }
         // Next frame.
@@ -1355,7 +1609,7 @@ impl SimPartition {
     /// sources, control-plane clocks, the fault schedule). Called exactly
     /// once, before the first `tick`.
     pub fn start(&mut self) {
-        self.reschedule();
+        self.reschedule(PlanTrigger::Initial);
         for p in 0..self.sc.pipelines.len() {
             // Stagger sources a little so frames don't align pathologically.
             let jitter = (p as f64) * 7.0;
@@ -1415,7 +1669,7 @@ impl SimPartition {
                     // A controller outage skips the round's body but keeps
                     // the clock re-arming: the data plane runs open-loop.
                     if self.outage_depth == 0 {
-                        self.reschedule();
+                        self.reschedule(PlanTrigger::Periodic);
                     }
                     self.push(self.now + SCHEDULING_PERIOD_MS, Ev::Reschedule);
                 }
@@ -1482,6 +1736,18 @@ impl SimPartition {
             if let Some(c) = self.checker.as_deref_mut() {
                 c.finish(in_flight, &self.metrics);
             }
+        }
+        // Balance the trace: queries still in flight at the horizon get
+        // their open span closed at the cut (export-side bookkeeping; the
+        // ring keeps the raw record).
+        if let Some(tr) = self.tracer.as_deref_mut() {
+            tr.close_open_spans(horizon);
+        }
+        // Flight recorder: a violated run dumps its last ring of trace
+        // events with the repro string (stderr — diagnostics, never part
+        // of any digested output).
+        if let Some(dump) = self.flight_dump() {
+            eprintln!("{dump}");
         }
         if std::env::var("OCTOPINF_SIM_DEBUG").is_ok() {
             let keys: Vec<(usize, usize)> = (0..self.groups.len())
@@ -1612,7 +1878,7 @@ mod tests {
         // every 10 s tick. Both paths now share `AutoScaler::decide`.
         let sc = Scenario::build(smoke_cfg());
         let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
-        sim.reschedule();
+        sim.reschedule(PlanTrigger::Initial);
         sim.now = 60_000.0;
         saturate(&mut sim, sim.now);
         let base = sim.groups[0][0].cfg.instances;
@@ -1644,12 +1910,17 @@ mod tests {
     fn plan_diff_migration_keeps_unchanged_groups_live() {
         let sc = Scenario::build(smoke_cfg());
         let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
-        sim.reschedule();
+        sim.reschedule(PlanTrigger::Initial);
         let epoch0 = sim.groups[0][0].epoch;
         sim.groups[0][0].queue.push_back(Query {
             created_ms: 0.0,
             deadline_ms: 1e9,
             objects: 1,
+            qid: 0,
+            mark_ms: 0.0,
+            transfer_ms: 0.0,
+            queue_ms: 0.0,
+            exec_ms: 0.0,
         });
         // Reinstalling the identical plan is a pure no-op migration: no
         // epoch bumps (portion clocks keep ticking), queues intact.
@@ -1691,7 +1962,7 @@ mod tests {
         // same instance run overlapping batches right after a migration.
         let sc = Scenario::build(smoke_cfg());
         let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
-        sim.reschedule();
+        sim.reschedule(PlanTrigger::Initial);
         assert!(!sim.groups[0][0].busy.is_empty());
         sim.groups[0][0].busy[0] = true; // simulate an in-flight batch
         let mut plan2 = sim.plan.clone();
@@ -1720,7 +1991,7 @@ mod tests {
         // assignment unchanged must not revert that surge capacity.
         let sc = Scenario::build(smoke_cfg());
         let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
-        sim.reschedule();
+        sim.reschedule(PlanTrigger::Initial);
         sim.now = 60_000.0;
         saturate(&mut sim, sim.now);
         let base = sim.groups[0][0].cfg.instances;
@@ -1809,5 +2080,63 @@ mod tests {
         assert_eq!(a.late, b.late);
         assert_eq!(a.dropped, b.dropped);
         assert_eq!(a.timeline, b.timeline);
+    }
+
+    #[test]
+    fn trace_is_balanced_and_attribution_reconciles() {
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
+        sim.enable_invariants();
+        sim.enable_tracing();
+        let m = sim.run();
+        let events = sim.take_trace();
+        assert!(!events.is_empty(), "traced run produced no events");
+        crate::obs::check_balanced(&events).unwrap();
+        // Plan events carry provenance: at least the initial full round.
+        assert!(events.iter().any(|e| matches!(
+            e,
+            TraceEvent::Plan { trigger: PlanTrigger::Initial, .. }
+        )));
+        // The invariant engine verified every sink's fold bit-for-bit and
+        // reconciled the sketches against the completion counters.
+        let r = sim.take_invariant_report().unwrap();
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(m.attrib.transfer.count(), m.completed());
+        assert!(m.attrib.transfer.mean() > 0.0, "no transfer time attributed");
+    }
+
+    #[test]
+    fn tracing_never_perturbs_the_run() {
+        // The observability contract: hooks observe, never steer. A traced
+        // run and a plain run of the same scenario are metric-identical.
+        let sc = Scenario::build(smoke_cfg());
+        let mut plain = SimPartition::new(&sc, SchedulerKind::OctopInf);
+        let a = plain.run();
+        let mut traced = SimPartition::new(&sc, SchedulerKind::OctopInf);
+        traced.enable_tracing();
+        let b = traced.run();
+        assert_eq!(a.digest(), b.digest(), "tracing changed the metrics digest");
+    }
+
+    #[test]
+    fn violations_dump_the_flight_recorder_with_a_repro() {
+        let sc = Scenario::build(smoke_cfg());
+        let mut sim = SimPartition::new(&sc, SchedulerKind::OctopInf);
+        sim.enable_invariants();
+        sim.run();
+        assert!(sim.flight_dump().is_none(), "clean run must not dump");
+        // Poison the checker the way a broken engine would (a batch wider
+        // than its configured size), then ask for the postmortem.
+        if let Some(c) = sim.checker.as_deref_mut() {
+            c.on_batch(99, 8);
+        }
+        let dump = sim.flight_dump().expect("violation must dump the ring");
+        assert!(dump.contains("fuzz:v1:seed="), "{dump}");
+        let sketched = sim.metrics.attrib.transfer.count();
+        assert!(sketched > 0, "run attributed nothing");
+        // An exact repro provided by the harness wins over the fallback.
+        sim.set_repro("fuzz:v1:seed=7:faults=2".into());
+        let dump = sim.flight_dump().unwrap();
+        assert!(dump.contains("fuzz:v1:seed=7:faults=2"), "{dump}");
     }
 }

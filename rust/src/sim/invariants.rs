@@ -38,6 +38,12 @@
 //!    latencies are finite and non-negative, and the engine-side counts
 //!    reconcile exactly with [`RunMetrics`] (completions, drops, and the
 //!    latency-sketch population).
+//! 8. **Latency attribution** — each completed query's
+//!    transfer/queue/exec decomposition folds back to its end-to-end
+//!    latency **bit-for-bit** (`obs::attrib::fold`), components are
+//!    non-negative, and at the end of the run the attribution sketches
+//!    hold exactly one sample per completed unit with the dominant-cause
+//!    miss buckets summing to the `late` counter.
 
 use crate::cluster::Cluster;
 use crate::coordinator::{GpuId, Plan};
@@ -69,6 +75,7 @@ pub struct InvariantChecker {
     in_flight: u64,
     plans: u64,
     migrations: u64,
+    attrib_units: u64,
     suppressed: u64,
     violations: Vec<String>,
 }
@@ -186,6 +193,28 @@ impl InvariantChecker {
         } else if on_time != (latency <= slo) {
             self.violation(format!(
                 "SLO bookkeeping: latency {latency} vs slo {slo} marked on_time={on_time}"
+            ));
+        }
+    }
+
+    /// One completed query's latency decomposition, `n` units (objects).
+    /// The canonical fold of the measured components must reproduce the
+    /// end-to-end latency bit-for-bit — `obs::close_exact` retires the
+    /// last-ulp rounding residue, so any surviving mismatch means a
+    /// lifecycle segment was skipped or double-counted.
+    #[inline]
+    pub fn on_attrib(&mut self, transfer: Ms, queue: Ms, exec: Ms, latency: Ms, n: u64) {
+        self.attrib_units += n;
+        if crate::obs::attrib::fold(transfer, queue, exec).to_bits() != latency.to_bits() {
+            self.violation(format!(
+                "attribution fold ({transfer} + {queue}) + {exec} != \
+                 latency {latency} bit-for-bit"
+            ));
+        }
+        if !(transfer >= 0.0 && queue >= 0.0 && exec >= 0.0) {
+            self.violation(format!(
+                "negative attribution component: transfer {transfer} \
+                 queue {queue} exec {exec}"
             ));
         }
     }
@@ -414,6 +443,45 @@ impl InvariantChecker {
                 metrics.filtered, self.filtered_units
             ));
         }
+        // Attribution reconciliation — only once the engine actually
+        // attributed completions (the hook is engine-driven; a bare
+        // checker unit test never arms it).
+        if self.attrib_units > 0 {
+            if self.attrib_units != self.completed_objects {
+                self.violation(format!(
+                    "attribution covered {} units for {} completed objects",
+                    self.attrib_units, self.completed_objects
+                ));
+            }
+            let a = &metrics.attrib;
+            for (name, count) in [
+                ("transfer", a.transfer.count()),
+                ("queue", a.queue.count()),
+                ("exec", a.exec.count()),
+            ] {
+                if count != self.attrib_units {
+                    self.violation(format!(
+                        "attribution {name} sketch holds {count} samples \
+                         for {} attributed units",
+                        self.attrib_units
+                    ));
+                }
+            }
+            if a.misses() != metrics.late {
+                self.violation(format!(
+                    "dominant-cause miss buckets sum to {} for {} late units",
+                    a.misses(),
+                    metrics.late
+                ));
+            }
+        }
+    }
+
+    /// Whether any violation has been recorded so far — the engine's
+    /// flight-recorder trigger (dump the ring the moment a run turns
+    /// from clean to violating).
+    pub fn has_violations(&self) -> bool {
+        !self.violations.is_empty() || self.suppressed > 0
     }
 
     /// Consume the checker into its report.
@@ -692,6 +760,61 @@ mod tests {
         let r = c.into_report();
         assert_eq!(r.violations.len(), 2);
         assert!(r.violations[0].contains("migration"), "{}", r.violations[0]);
+    }
+
+    #[test]
+    fn attribution_fold_must_be_bit_exact() {
+        let mut c = InvariantChecker::new();
+        // A close_exact-retired decomposition folds clean.
+        let (tr, qu, raw_ex) = (3.0_f64, 7.5_f64, 19.25_f64);
+        let lat = (tr + qu) + raw_ex;
+        c.on_attrib(tr, qu, crate::obs::close_exact(lat, tr, qu, raw_ex), lat, 1);
+        assert!(!c.has_violations());
+        // A lost segment (15 ms unaccounted) trips the fold check.
+        c.on_attrib(10.0, 0.0, 30.0, 55.0, 1);
+        assert!(c.has_violations());
+        // A negative component trips even when the fold balances.
+        let mut c2 = InvariantChecker::new();
+        c2.on_attrib(-1.0, 2.0, 54.0, 55.0, 1);
+        assert!(c2.has_violations());
+    }
+
+    #[test]
+    fn attribution_reconciliation_flags_missing_metrics() {
+        let mut c = InvariantChecker::new();
+        c.on_frame(1);
+        c.on_sink(10.0, 1, true, 200.0);
+        c.on_attrib(1.0, 2.0, 7.0, 10.0, 1);
+        let mut m = RunMetrics::new(1000.0);
+        m.record(crate::metrics::Outcome::OnTime, 10.0);
+        // Engine attributed the completion but RunMetrics never heard.
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(!r.ok());
+        assert!(
+            r.violations.iter().any(|v| v.contains("attribution")),
+            "{:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn attribution_reconciles_cleanly_end_to_end() {
+        let mut c = InvariantChecker::new();
+        c.on_frame(1);
+        c.on_frame(1);
+        c.on_sink(10.0, 1, true, 200.0);
+        c.on_sink(250.0, 1, false, 200.0);
+        c.on_attrib(1.0, 2.0, 7.0, (1.0 + 2.0) + 7.0, 1);
+        c.on_attrib(50.0, 150.0, 50.0, (50.0 + 150.0) + 50.0, 1);
+        let mut m = RunMetrics::new(1000.0);
+        m.record(crate::metrics::Outcome::OnTime, 10.0);
+        m.record(crate::metrics::Outcome::Late, 250.0);
+        m.record_attrib(1.0, 2.0, 7.0, 1, false);
+        m.record_attrib(50.0, 150.0, 50.0, 1, true);
+        c.finish(0, &m);
+        let r = c.into_report();
+        assert!(r.ok(), "{:?}", r.violations);
     }
 
     #[test]

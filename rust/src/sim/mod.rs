@@ -41,6 +41,29 @@
 //! invariant engine stays armed across barriers (`on_barrier` asserts no
 //! partition ran past the driver's clock; conservation censuses span the
 //! wheel, including events beyond the current epoch).
+//!
+//! # Observability contract
+//!
+//! The tracing subsystem ([`crate::obs`]) rides the same hook pattern as
+//! the invariant engine: an `Option`-flagged sink the engine writes into
+//! at lifecycle boundaries. **Trace hooks may never influence
+//! scheduling** — they draw no RNG, push no simulator events, allocate
+//! no qids conditionally (ids are a bare counter, ticking identically
+//! with tracing on or off), and return nothing the engine branches on.
+//! Consequences, all asserted by tests:
+//!
+//! * metrics/digests with tracing **off** are byte-identical to the
+//!   pre-tracing engine, and tracing **on** never changes them;
+//! * the exported trace is a pure function of the scenario config —
+//!   byte-identical at any `--sim-jobs` (per-partition logs merge in
+//!   partition order, timestamps are sim-clock);
+//! * SLO-miss attribution (transfer/queue/exec per query) is always on —
+//!   plain `f64` accumulation on the query struct — and each completed
+//!   query's components sum to its end-to-end latency **bit-for-bit**
+//!   ([`crate::obs::close_exact`]; invariant #8 enforces it);
+//! * the flight recorder (ring of recent trace events, armed with the
+//!   invariant engine) dumps with a repro string on violation without
+//!   touching any digested output.
 
 mod driver;
 mod engine;
@@ -61,6 +84,7 @@ pub use scenario::{
 
 use crate::metrics::RunMetrics;
 use crate::coordinator::SchedulerKind;
+use crate::obs::TraceEvent;
 use crate::Ms;
 
 /// Narrow advancement surface of the component layer: the driver steps
@@ -125,4 +149,22 @@ pub fn run_checked_with(
         .take_invariant_report()
         .expect("invariants were enabled before run");
     (metrics, report)
+}
+
+/// Run one scheduler with the full tracer armed; returns the metrics and
+/// the per-partition trace logs in partition order (`--trace` entry).
+/// Tracing never perturbs the run: the metrics are byte-identical to
+/// [`run_with`], and the trace itself is byte-identical at any
+/// `sim_jobs` (see the observability contract above).
+pub fn run_traced_with(
+    scenario: &Scenario,
+    kind: SchedulerKind,
+    sim_jobs: usize,
+) -> (RunMetrics, Vec<Vec<TraceEvent>>) {
+    let mut sim = Simulator::new(scenario, kind);
+    sim.set_sim_jobs(sim_jobs);
+    sim.enable_tracing();
+    let metrics = sim.run();
+    let trace = sim.take_trace();
+    (metrics, trace)
 }

@@ -419,6 +419,20 @@ impl Histogram {
         &self.buckets
     }
 
+    /// Samples above the bucketed range. They are counted (in
+    /// [`total`](Self::total), [`digest`](Self::digest), merges) but land
+    /// in no bucket — callers rendering the distribution must surface
+    /// this, or seconds-scale latencies silently vanish from a histogram
+    /// whose range ends at 1 s.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Samples below `lo` (counterpart of [`overflow`](Self::overflow)).
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
     pub fn bucket_edges(&self, i: usize) -> (f64, f64) {
         (self.lo + i as f64 * self.width, self.lo + (i + 1) as f64 * self.width)
     }
@@ -452,14 +466,26 @@ impl Histogram {
         h
     }
 
-    /// Render a compact ASCII sparkline of bucket densities.
+    /// Render a compact ASCII sparkline of bucket densities. Out-of-range
+    /// mass is appended explicitly — a 5 s latency in a 1 s-wide
+    /// histogram must be visible, not folded away unreported.
     pub fn sparkline(&self) -> String {
+        use std::fmt::Write;
         const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
         let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
-        self.buckets
+        let mut s: String = self
+            .buckets
             .iter()
             .map(|&b| GLYPHS[(b * 7 / max) as usize])
-            .collect()
+            .collect();
+        if self.underflow > 0 {
+            let _ = write!(s, " (+{} < {})", self.underflow, self.lo);
+        }
+        if self.overflow > 0 {
+            let hi = self.lo + self.width * self.buckets.len() as f64;
+            let _ = write!(s, " (+{} > {hi})", self.overflow);
+        }
+        s
     }
 }
 
@@ -696,6 +722,28 @@ mod tests {
     fn histogram_merge_rejects_mismatched_shapes() {
         let mut a = Histogram::new(0.0, 100.0, 20);
         a.merge(&Histogram::new(0.0, 100.0, 10));
+    }
+
+    #[test]
+    fn out_of_range_mass_is_reported_not_clipped() {
+        // Regression: the run-metrics latency histogram spans [0, 1000) ms;
+        // a 5 s latency must stay visible through the accessors and the
+        // rendered sparkline, not fold into the top bucket unreported.
+        let mut h = Histogram::new(0.0, 1000.0, 50);
+        h.push(5000.0);
+        h.push_n(250.0, 4);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.underflow(), 0);
+        assert_eq!(h.total(), 5, "overflow counts toward the total");
+        assert_eq!(h.buckets().iter().sum::<u64>(), 4, "but lands in no bucket");
+        let line = h.sparkline();
+        assert!(line.contains("(+1 > 1000)"), "{line}");
+        h.push(-3.0);
+        assert!(h.sparkline().contains("(+1 < 0)"), "{}", h.sparkline());
+        // In-range-only histograms render with no suffix.
+        let mut clean = Histogram::new(0.0, 10.0, 5);
+        clean.push(1.0);
+        assert!(!clean.sparkline().contains('('));
     }
 
     #[test]

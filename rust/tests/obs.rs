@@ -1,0 +1,159 @@
+//! Observability-layer acceptance: the exported trace is a pure function
+//! of the scenario (byte-identical at any `--sim-jobs`), every query lane
+//! balances its Begin/End spans, SLO-miss attribution sums to the
+//! reported latency bit-for-bit under the invariant engine, arming the
+//! tracer never perturbs a run, and the serve report's Prometheus
+//! exposition round-trips through the in-tree parser.
+
+use std::collections::HashMap;
+
+use octopinf::coordinator::SchedulerKind;
+use octopinf::experiments::fuzz::traced_replay;
+use octopinf::experiments::{run_front_harness, HarnessCfg, TenantLoad};
+use octopinf::obs::{
+    check_balanced, chrome_trace, promtext, validate_json, TraceEvent,
+};
+use octopinf::serving::{FrontDoorCfg, ModelServeCfg};
+use octopinf::sim::{preset, run_traced_with, run_with, FuzzSpec, Scenario};
+
+/// The 2-cluster fuzz scenario the byte-identity tests replay.
+fn two_cluster_spec() -> FuzzSpec {
+    FuzzSpec::from_repro("fuzz:v1:seed=11:clusters=2")
+        .expect("repro string parses")
+}
+
+/// The exported Chrome-trace JSON is byte-identical at any `--sim-jobs`:
+/// per-partition logs merge in partition order and timestamps are
+/// sim-clock, so the worker count can leave no fingerprint.
+#[test]
+fn trace_bytes_identical_across_sim_jobs() {
+    let spec = two_cluster_spec();
+    let (m1, r1, parts1) = traced_replay(&spec, 1);
+    let (m4, r4, parts4) = traced_replay(&spec, 4);
+    assert!(r1.ok(), "violations:\n{}", r1.violations.join("\n"));
+    assert!(r4.ok(), "violations:\n{}", r4.violations.join("\n"));
+    assert_eq!(m1.digest(), m4.digest(), "--sim-jobs changed the metrics");
+    assert_eq!(parts1.len(), 2, "two clusters, two partition logs");
+    let n: usize = parts1.iter().map(Vec::len).sum();
+    assert!(n > 0, "traced replay recorded no events");
+    let json1 = chrome_trace(&parts1);
+    let json4 = chrome_trace(&parts4);
+    assert_eq!(json1, json4, "--sim-jobs changed the exported trace bytes");
+}
+
+/// Every query lane's Begin/End spans balance in every partition, the
+/// export parses as JSON, and the control lane carries the planner
+/// rounds (at least the initial plan per partition).
+#[test]
+fn trace_spans_balance_and_export_validates() {
+    let spec = two_cluster_spec();
+    let (_m, report, parts) = traced_replay(&spec, 2);
+    assert!(report.ok(), "violations:\n{}", report.violations.join("\n"));
+    for (k, events) in parts.iter().enumerate() {
+        check_balanced(events)
+            .unwrap_or_else(|e| panic!("partition {k}: unbalanced spans: {e}"));
+        let plans = events
+            .iter()
+            .filter(|ev| matches!(ev, TraceEvent::Plan { .. }))
+            .count();
+        assert!(plans >= 1, "partition {k} traced no planner rounds");
+    }
+    let json = chrome_trace(&parts);
+    validate_json(&json).expect("exporter emitted invalid JSON");
+    assert!(json.contains("\"cat\":\"query\""), "no query spans exported");
+    assert!(json.contains("\"trigger\":\"initial\""), "no initial plan");
+}
+
+/// With the invariant engine armed (invariant #8), every completed
+/// query's transfer/queue/exec components fold to its end-to-end latency
+/// bit-for-bit, the attribution sketches cover exactly the completed
+/// units, and the dominant-cause miss buckets tile `late` exactly.
+#[test]
+fn attribution_components_sum_bit_for_bit() {
+    for repro in ["fuzz:v1:seed=11:clusters=2", "fuzz:v1:seed=77:faults=2"] {
+        let spec = FuzzSpec::from_repro(repro).expect("repro parses");
+        let (m, report, _parts) = traced_replay(&spec, 1);
+        assert!(
+            report.ok(),
+            "{repro}: violations:\n{}",
+            report.violations.join("\n")
+        );
+        assert!(m.completed() > 0, "{repro}: replay completed nothing");
+        assert_eq!(
+            m.attrib.transfer.count(),
+            m.completed(),
+            "{repro}: attribution misses completed units"
+        );
+        assert_eq!(
+            m.attrib.misses(),
+            m.late,
+            "{repro}: dominant-cause buckets do not tile the misses"
+        );
+    }
+}
+
+/// Arming the full tracer changes nothing: metrics digests (and the
+/// timeline) with tracing on equal the plain run byte-for-byte.
+#[test]
+fn tracing_never_perturbs_the_digest() {
+    let mut cfg = preset("smoke").unwrap();
+    cfg.clusters = 2;
+    let sc = Scenario::build(cfg);
+    let plain = run_with(&sc, SchedulerKind::OctopInf, 1);
+    let (traced, parts) = run_traced_with(&sc, SchedulerKind::OctopInf, 1);
+    assert!(parts.iter().map(Vec::len).sum::<usize>() > 0);
+    assert_eq!(traced.digest(), plain.digest(), "tracing changed the run");
+    assert_eq!(traced.timeline, plain.timeline);
+}
+
+/// The serve report's Prometheus text exposition round-trips: parsed
+/// samples match the report's counters and re-rendering is
+/// byte-identical (the `--metrics-out` contract).
+#[test]
+fn serve_report_prometheus_round_trip() {
+    let hc = {
+        let mut cfgs = HashMap::new();
+        cfgs.insert("det".to_string(), ModelServeCfg::new(4, 5.0));
+        HarnessCfg {
+            cfgs,
+            front: FrontDoorCfg::default(),
+            duration_ms: 1_000.0,
+            service_ms: 5.0,
+        }
+    };
+    let loads = vec![TenantLoad {
+        tenant: 1,
+        streams: 2,
+        fps: 30.0,
+        model: "det".to_string(),
+        slo_ms: 200.0,
+        start_ms: 0.0,
+        stop_ms: 1_000.0,
+        static_scene: false,
+    }];
+    let report = run_front_harness(&hc, &loads, 0xB0B);
+    assert!(report.submitted > 0 && report.served > 0);
+    let text = promtext::render_serve_report(&report);
+    let samples = promtext::parse(&text).expect("exposition parses");
+    let get = |name: &str, key: &str, val: &str| -> f64 {
+        samples
+            .iter()
+            .find(|s| s.name == name && s.label(key) == Some(val))
+            .unwrap_or_else(|| panic!("missing {name}{{{key}={val}}}"))
+            .value
+    };
+    assert_eq!(
+        get("octopinf_requests_total", "outcome", "submitted"),
+        report.submitted as f64
+    );
+    assert_eq!(
+        get("octopinf_requests_total", "outcome", "served"),
+        report.served as f64
+    );
+    assert_eq!(
+        get("octopinf_tenant_requests_total", "tenant", "1"),
+        report.submitted as f64,
+        "single-tenant load: the tenant lane carries every submission"
+    );
+    assert_eq!(text, promtext::render_serve_report(&report));
+}
